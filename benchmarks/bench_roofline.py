@@ -1,0 +1,44 @@
+"""Deliverable (g) — roofline table from the dry-run artifacts.
+
+Reads out/dryrun/*.json (produced by ``repro.launch.dryrun``) and emits
+one CSV row per (arch × shape × mesh) with the three roofline terms, the
+dominant bottleneck, and MODEL_FLOPS/HLO_FLOPs."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+OUT_DIRS = ("out/dryrun", "out/perf", "out/dryrun_opt")
+
+
+def main() -> None:
+    files = []
+    for d in OUT_DIRS:
+        files += sorted(glob.glob(os.path.join(d, "*.json")))
+    if not files:
+        emit("roofline/NO_DRYRUN_ARTIFACTS_RUN_dryrun_first", 0.0, "")
+        return
+    for f in files:
+        r = json.load(open(f))
+        if r.get("skipped"):
+            continue
+        rf = r["roofline"]
+        bound_s = max(rf["t_compute_s"], rf["t_memory_s"],
+                      rf["t_collective_s"])
+        emit(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}/{r.get('tag','baseline')}",
+            bound_s * 1e6,
+            f"dom={rf['dominant']};Tc={rf['t_compute_s']:.3e};"
+            f"Tm={rf['t_memory_s']:.3e};Tx={rf['t_collective_s']:.3e};"
+            f"mfu_bound={rf['roofline_mfu_bound']:.4f};"
+            f"useful={rf['useful_flops_fraction']:.3f};"
+            f"mem_gib={r['memory']['peak_bytes_est']/2**30:.2f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Paper Figures 2–6(d) — *speedup* (vs best serial reference, not
+scaling): time for the target method with p threads / best serial time.
+Shrinking disabled for fairness (paper §5.3)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, get_dataset, timeit
+from repro.core.dcd import DcdState, dcd_epoch
+from repro.core.duals import Hinge
+from repro.core.passcode import passcode_epoch
+from repro.core.asyscd import _asyscd_epoch
+
+
+def main() -> None:
+    ds = get_dataset("rcv1")
+    X = ds.dense_train()
+    loss = Hinge(C=ds.recipe.C)
+    n, d = X.shape
+    sq = jnp.sum(X * X, axis=1)
+    key = jax.random.PRNGKey(0)
+    perm = jax.random.permutation(key, n)
+    state = DcdState(jnp.zeros(n), jnp.zeros(d))
+    t_serial = timeit(lambda: dcd_epoch(X, sq, state, perm, loss))
+
+    alpha0, w0 = jnp.zeros(n), jnp.zeros(d)
+    for threads in (2, 4, 10):
+        for model in ("atomic", "wild"):
+            fn = functools.partial(
+                passcode_epoch, X, sq, alpha0, w0, key, loss,
+                n_threads=threads, memory_model=model,
+            )
+            t = timeit(fn)
+            emit(f"fig_speedup/passcode_{model}/threads={threads}",
+                 t * 1e6, f"speedup={t_serial / t:.2f}x")
+        # AsySCD: no w maintenance → O(nnz) gradient recompute per round.
+        # A full epoch is minutes on 1 CPU core (which IS the paper's
+        # point); we time 50 rounds and extrapolate linearly.
+        rounds = n // threads
+        sample = 50
+        ridx = perm[: sample * threads].reshape(sample, threads)
+        fn = functools.partial(_asyscd_epoch, X, sq, alpha0, ridx, loss,
+                               threads, 0.5)
+        t = timeit(fn) * (rounds / sample)
+        emit(f"fig_speedup/asyscd/threads={threads}", t * 1e6,
+             f"speedup={t_serial / t:.3f}x;extrapolated_from=50rounds")
+
+
+if __name__ == "__main__":
+    main()

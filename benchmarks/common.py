@@ -1,0 +1,45 @@
+"""Shared benchmark utilities: timing, dataset cache, CSV emission."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+_DATASETS = {}
+
+
+def get_dataset(name: str):
+    if name not in _DATASETS:
+        from repro.data.synthetic import DATASET_RECIPES, DatasetRecipe, \
+            make_dataset
+
+        # benchmark-scale versions (1-core CPU budget)
+        scaled = {
+            "news20": DatasetRecipe("news20", 1_000, 250, 4_096, 60, 2.0),
+            "covtype": DatasetRecipe("covtype", 4_000, 500, 54, 54, 0.0625,
+                                     label_noise=0.15, margin=0.1),
+            "rcv1": DatasetRecipe("rcv1", 4_000, 500, 2_048, 73, 1.0),
+            "webspam": DatasetRecipe("webspam", 2_000, 500, 4_096, 200, 1.0),
+        }
+        _DATASETS[name] = make_dataset(name, recipe=scaled.get(name))
+    return _DATASETS[name]
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3):
+    """Median wall time in seconds; blocks on jax outputs."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")

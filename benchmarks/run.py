@@ -1,0 +1,39 @@
+"""Benchmark driver — one section per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_accuracy,
+        bench_convergence,
+        bench_kernel,
+        bench_roofline,
+        bench_scaling,
+        bench_speedup,
+    )
+
+    sections = [
+        ("Table 1 (scaling)", bench_scaling),
+        ("Table 2 (w_hat vs w_bar accuracy)", bench_accuracy),
+        ("Fig 4-6a (convergence)", bench_convergence),
+        ("Fig 2-6d (speedup)", bench_speedup),
+        ("DCD Pallas kernel", bench_kernel),
+        ("Roofline (dry-run artifacts)", bench_roofline),
+    ]
+    print("name,us_per_call,derived")
+    for title, mod in sections:
+        print(f"# --- {title} ---", file=sys.stderr)
+        t0 = time.time()
+        mod.main()
+        print(f"# {title}: {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""PASSCoDe inside the LM stack — the production use of the paper's
+technique (DESIGN.md §4): train a linear probe / lightweight reward head
+on FROZEN LM features with distributed PASSCoDe-Atomic.
+
+Pipeline: tiny LM → final-layer features for labeled sequences → ℓ2-SVM
+on those features solved by PASSCoDe (shard_map over the data axis).
+
+    PYTHONPATH=src python examples/linear_probe_lm.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import (
+    Hinge,
+    dcd_solve,
+    predict_accuracy,
+    sharded_passcode_solve,
+)
+from repro.models import forward_train, init_params
+from repro.models.layers import rms_norm
+
+
+def lm_features(cfg, params, tokens):
+    """Mean-pooled final-layer hidden states (frozen backbone)."""
+    # run the backbone by reusing forward_train up to the norm: cheap way —
+    # take logits pre-head is heavy; instead embed + layers via the public
+    # forward and grab the hidden through a tiny shim: here we use the
+    # tied-embedding trick: h ≈ logits @ embed / |V| is lossy, so instead
+    # re-run the stack manually for the dense family.
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1])[None],
+                                 tokens.shape)
+    from repro.models.transformer import _attn_block, _mlp_block, NO_RULES
+
+    def layer(x, lp):
+        x, _ = _attn_block(lp["attn"], x, positions, cfg, NO_RULES)
+        x = _mlp_block(lp["mlp"], x, cfg, NO_RULES)
+        return x, ()
+
+    x, _ = jax.lax.scan(layer, x, {"attn": params["attn"],
+                                   "mlp": params["mlp"]})
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return jnp.mean(x, axis=1)  # (B, D) pooled
+
+
+def main():
+    cfg = get_smoke_config("mistral-nemo-12b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    # labeled "documents": class decides the token distribution (class +1
+    # draws from the low-vocab half, −1 from the high half) — a cleanly
+    # linearly-decodable signal in pooled features.
+    n, seq = 512, 48
+    key = jax.random.PRNGKey(1)
+    ky, kt = jax.random.split(key)
+    y = jnp.where(jax.random.bernoulli(ky, 0.5, (n,)), 1.0, -1.0)
+    half = cfg.vocab_size // 2
+    lo = jax.random.randint(kt, (n, seq), 0, half)
+    tokens = jnp.where((y > 0)[:, None], lo, lo + half)
+
+    feats = np.array(lm_features(cfg, params, tokens))
+    feats /= np.maximum(np.linalg.norm(feats, axis=1, keepdims=True), 1e-6)
+    X = jnp.asarray(feats * np.asarray(y)[:, None])  # label-folded rows
+
+    X_train, X_test = X[:384], X[384:]
+    loss = Hinge(C=1.0)
+
+    serial = dcd_solve(X_train, loss, epochs=15)
+    acc_serial = float(predict_accuracy(serial.w, X_test))
+
+    dist = sharded_passcode_solve(X_train, loss, epochs=15, block_size=16)
+    acc_dist = float(predict_accuracy(dist.w_hat, X_test))
+
+    print(f"linear probe on frozen {cfg.name} features "
+          f"({X_train.shape[0]} train / {X_test.shape[0]} test, "
+          f"d={X.shape[1]})")
+    print(f"  serial DCD          test_acc={acc_serial:.3f}")
+    print(f"  PASSCoDe (sharded)  test_acc={acc_dist:.3f} "
+          f"gap={float(dist.gaps[-1]):.4f}")
+    assert acc_dist > 0.7, acc_dist
+
+
+if __name__ == "__main__":
+    main()

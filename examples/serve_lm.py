@@ -1,0 +1,72 @@
+"""Serve a small LM with batched requests: prefill once, decode greedily,
+continuous-batching style slot reuse.
+
+    PYTHONPATH=src python examples/serve_lm.py --requests 6 --gen 24
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import init_cache, init_params, prefill
+from repro.models.transformer import cache_max_len
+from repro.serve.step import make_decode_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mistral-nemo-12b",
+                    help="smoke config family to serve")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, S = args.requests, args.prompt_len
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                 cfg.vocab_size)
+    batch = {"tokens": prompts}
+    if cfg.mrope_sections:
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(S)[None, None], (3, B, S))
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.enc_len, cfg.d_model)) * 0.1
+
+    cache = init_cache(cfg, B, cache_max_len(S + args.gen),
+                       dtype=jnp.float32)
+    t0 = time.time()
+    logits, cache = prefill(cfg, params, batch, cache)
+    t_prefill = time.time() - t0
+    decode = jax.jit(make_decode_step(cfg))
+    tok = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1).astype(
+        jnp.int32)
+
+    generated = [np.asarray(tok)]
+    t0 = time.time()
+    for _ in range(args.gen - 1):
+        step_in = {"tokens": tok[:, None]}
+        if cfg.mrope_sections:
+            step_in["positions"] = jnp.full((3, B, 1), int(cache.length),
+                                            jnp.int32)
+        tok, logits, cache = decode(params, step_in, cache)
+        generated.append(np.asarray(tok))
+    t_decode = time.time() - t0
+    out = np.stack(generated, axis=1)  # (B, gen)
+    print(f"arch={cfg.name}: {B} requests, prompt={S}, generated "
+          f"{out.shape[1]} tokens each")
+    print(f"prefill {t_prefill*1e3:.0f} ms; decode "
+          f"{t_decode/max(args.gen-1,1)*1e3:.1f} ms/token/batch")
+    for b in range(min(B, 3)):
+        print(f"  req{b}: {out[b][:12].tolist()} ...")
+    assert out.min() >= 0 and out.max() < cfg.vocab_size
+
+
+if __name__ == "__main__":
+    main()

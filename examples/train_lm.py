@@ -1,0 +1,74 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with
+the full production stack — fault-tolerant loop, checkpoints, WSD
+schedule, step-indexed data.
+
+Default config is a 12-layer/768-wide minicpm-family model (~100M params)
+shrunk further with --small for CI-speed runs.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+    PYTHONPATH=src python examples/train_lm.py --small --steps 40
+"""
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.data.lm_data import MarkovCorpus, make_lm_batch
+from repro.optim.schedules import make_schedule
+from repro.train.loop import LoopConfig, run_training
+from repro.train.step import init_train_state, make_train_step
+
+LM_100M = ModelConfig(
+    name="lm-100m", family="dense", n_layers=12, d_model=768, n_heads=12,
+    n_kv_heads=4, d_ff=2048, vocab_size=8192, head_dim=64,
+    tie_embeddings=True,
+)
+
+LM_SMALL = dataclasses.replace(
+    LM_100M, name="lm-small", n_layers=4, d_model=256, n_heads=4,
+    n_kv_heads=2, d_ff=512, vocab_size=2048)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--small", action="store_true")
+    ap.add_argument("--ckpt-dir", default="out/lm_ckpt")
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+
+    cfg = LM_SMALL if args.small else LM_100M
+    n_params = cfg.n_params()
+    print(f"model={cfg.name} params={n_params/1e6:.1f}M "
+          f"steps={args.steps} batch={args.batch}x{args.seq}")
+
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    schedule = make_schedule("wsd", peak_lr=args.lr,
+                             total_steps=args.steps, warmup_steps=20)
+    step_fn = jax.jit(
+        make_train_step(cfg, schedule=schedule, remat=False),
+        donate_argnums=0)
+    corpus = MarkovCorpus(cfg.vocab_size, seed=0)
+
+    def batch_fn(step):
+        return make_lm_batch(corpus, step, batch=args.batch, seq=args.seq)
+
+    state, report = run_training(
+        state, step_fn, batch_fn,
+        LoopConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                   ckpt_every=max(args.steps // 5, 10), log_every=10),
+    )
+    first = sum(report.losses[:10]) / max(len(report.losses[:10]), 1)
+    last = sum(report.losses[-10:]) / max(len(report.losses[-10:]), 1)
+    print(f"done: loss {first:.3f} → {last:.3f} "
+          f"({report.final_step} steps, {report.n_failures} failures, "
+          f"{len(report.restarts)} restarts)")
+    assert last < first, "loss did not decrease"
+
+
+if __name__ == "__main__":
+    main()

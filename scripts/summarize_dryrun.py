@@ -1,0 +1,55 @@
+"""Render out/dryrun*/ JSONs as a markdown table; optionally splice into
+EXPERIMENTS.md at the <!-- OPTIMIZED_TABLE --> marker.
+
+    PYTHONPATH=src python scripts/summarize_dryrun.py out/dryrun_opt --inject
+"""
+
+import glob
+import json
+import os
+import sys
+
+
+def rows_for(out_dir):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        r = json.load(open(f))
+        if r.get("skipped"):
+            continue
+        rf = r["roofline"]
+        rows.append((
+            r["arch"], r["shape"], r["mesh"], rf["t_compute_s"],
+            rf["t_memory_s"], rf["t_collective_s"], rf["dominant"],
+            rf["roofline_mfu_bound"], rf["useful_flops_fraction"],
+            r["memory"]["peak_bytes_est"] / 2**30,
+        ))
+    rows.sort()
+    return rows
+
+
+def to_markdown(rows):
+    out = ["| arch | shape | mesh | Tc (s) | Tm (s) | Tx (s) | dom | mfu | useful | GiB |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for a, s, m, tc, tm, tx, dom, mfu, u, gib in rows:
+        out.append(
+            f"| {a} | {s} | {m} | {tc:.2e} | {tm:.2e} | {tx:.2e} "
+            f"| {dom[:3]} | {mfu:.3f} | {u:.2f} | {gib:.1f} |")
+    return "\n".join(out)
+
+
+def main():
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "out/dryrun_opt"
+    md = to_markdown(rows_for(out_dir))
+    if "--inject" in sys.argv:
+        path = "EXPERIMENTS.md"
+        text = open(path).read()
+        marker = "<!-- OPTIMIZED_TABLE -->"
+        assert marker in text, "marker missing"
+        open(path, "w").write(text.replace(marker, md, 1))
+        print(f"injected {out_dir} table into {path}")
+    else:
+        print(md)
+
+
+if __name__ == "__main__":
+    main()

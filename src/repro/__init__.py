@@ -1,0 +1,8 @@
+"""repro: production-grade JAX implementation of PASSCoDe (ICML 2015).
+
+Parallel ASynchronous Stochastic dual Co-ordinate Descent, adapted to the
+TPU/JAX SPMD execution model, embedded in a multi-pod LM training/serving
+framework (see DESIGN.md).
+"""
+
+__version__ = "0.1.0"

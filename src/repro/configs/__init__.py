@@ -1,0 +1,15 @@
+"""Architecture configs for the 10 assigned LM-family architectures."""
+
+from repro.configs.base import ModelConfig
+from repro.configs.registry import ARCHS, get_config, get_smoke_config
+from repro.configs.shapes import SHAPES, InputShape, cells_for_arch
+
+__all__ = [
+    "ModelConfig",
+    "ARCHS",
+    "get_config",
+    "get_smoke_config",
+    "SHAPES",
+    "InputShape",
+    "cells_for_arch",
+]

@@ -1,0 +1,45 @@
+"""PASSCoDe core: dual coordinate descent and its asynchronous variants.
+
+Public API:
+    losses:       ``Hinge(C)``, ``SquaredHinge(C)``, ``Logistic(C)``
+    serial:       ``dcd_epoch``, ``dcd_solve``  (LIBLINEAR Algorithm 1)
+    parallel:     ``passcode_solve`` with ``memory_model`` in
+                  {"lock", "atomic", "wild"} (Algorithm 2)
+    baselines:    ``cocoa_solve``, ``asyscd_solve``
+    analysis:     ``backward_error_report``, ``duality_gap``, ``primal``,
+                  ``dual``
+    distributed:  ``sharded_passcode_solve`` (shard_map over the data axis)
+"""
+
+from repro.core.duals import Hinge, Logistic, SquaredHinge
+from repro.core.objective import (
+    dual_objective,
+    duality_gap,
+    predict_accuracy,
+    primal_objective,
+)
+from repro.core.dcd import dcd_epoch, dcd_solve
+from repro.core.passcode import PasscodeResult, passcode_epoch, passcode_solve
+from repro.core.backward_error import backward_error_report
+from repro.core.cocoa import cocoa_solve
+from repro.core.asyscd import asyscd_solve
+from repro.core.sharded import sharded_passcode_solve
+
+__all__ = [
+    "Hinge",
+    "SquaredHinge",
+    "Logistic",
+    "dual_objective",
+    "primal_objective",
+    "duality_gap",
+    "predict_accuracy",
+    "dcd_epoch",
+    "dcd_solve",
+    "passcode_epoch",
+    "passcode_solve",
+    "PasscodeResult",
+    "backward_error_report",
+    "cocoa_solve",
+    "asyscd_solve",
+    "sharded_passcode_solve",
+]

@@ -1,0 +1,136 @@
+"""Loss functions, their conjugates, and exact 1-D coordinate solvers.
+
+Conventions follow the paper exactly:
+
+    primal (1):  P(w) = ½‖w‖² + Σ_i ℓ_i(wᵀx_i),   x_i = y_i · ẋ_i
+    dual   (2):  D(α) = ½‖Σ_i α_i x_i‖² + Σ_i ℓ*_i(−α_i)
+
+Each loss provides the *exact* minimizer of the one-variable subproblem
+(4)/(5):
+
+    Δα_i = argmin_δ ½‖w + δ x_i‖² + ℓ*_i(−(α_i + δ))
+
+given ``wx = wᵀx_i`` (computed against whatever — possibly stale — w the
+caller holds; that is the whole point of PASSCoDe) and ``q = ‖x_i‖²``.
+
+Losses are frozen dataclasses → hashable → safe to close over / pass as
+static arguments to jit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class Hinge:
+    """SVM hinge loss ℓ(z) = C·max(1−z, 0); dual box α ∈ [0, C] (eq. 10)."""
+
+    C: float = 1.0
+
+    def primal_loss(self, z):
+        return self.C * jnp.maximum(1.0 - z, 0.0)
+
+    def conj(self, alpha):
+        """ℓ*(−α) on the feasible box (=-α); +inf outside is never evaluated
+        because iterates stay feasible by construction."""
+        return -alpha
+
+    def feasible(self, alpha):
+        return jnp.clip(alpha, 0.0, self.C)
+
+    def delta(self, alpha, wx, q):
+        """Closed form: project α + (1 − wᵀx)/‖x‖² onto [0, C]."""
+        q = jnp.maximum(q, _EPS)
+        new = jnp.clip(alpha + (1.0 - wx) / q, 0.0, self.C)
+        return new - alpha
+
+    def dual_grad(self, alpha, wx):
+        """∇_i D(α) = wᵀx_i − 1 (within the box)."""
+        return wx - 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SquaredHinge:
+    """ℓ(z) = C·max(1−z, 0)²; conjugate −α + α²/(4C) for α ≥ 0 (eq. 11)."""
+
+    C: float = 1.0
+
+    def primal_loss(self, z):
+        return self.C * jnp.maximum(1.0 - z, 0.0) ** 2
+
+    def conj(self, alpha):
+        return -alpha + alpha * alpha / (4.0 * self.C)
+
+    def feasible(self, alpha):
+        return jnp.maximum(alpha, 0.0)
+
+    def delta(self, alpha, wx, q):
+        q = jnp.maximum(q, _EPS)
+        denom = q + 1.0 / (2.0 * self.C)
+        new = jnp.maximum(alpha + (1.0 - wx - alpha / (2.0 * self.C)) / denom, 0.0)
+        return new - alpha
+
+    def dual_grad(self, alpha, wx):
+        return wx - 1.0 + alpha / (2.0 * self.C)
+
+
+@dataclasses.dataclass(frozen=True)
+class Logistic:
+    """ℓ(z) = C·log(1+e^{−z}); ℓ*(−α) = α·log α + (C−α)·log(C−α) − C·log C
+    for α ∈ (0, C).  The subproblem has no closed form — we run a
+    safeguarded Newton iteration (Yu, Huang & Lin, 2011)."""
+
+    C: float = 1.0
+    newton_steps: int = 20
+
+    def primal_loss(self, z):
+        # log(1+e^{-z}) computed stably.
+        return self.C * jnp.logaddexp(0.0, -z)
+
+    def conj(self, alpha):
+        a = jnp.clip(alpha, _EPS, self.C - _EPS)
+        return (
+            a * jnp.log(a)
+            + (self.C - a) * jnp.log(self.C - a)
+            - self.C * jnp.log(self.C)
+        )
+
+    def feasible(self, alpha):
+        return jnp.clip(alpha, 1e-8 * self.C, (1.0 - 1e-8) * self.C)
+
+    def delta(self, alpha, wx, q):
+        """Safeguarded Newton on g(δ) = wᵀx·δ... full derivative:
+        g'(δ) = wx + δ·q + log((α+δ)/(C−α−δ)),   g'' = q + C/((α+δ)(C−α−δ)).
+        Domain δ ∈ (−α, C−α)."""
+        C = self.C
+        q = jnp.maximum(q, _EPS)
+        lo = -alpha + _EPS * C
+        hi = (C - alpha) - _EPS * C
+
+        def body(_, delta):
+            a = alpha + delta
+            g1 = wx + delta * q + jnp.log(a) - jnp.log(C - a)
+            g2 = q + C / jnp.maximum(a * (C - a), _EPS)
+            step = g1 / g2
+            return jnp.clip(delta - step, lo, hi)
+
+        delta0 = jnp.zeros_like(alpha)
+        delta = jax.lax.fori_loop(0, self.newton_steps, body, delta0)
+        return delta
+
+    def dual_grad(self, alpha, wx):
+        a = jnp.clip(alpha, _EPS, self.C - _EPS)
+        return wx + jnp.log(a) - jnp.log(self.C - a)
+
+
+LOSSES = {"hinge": Hinge, "squared_hinge": SquaredHinge, "logistic": Logistic}
+
+
+def make_loss(name: str, C: float = 1.0):
+    return LOSSES[name](C=C)

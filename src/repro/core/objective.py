@@ -1,0 +1,61 @@
+"""Primal/dual objectives, duality gap, prediction accuracy.
+
+Works on dense (n, d) data or ``EllMatrix``. Since rows are label-folded
+(x_i = y_i·ẋ_i), classification is correct iff wᵀx_i > 0, so accuracy
+needs no separate label vector.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.data.sparse import EllMatrix, ell_matvec, ell_rmatvec
+
+
+def _matvec(X, w):
+    if isinstance(X, EllMatrix):
+        return ell_matvec(X, w)
+    return X @ w
+
+
+def _rmatvec(X, alpha):
+    if isinstance(X, EllMatrix):
+        return ell_rmatvec(X, alpha)
+    return X.T @ alpha
+
+
+def w_of_alpha(X, alpha):
+    """w(α) = Σ_i α_i x_i  (eq. 3)."""
+    return _rmatvec(X, alpha)
+
+
+def primal_objective(w, X, loss):
+    """P(w) = ½‖w‖² + Σ ℓ_i(wᵀx_i)  (eq. 1)."""
+    z = _matvec(X, w)
+    return 0.5 * jnp.dot(w, w) + jnp.sum(loss.primal_loss(z))
+
+
+def dual_objective(alpha, X, loss):
+    """D(α) = ½‖Σ α_i x_i‖² + Σ ℓ*(−α_i)  (eq. 2)."""
+    w = _rmatvec(X, alpha)
+    return 0.5 * jnp.dot(w, w) + jnp.sum(loss.conj(alpha))
+
+
+def duality_gap(alpha, X, loss):
+    """P(w(α)) + D(α) ≥ 0, → 0 at optimum (P(w*) = −D(α*))."""
+    w = _rmatvec(X, alpha)
+    return primal_objective(w, X, loss) + dual_objective(alpha, X, loss)
+
+
+def perturbed_primal_objective(w, X, loss, eps):
+    """Eq. (16): ½(w+ε)ᵀ(w+ε) + Σ ℓ_i(wᵀx_i) — the problem ŵ exactly
+    solves under PASSCoDe-Wild (Corollary 1)."""
+    z = _matvec(X, w)
+    we = w + eps
+    return 0.5 * jnp.dot(we, we) + jnp.sum(loss.primal_loss(z))
+
+
+def predict_accuracy(w, X):
+    """Fraction of rows with wᵀx_i > 0 (x_i is label-folded)."""
+    z = _matvec(X, w)
+    return jnp.mean((z > 0).astype(jnp.float32))

@@ -1,0 +1,208 @@
+"""Distributed PASSCoDe via ``shard_map`` — the TPU-native execution of
+Algorithm 2 (DESIGN.md §2).
+
+Mapping of the paper's shared-memory model onto an SPMD mesh:
+
+  thread          → device along the ``data`` mesh axis
+  shared w (DRAM) → per-device replica of w; devices run a *block* of B
+                    locally-sequential DCD updates against their replica
+                    (own updates immediately visible — the "maintain w"
+                    trick), then exchange
+  atomic adds     → ``jax.lax.psum`` of the per-device Δw each block
+                    round: increments are never lost ⇒ **PASSCoDe-Atomic**
+                    semantics with staleness τ ≤ B·(p−1) (Assumption 1)
+  wild            → ``delay_rounds ≥ 1``: a device folds in the *previous*
+                    round's psum while computing the current block —
+                    modelling in-flight updates not yet visible.  Writes
+                    stay lossless (a psum cannot drop increments), so this
+                    is Atomic-with-larger-τ; true lost-write (LWW) physics
+                    only exists on shared memory and is simulated in
+                    ``repro.core.passcode`` instead.
+
+α is sharded by rows (each device owns its block — disjoint coordinates,
+like §3.3's per-thread permutation blocks); X rows likewise.  w is
+replicated (d fits on-chip for all paper datasets; a feature-sharded
+variant for kddb-scale d lives in ``sharded_passcode_feature``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.objective import duality_gap, w_of_alpha
+
+
+class ShardedResult(NamedTuple):
+    alpha: jnp.ndarray
+    w_hat: jnp.ndarray
+    gaps: jnp.ndarray
+    rounds: int
+
+
+def _local_block_update(X_loc, sq_loc, alpha_loc, w, idx_block, loss):
+    """B sequential DCD updates on this device's shard, locally-fresh w."""
+
+    def body(t, carry):
+        alpha_loc, w_loc = carry
+        i = idx_block[t]
+        x = X_loc[i]
+        delta = loss.delta(alpha_loc[i], jnp.dot(w_loc, x), sq_loc[i])
+        return alpha_loc.at[i].add(delta), w_loc + delta * x
+
+    alpha_loc, w_new = jax.lax.fori_loop(
+        0, idx_block.shape[0], body, (alpha_loc, w)
+    )
+    return alpha_loc, w_new - w  # (updated α shard, local Δw)
+
+
+def make_sharded_epoch(mesh: Mesh, loss, block_size: int, delay_rounds: int = 0):
+    """Build the jitted shard_map epoch function for a given mesh."""
+    axis = "data"
+
+    def epoch(X, sq_norms, alpha, w, blocks_idx, carry_dw):
+        # blocks_idx: (n_blocks, B) *local* row ids per device (sharded).
+        def device_fn(X_loc, sq_loc, alpha_loc, w_rep, blocks_loc, dw_prev):
+            def one_round(carry, idx_block):
+                alpha_loc, w_loc, dw_prev = carry
+                if delay_rounds > 0:
+                    # fold in last round's aggregate only now (stale view)
+                    w_eff = w_loc + dw_prev
+                else:
+                    w_eff = w_loc
+                alpha_loc, dw_local = _local_block_update(
+                    X_loc, sq_loc, alpha_loc, w_eff, idx_block, loss
+                )
+                dw_all = jax.lax.psum(dw_local, axis)
+                if delay_rounds > 0:
+                    # defer applying this round's aggregate to next round
+                    return (alpha_loc, w_loc + dw_prev, dw_all), ()
+                return (alpha_loc, w_loc + dw_all, dw_prev), ()
+
+            (alpha_loc, w_loc, dw_prev), _ = jax.lax.scan(
+                one_round, (alpha_loc, w_rep, dw_prev), blocks_loc
+            )
+            return alpha_loc, w_loc, dw_prev
+
+        return jax.shard_map(
+            device_fn,
+            mesh=mesh,
+            in_specs=(P(axis), P(axis), P(axis), P(), P(axis), P()),
+            out_specs=(P(axis), P(), P()),
+            check_vma=False,  # carries flip replicated→varying across psum
+        )(X, sq_norms, alpha, w, blocks_idx, carry_dw)
+
+    return jax.jit(epoch)
+
+
+def sharded_passcode_solve(
+    X_host,
+    loss,
+    *,
+    mesh: Mesh | None = None,
+    epochs: int = 10,
+    block_size: int = 64,
+    delay_rounds: int = 0,
+    seed: int = 0,
+    record: bool = True,
+) -> ShardedResult:
+    """Distributed PASSCoDe-Atomic.  ``X_host``: dense (n, d) array; rows
+    are sharded across the mesh's ``data`` axis."""
+    if mesh is None:
+        mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    p = mesh.shape["data"]
+    n, d = X_host.shape
+    n_loc = n // p
+    n_use = n_loc * p
+    X = jnp.asarray(X_host[:n_use])
+    sq_norms = jnp.sum(X * X, axis=1)
+    data_sh = NamedSharding(mesh, P("data"))
+    rep_sh = NamedSharding(mesh, P())
+    X = jax.device_put(X, NamedSharding(mesh, P("data", None)))
+    sq_norms = jax.device_put(sq_norms, data_sh)
+    alpha = jax.device_put(jnp.zeros((n_use,), jnp.float32), data_sh)
+    w = jax.device_put(jnp.zeros((d,), jnp.float32), rep_sh)
+    carry_dw = jax.device_put(jnp.zeros((d,), jnp.float32), rep_sh)
+
+    epoch_fn = make_sharded_epoch(mesh, loss, block_size, delay_rounds)
+    key = jax.random.PRNGKey(seed)
+    n_blocks = max(n_loc // block_size, 1)
+    gaps = []
+    for _ in range(epochs):
+        key, sub = jax.random.split(key)
+        # per-device local permutation → (p, n_blocks, B) → flatten axis 0
+        keys = jax.random.split(sub, p)
+        local_perms = jax.vmap(
+            lambda k: jax.random.permutation(k, n_loc)[: n_blocks * block_size]
+        )(keys)
+        blocks = local_perms.reshape(p, n_blocks, block_size)
+        # shard_map expects the leading axis sharded: (p*n_blocks, B) with
+        # device i owning rows [i*n_blocks, (i+1)*n_blocks)
+        blocks = jax.device_put(
+            blocks.reshape(p * n_blocks, block_size), data_sh
+        )
+        alpha, w, carry_dw = epoch_fn(X, sq_norms, alpha, w, blocks, carry_dw)
+        if record:
+            gaps.append(float(duality_gap(alpha, X, loss)))
+    if delay_rounds > 0:
+        w = w + carry_dw  # flush in-flight aggregate
+    return ShardedResult(alpha, w, jnp.asarray(gaps), epochs)
+
+
+def sharded_passcode_feature(
+    X_host,
+    loss,
+    *,
+    mesh: Mesh | None = None,
+    epochs: int = 10,
+    seed: int = 0,
+):
+    """Feature-sharded (model-parallel) serial-equivalent DCD for huge d
+    (kddb-scale): w and the feature dimension of X are sharded along
+    ``model``; each coordinate's dot product is a psum over feature
+    shards.  Updates are serial in i ⇒ exactly Algorithm 1 output, with
+    the *communication* pattern of a model-parallel deployment."""
+    if mesh is None:
+        mesh = jax.make_mesh((len(jax.devices()),), ("model",))
+    n, d = X_host.shape
+    m = mesh.shape["model"]
+    d_pad = ((d + m - 1) // m) * m
+    X = jnp.zeros((n, d_pad), jnp.float32).at[:, :d].set(jnp.asarray(X_host))
+    sq_norms = jnp.sum(X * X, axis=1)
+    X = jax.device_put(X, NamedSharding(mesh, P(None, "model")))
+    w = jax.device_put(
+        jnp.zeros((d_pad,), jnp.float32), NamedSharding(mesh, P("model"))
+    )
+    alpha = jnp.zeros((n,), jnp.float32)
+
+    def epoch(X, sq_norms, alpha, w, perm):
+        def device_fn(X_loc, sq, alpha, w_loc, perm):
+            def body(k, carry):
+                alpha, w_loc = carry
+                i = perm[k]
+                wx = jax.lax.psum(jnp.dot(w_loc, X_loc[i]), "model")
+                delta = loss.delta(alpha[i], wx, sq[i])
+                return alpha.at[i].add(delta), w_loc + delta * X_loc[i]
+
+            return jax.lax.fori_loop(0, perm.shape[0], body, (alpha, w_loc))
+
+        return jax.shard_map(
+            device_fn,
+            mesh=mesh,
+            in_specs=(P(None, "model"), P(), P(), P("model"), P()),
+            out_specs=(P(), P("model")),
+            check_vma=False,  # psum inside fori_loop carry
+        )(X, sq_norms, alpha, w, perm)
+
+    epoch_fn = jax.jit(epoch)
+    key = jax.random.PRNGKey(seed)
+    for _ in range(epochs):
+        key, sub = jax.random.split(key)
+        perm = jax.random.permutation(sub, n)
+        alpha, w = epoch_fn(X, sq_norms, alpha, w, perm)
+    return alpha, w[:d]

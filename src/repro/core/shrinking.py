@@ -1,0 +1,70 @@
+"""Shrinking heuristic (paper §3.3; Hsieh et al. 2008).
+
+LIBLINEAR skips coordinates that look pinned at a bound.  Data-dependent
+control flow is hostile to XLA, so we keep fixed shapes and use an
+*active mask*: a coordinate is frozen for the epoch when it sits at a
+bound with a projected gradient pointing out of the box by more than
+``shrink_tol``; frozen coordinates take a zero-delta update (masked).
+
+The mask is recomputed every epoch from fresh gradients, which also
+restores wrongly-shrunk coordinates (LIBLINEAR's "unshrink on final
+pass" safeguard becomes unnecessary at this granularity).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.duals import Hinge, SquaredHinge
+from repro.core.objective import duality_gap, w_of_alpha
+
+
+def active_mask(loss, alpha, grads, shrink_tol: float):
+    """True where the coordinate must stay active."""
+    if isinstance(loss, Hinge):
+        at_lo = (alpha <= 0.0) & (grads > shrink_tol)
+        at_hi = (alpha >= loss.C) & (grads < -shrink_tol)
+        return ~(at_lo | at_hi)
+    if isinstance(loss, SquaredHinge):
+        return ~((alpha <= 0.0) & (grads > shrink_tol))
+    return jnp.ones_like(alpha, bool)  # logistic: interior — never shrink
+
+
+@functools.partial(jax.jit, static_argnames=("loss",))
+def _shrink_epoch(X, sq_norms, alpha, w, perm, mask, loss):
+    def body(k, carry):
+        alpha, w = carry
+        i = perm[k]
+        x = X[i]
+        delta = jnp.where(
+            mask[i], loss.delta(alpha[i], jnp.dot(w, x), sq_norms[i]), 0.0
+        )
+        return alpha.at[i].add(delta), w + delta * x
+
+    alpha, w = jax.lax.fori_loop(0, perm.shape[0], body, (alpha, w))
+    return alpha, w
+
+
+def dcd_solve_shrink(
+    X, loss, *, epochs: int = 20, seed: int = 0, shrink_tol: float = 1e-3
+):
+    """Serial DCD with the shrinking mask; returns (alpha, w, gaps,
+    active_fraction_per_epoch)."""
+    n, d = X.shape
+    sq_norms = jnp.sum(X * X, axis=1)
+    alpha = jnp.zeros((n,), jnp.float32)
+    w = jnp.zeros((d,), jnp.float32)
+    key = jax.random.PRNGKey(seed)
+    gaps, act = [], []
+    for _ in range(epochs):
+        key, sub = jax.random.split(key)
+        perm = jax.random.permutation(sub, n)
+        grads = jax.vmap(loss.dual_grad)(alpha, X @ w)
+        mask = active_mask(loss, alpha, grads, shrink_tol)
+        alpha, w = _shrink_epoch(X, sq_norms, alpha, w, perm, mask, loss)
+        gaps.append(float(duality_gap(alpha, X, loss)))
+        act.append(float(jnp.mean(mask.astype(jnp.float32))))
+    return alpha, w_of_alpha(X, alpha), jnp.asarray(gaps), jnp.asarray(act)

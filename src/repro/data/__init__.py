@@ -1,0 +1,18 @@
+"""Data substrate: JAX-native sparse matrices and synthetic datasets."""
+
+from repro.data.sparse import EllMatrix, dense_to_ell, ell_matvec, ell_row_dot
+from repro.data.synthetic import (
+    DATASET_RECIPES,
+    SyntheticDataset,
+    make_dataset,
+)
+
+__all__ = [
+    "EllMatrix",
+    "dense_to_ell",
+    "ell_matvec",
+    "ell_row_dot",
+    "SyntheticDataset",
+    "make_dataset",
+    "DATASET_RECIPES",
+]

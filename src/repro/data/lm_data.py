@@ -1,0 +1,67 @@
+"""Deterministic, step-indexed LM data pipeline.
+
+Fault-tolerance invariant: the batch for step ``t`` is a pure function of
+(seed, t) — ``batch_at(t)`` — so a restart from a checkpoint at step t
+resumes the EXACT data order with no iterator state to persist, and a
+straggler's re-dispatched step re-reads identical data.  This is the
+property production pipelines get from deterministic sharded index files;
+here the "corpus" is a synthetic Markov chain (learnable bigram structure
+so example training shows a genuinely decreasing loss).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class MarkovCorpus:
+    """Zipf-initialized bigram LM over `vocab` symbols."""
+
+    vocab_size: int
+    seed: int = 0
+    temperature: float = 0.7
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        V = self.vocab_size
+        # sparse-ish bigram logits: each symbol strongly prefers ~8 next
+        logits = np.full((V, min(8, V)), 0.0, np.float32)
+        nexts = rng.integers(0, V, size=(V, min(8, V)))
+        self._nexts = jnp.asarray(nexts, jnp.int32)
+        self._logits = jnp.asarray(
+            rng.standard_normal((V, min(8, V))).astype(np.float32)
+            / self.temperature
+        )
+
+    def batch_at(self, step: int, batch: int, seq: int) -> jnp.ndarray:
+        """(batch, seq+1) int32 tokens — pure function of (seed, step)."""
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+
+        def gen_one(key):
+            k0, kscan = jax.random.split(key)
+            first = jax.random.randint(k0, (), 0, self.vocab_size)
+
+            def step_fn(tok, k):
+                choice = jax.random.categorical(k, self._logits[tok])
+                nxt = self._nexts[tok, choice]
+                return nxt, nxt
+
+            _, toks = jax.lax.scan(
+                step_fn, first, jax.random.split(kscan, seq)
+            )
+            return jnp.concatenate([first[None], toks])
+
+        keys = jax.random.split(key, batch)
+        return jax.vmap(gen_one)(keys)
+
+
+def make_lm_batch(corpus: MarkovCorpus, step: int, batch: int, seq: int):
+    """{'tokens': (B, S), 'labels': (B, S)} — ``cross_entropy`` shifts
+    internally, so labels are the same token stream."""
+    toks = corpus.batch_at(step, batch, seq)[:, :seq]
+    return {"tokens": toks, "labels": toks}

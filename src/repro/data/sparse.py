@@ -1,0 +1,105 @@
+"""Fixed-shape sparse matrices for XLA.
+
+LIBLINEAR-style datasets (rcv1, webspam, kddb) are CSR with wildly ragged
+rows.  XLA wants fixed shapes, so we use the ELL layout: every row is
+padded to ``k_max`` nonzeros.  Padding entries use ``index == n_features``
+(one past the end) with ``value == 0.0``; consumers keep a ``d+1``-length
+scratch vector so padded scatter-adds land in a dummy slot and padded
+gathers multiply by zero.  This is also the layout the Pallas DCD kernel
+tiles into VMEM (see ``repro/kernels/dcd_block.py``).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class EllMatrix(NamedTuple):
+    """ELL-format sparse matrix with label-folded rows (x_i = y_i * raw_i).
+
+    Attributes:
+        indices: (n_rows, k_max) int32 column ids; padding == n_features.
+        values:  (n_rows, k_max) float32; padding == 0.
+        n_features: static int, true feature dimension d.
+    """
+
+    indices: jnp.ndarray
+    values: jnp.ndarray
+    n_features: int
+
+    @property
+    def n_rows(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def k_max(self) -> int:
+        return self.indices.shape[1]
+
+    def row_sq_norms(self) -> jnp.ndarray:
+        """‖x_i‖² for every row — precomputed once per solve (paper §3.1)."""
+        return jnp.sum(self.values * self.values, axis=1)
+
+    def to_dense(self) -> jnp.ndarray:
+        d = self.n_features
+        dense = jnp.zeros((self.n_rows, d + 1), self.values.dtype)
+        rows = jnp.arange(self.n_rows)[:, None]
+        dense = dense.at[rows, self.indices].add(self.values)
+        return dense[:, :d]
+
+
+def dense_to_ell(dense, k_max: int | None = None) -> EllMatrix:
+    """Convert a dense (n, d) array to ELL (host-side, numpy)."""
+    dense = np.asarray(dense)
+    n, d = dense.shape
+    nnz_per_row = (dense != 0).sum(axis=1)
+    if k_max is None:
+        k_max = max(int(nnz_per_row.max()), 1)
+    indices = np.full((n, k_max), d, dtype=np.int32)
+    values = np.zeros((n, k_max), dtype=np.float32)
+    for i in range(n):
+        (cols,) = np.nonzero(dense[i])
+        cols = cols[:k_max]
+        indices[i, : len(cols)] = cols
+        values[i, : len(cols)] = dense[i, cols]
+    return EllMatrix(jnp.asarray(indices), jnp.asarray(values), d)
+
+
+def ell_row_dot(mat: EllMatrix, w_pad: jnp.ndarray, i) -> jnp.ndarray:
+    """w·x_i against a (d+1,) padded primal vector. O(k_max)."""
+    idx = mat.indices[i]
+    val = mat.values[i]
+    return jnp.sum(w_pad[idx] * val)
+
+
+def ell_row_axpy(mat: EllMatrix, w_pad: jnp.ndarray, i, scale) -> jnp.ndarray:
+    """w += scale * x_i (padded scatter-add; padding lands in slot d)."""
+    idx = mat.indices[i]
+    val = mat.values[i]
+    return w_pad.at[idx].add(scale * val)
+
+
+def ell_matvec(mat: EllMatrix, w: jnp.ndarray) -> jnp.ndarray:
+    """X @ w for a (d,) vector. Returns (n_rows,)."""
+    w_pad = jnp.concatenate([w, jnp.zeros((1,), w.dtype)])
+    return jnp.sum(w_pad[mat.indices] * mat.values, axis=1)
+
+
+def ell_rmatvec(mat: EllMatrix, alpha: jnp.ndarray) -> jnp.ndarray:
+    """Xᵀ @ alpha. Returns (d,) — this is w(α) = Σ_i α_i x_i (eq. 3)."""
+    d = mat.n_features
+    w_pad = jnp.zeros((d + 1,), mat.values.dtype)
+    contrib = alpha[:, None] * mat.values
+    w_pad = w_pad.at[mat.indices].add(contrib)
+    return w_pad[:d]
+
+
+def pad_primal(w: jnp.ndarray) -> jnp.ndarray:
+    """Append the dummy padding slot."""
+    return jnp.concatenate([w, jnp.zeros((1,), w.dtype)])
+
+
+def unpad_primal(w_pad: jnp.ndarray) -> jnp.ndarray:
+    return w_pad[:-1]

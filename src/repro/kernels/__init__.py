@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for PASSCoDe's compute hot-spot.
+
+The paper's hot loop is the coordinate update: w·x_i, closed-form δ,
+w += δ·x_i.  On TPU we re-block it for the memory hierarchy: rows are
+tiled HBM→VMEM in blocks of B; within a block the updates run
+*sequentially against a VMEM-resident w* (exact serial semantics — the
+"maintain the primal" trick at VMEM latency); the sequential TPU grid
+carries w across blocks, so a whole epoch is ONE pallas_call.
+
+  dcd_block.py — the kernel (pl.pallas_call + BlockSpec)
+  ops.py       — jitted wrappers with CPU interpret fallback
+  ref.py       — pure-jnp oracle (identical update order)
+"""
+
+from repro.kernels.ops import dcd_epoch_pallas
+from repro.kernels.ref import dcd_epoch_ref
+
+__all__ = ["dcd_epoch_pallas", "dcd_epoch_ref"]

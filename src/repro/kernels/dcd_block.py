@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: block-resident dual coordinate descent epoch.
+
+TPU adaptation of the PASSCoDe hot loop (DESIGN.md §2).  The GPU/multicore
+original races on a shared DRAM ``w``; the TPU version makes the working
+set explicit:
+
+  * rows arrive in VMEM as dense (BLOCK_ROWS, d) tiles (one grid step per
+    tile — ELL/CSR rows are densified into tiles by the op wrapper);
+  * ``w`` lives in VMEM for the *whole epoch*: its BlockSpec index_map is
+    constant, and on TPU the grid executes sequentially, so each grid
+    step sees the previous step's writes — serial-DCD-exact semantics
+    with zero locking;
+  * within a tile, updates run sequentially (fori_loop): w·x_t is a VPU
+    reduction over d lanes, the closed-form δ is scalar work, and the
+    rank-1 update w += δ·x_t is a vector axpy.
+
+dtype: f32 accumulators (α, w); X tiles may be f32 or bf16 (cast on use).
+
+VMEM budget per grid step (f32): BLOCK_ROWS·d (tile) + 2·d (w, x) +
+3·BLOCK_ROWS (α, q, scratch) ≈ 256·8192·4B ≈ 8 MiB at the default block —
+inside the ~16 MiB/core budget, and d is lane-aligned to 128 by the
+wrapper for clean (8,128) f32 tiling.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dcd_tile_kernel(
+    x_ref,  # (B, d)  row tile, VMEM
+    alpha_ref,  # (B, 1)  dual block, VMEM (aliased in/out)
+    q_ref,  # (B, 1)  row squared norms
+    w_ref,  # (1, d)  primal — full vector, constant index_map (carried)
+    alpha_out,  # (B, 1)
+    w_out,  # (1, d)
+    *,
+    c: float,
+    sq_hinge: bool,
+    block_rows: int,
+):
+    # First grid step must seed the carried w output; afterwards w_out
+    # already holds the running value (same buffer every step).
+    @pl.when(pl.program_id(0) == 0)
+    def _seed():
+        w_out[...] = w_ref[...]
+
+    def body(t, w):
+        x = x_ref[pl.ds(t, 1), :].astype(jnp.float32)  # (1, d)
+        wx = jnp.sum(w * x)
+        a = alpha_ref[pl.ds(t, 1), :]  # (1, 1)
+        q = q_ref[pl.ds(t, 1), :]
+        if sq_hinge:
+            denom = q + 1.0 / (2.0 * c)
+            new = jnp.maximum(a + (1.0 - wx - a / (2.0 * c)) / denom, 0.0)
+        else:
+            new = jnp.clip(a + (1.0 - wx) / jnp.maximum(q, 1e-12), 0.0, c)
+        delta = new - a
+        alpha_out[pl.ds(t, 1), :] = new
+        return w + delta * x  # rank-1 axpy, stays in registers/VMEM
+
+    w = jax.lax.fori_loop(0, block_rows, body, w_out[...].astype(jnp.float32))
+    w_out[...] = w
+
+
+def dcd_epoch_pallas_call(
+    X,  # (n, d) dense, n % block_rows == 0, d % 128 == 0
+    alpha,  # (n,)
+    w,  # (d,)
+    sq_norms,  # (n,)
+    *,
+    c: float,
+    sq_hinge: bool = False,
+    block_rows: int = 256,
+    interpret: bool = False,
+):
+    n, d = X.shape
+    assert n % block_rows == 0, (n, block_rows)
+    grid = (n // block_rows,)
+    alpha2 = alpha.reshape(n, 1).astype(jnp.float32)
+    q2 = sq_norms.reshape(n, 1).astype(jnp.float32)
+    w2 = w.reshape(1, d).astype(jnp.float32)
+
+    kernel = functools.partial(
+        _dcd_tile_kernel, c=c, sq_hinge=sq_hinge, block_rows=block_rows
+    )
+    alpha_out, w_out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),  # row tile
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),  # alpha block
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),  # sq norms
+            pl.BlockSpec((1, d), lambda i: (0, 0)),  # w: constant map
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),  # carried across steps
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(X, alpha2, q2, w2)
+    return alpha_out.reshape(n), w_out.reshape(d)

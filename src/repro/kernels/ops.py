@@ -1,0 +1,63 @@
+"""Jitted wrappers for the Pallas DCD kernel with shape canonicalization
+and a CPU ``interpret=True`` fallback (this container is CPU-only; TPU is
+the compile target)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dcd_block import dcd_epoch_pallas_call
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("c", "sq_hinge", "block_rows", "interpret"),
+)
+def _epoch(X, alpha, w, sq_norms, c, sq_hinge, block_rows, interpret):
+    return dcd_epoch_pallas_call(
+        X, alpha, w, sq_norms,
+        c=c, sq_hinge=sq_hinge, block_rows=block_rows, interpret=interpret,
+    )
+
+
+def dcd_epoch_pallas(
+    X,
+    alpha,
+    w,
+    sq_norms=None,
+    *,
+    c: float = 1.0,
+    sq_hinge: bool = False,
+    block_rows: int = 256,
+    interpret: bool | None = None,
+):
+    """One in-order DCD epoch via the Pallas kernel.
+
+    Pads rows to a block multiple (with zero rows: q=0 ⇒ δ clipped to the
+    box, α stays 0 since padding α=0 and wx=0 ⇒ hinge δ would be
+    clip(0 + 1/eps)... zero rows are instead given q=1, value 0 ⇒ δ=clip(1)
+    — so we mask them by α=0, x=0 ⇒ w unchanged; α of padding discarded)
+    and lanes to 128.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    n, d = X.shape
+    br = min(block_rows, max(8, n))
+    n_pad = ((n + br - 1) // br) * br
+    d_pad = ((d + 127) // 128) * 128
+    if sq_norms is None:
+        sq_norms = jnp.sum(X * X, axis=1)
+    Xp = jnp.zeros((n_pad, d_pad), X.dtype).at[:n, :d].set(X)
+    ap = jnp.zeros((n_pad,), jnp.float32).at[:n].set(alpha)
+    qp = jnp.ones((n_pad,), jnp.float32).at[:n].set(sq_norms)
+    wp = jnp.zeros((d_pad,), jnp.float32).at[:d].set(w)
+    a_out, w_out = _epoch(Xp, ap, wp, qp, float(c), bool(sq_hinge), br,
+                          bool(interpret))
+    return a_out[:n], w_out[:d]

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the DCD block kernel.
+
+Semantics: sequential coordinate updates over rows 0..n-1 **in order**
+(callers shuffle rows beforehand — the kernel is order-preserving), for
+hinge / squared-hinge closed forms.  This is Algorithm 1 with the
+identity permutation; it must match ``dcd_epoch_pallas`` bit-for-bit up
+to float associativity.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _delta(alpha_i, wx, q, c, sq_hinge: bool):
+    if sq_hinge:
+        denom = q + 1.0 / (2.0 * c)
+        new = jnp.maximum(alpha_i + (1.0 - wx - alpha_i / (2.0 * c)) / denom, 0.0)
+    else:
+        new = jnp.clip(alpha_i + (1.0 - wx) / jnp.maximum(q, 1e-12), 0.0, c)
+    return new - alpha_i
+
+
+@functools.partial(jax.jit, static_argnames=("sq_hinge",))
+def dcd_epoch_ref(X, alpha, w, sq_norms, C, sq_hinge: bool = False):
+    """One in-order epoch. X: (n, d) dense; returns (alpha', w')."""
+
+    def body(t, carry):
+        alpha, w = carry
+        x = X[t]
+        d = _delta(alpha[t], jnp.dot(w, x), sq_norms[t], C, sq_hinge)
+        return alpha.at[t].add(d), w + d * x
+
+    alpha, w = jax.lax.fori_loop(0, X.shape[0], body, (alpha, w))
+    return alpha, w

@@ -1,0 +1,329 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: .lower().compile() every (arch × shape × mesh).
+
+The two lines above MUST stay the first statements in this module — jax
+locks the device count at first init, and only the dry-run may see 512
+placeholder devices.
+
+Per cell this driver:
+  1. builds the production mesh (16×16, or 2×16×16 with --multi-pod);
+  2. builds the cell's step function (train_step / prefill / decode) with
+     the baseline sharding rules (DESIGN.md §5);
+  3. ``jax.jit(...).lower(**ShapeDtypeStructs).compile()``;
+  4. records memory_analysis, cost_analysis, and the HLO-parsed
+     collective bytes into out/dryrun/<cell>.json for §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mamba2-780m \
+      --shape train_4k --multi-pod
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, cells_for_arch, get_config
+from repro.configs.registry import ARCHS, get_schedule
+from repro.configs.shapes import shape_applicable
+from repro.dist.sharding import (
+    ShardingRules,
+    cache_shardings,
+    param_shardings,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze_hlo, roofline_report
+from repro.launch.specs import (
+    batch_shardings_for,
+    batch_specs,
+    cache_specs,
+)
+from repro.models.transformer import param_specs
+from repro.optim.schedules import make_schedule
+from repro.serve.step import make_decode_step, make_prefill_step
+from repro.train.step import make_train_step, train_state_specs
+
+
+def microbatches_for(cfg, shape) -> int:
+    n = cfg.n_params()
+    if n >= 100e9:
+        return 8
+    if n >= 20e9:
+        return 4
+    if n >= 5e9:
+        return 2
+    # small models where activations/vocab dominate HBM (§Perf memory
+    # iterations: minicpm 32→10 GiB at mb=4, mamba2 27→14 GiB at mb=2)
+    if cfg.vocab_size > 100_000:
+        return 4
+    if cfg.family == "ssm":
+        return 2
+    return 1
+
+
+def state_dtypes_for(cfg) -> dict:
+    big = cfg.n_params() >= 20e9
+    return {
+        "dtype": jnp.bfloat16,
+        "m_dtype": jnp.bfloat16 if big else jnp.float32,
+        "v_dtype": jnp.float32,
+        "master": False,
+    }
+
+
+def _tree_shardings_like(template_sh, tree):
+    """Broadcast a params-sharding tree onto a same-structured tree."""
+    return jax.tree.map(lambda _, s: s, tree, template_sh)
+
+
+def build_train_lowering(cfg, shape, mesh, *, microbatches=None,
+                         rules=None, fsdp=True, zero1=True):
+    rules = rules or ShardingRules(mesh=mesh)
+    from repro.dist.sharding import opt_shardings
+
+    mb = microbatches or microbatches_for(cfg, shape)
+    schedule = make_schedule("cosine", peak_lr=3e-4, total_steps=10_000,
+                             warmup_steps=100)
+    dts = state_dtypes_for(cfg)
+    state_specs = train_state_specs(cfg, **dts)
+    p_sh = param_shardings(cfg, mesh, state_specs.params, fsdp=fsdp)
+    o_sh = (opt_shardings(p_sh, mesh, state_specs.params,
+                          zero1_axis="data") if zero1 else p_sh)
+    step = make_train_step(cfg, schedule=schedule, rules=rules,
+                           microbatches=mb, remat=True,
+                           acc_shardings=(o_sh if (zero1 and mb > 1)
+                                          else None))
+    rep = NamedSharding(mesh, P())
+    state_sh = state_specs._replace(
+        params=p_sh,
+        opt=state_specs.opt._replace(
+            m=_tree_shardings_like(o_sh, state_specs.opt.m),
+            v=_tree_shardings_like(o_sh, state_specs.opt.v),
+            master=None,
+            count=rep,
+        ),
+        step=rep,
+        compress=None,
+    )
+    b_specs = batch_specs(cfg, shape)
+    b_sh = batch_shardings_for(cfg, shape, mesh)
+    metrics_sh = {k: rep for k in ("loss", "aux", "lr", "grad_norm")}
+    jitted = jax.jit(
+        step,
+        in_shardings=(state_sh, b_sh),
+        out_shardings=(state_sh, metrics_sh),
+        donate_argnums=(0,),
+    )
+    return jitted.lower(state_specs, b_specs)
+
+
+def build_prefill_lowering(cfg, shape, mesh, *, microbatches=None,
+                           rules=None, fsdp=True):
+    del microbatches
+    rules = rules or ShardingRules(mesh=mesh)
+    step = make_prefill_step(cfg, rules)
+    p_specs = param_specs(cfg, jnp.bfloat16)
+    p_sh = param_shardings(cfg, mesh, p_specs, fsdp=fsdp)
+    b_specs = batch_specs(cfg, shape)
+    b_sh = batch_shardings_for(cfg, shape, mesh)
+    c_specs = cache_specs(cfg, shape)
+    c_sh = cache_shardings(cfg, mesh, c_specs, shape.global_batch)
+    rep = NamedSharding(mesh, P())
+    logits_sh = NamedSharding(mesh, P(None, None, "model"))
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_sh, b_sh, c_sh),
+        out_shardings=(logits_sh, c_sh),
+        donate_argnums=(2,),
+    )
+    return jitted.lower(p_specs, b_specs, c_specs)
+
+
+def build_decode_lowering(cfg, shape, mesh, *, microbatches=None,
+                          rules=None, fsdp=True):
+    del microbatches
+    rules = rules or ShardingRules(mesh=mesh)
+    step = make_decode_step(cfg, rules)
+    p_specs = param_specs(cfg, jnp.bfloat16)
+    p_sh = param_shardings(cfg, mesh, p_specs, fsdp=fsdp)
+    b_specs = batch_specs(cfg, shape)
+    b_sh = batch_shardings_for(cfg, shape, mesh)
+    c_specs = cache_specs(cfg, shape)
+    c_sh = cache_shardings(cfg, mesh, c_specs, shape.global_batch)
+    rep = NamedSharding(mesh, P())
+    logits_sh = NamedSharding(mesh, P(None, None, "model"))
+    token_sh = NamedSharding(mesh, P(None))
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_sh, b_sh, c_sh),
+        out_shardings=(token_sh, logits_sh, c_sh),
+        donate_argnums=(2,),
+    )
+    return jitted.lower(p_specs, b_specs, c_specs)
+
+
+BUILDERS = {
+    "train": build_train_lowering,
+    "prefill": build_prefill_lowering,
+    "decode": build_decode_lowering,
+}
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N_active·D_tokens (train) / 2·N_active·D (fwd)."""
+    n_active = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch  # one token per sequence
+    return 2.0 * n_active * tokens
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: str, microbatches=None, fsdp=True,
+             rules=None, tag="baseline", cfg_overrides=None,
+             zero1=True) -> dict:
+    import dataclasses
+
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": reason}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    t0 = time.time()
+    kw = {"zero1": zero1} if shape.kind == "train" else {}
+    lowered = BUILDERS[shape.kind](
+        cfg, shape, mesh, microbatches=microbatches, rules=rules,
+        fsdp=fsdp, **kw,
+    )
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    stats = analyze_hlo(hlo)
+    n_chips = mesh.devices.size
+    report = roofline_report(
+        stats=stats,
+        n_chips=n_chips,
+        model_flops_total=model_flops_for(cfg, shape),
+        xla_flops=float(ca.get("flops", 0.0)),
+        xla_bytes=float(ca.get("bytes accessed", 0.0)),
+    )
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "tag": tag,
+        "kind": shape.kind,
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_bytes_est": ma.argument_size_in_bytes
+            + ma.temp_size_in_bytes - ma.alias_size_in_bytes,
+        },
+        "roofline": report,
+        "n_params": cfg.n_params(),
+        "n_active_params": cfg.n_active_params(),
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fn = f"{arch}__{shape_name}__{mesh_name}__{tag}.json"
+        with open(os.path.join(out_dir, fn), "w") as f:
+            json.dump(result, f, indent=2)
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="out/dryrun")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--moe-dispatch", default=None,
+                    choices=["scatter", "einsum"])
+    ap.add_argument("--no-ep-resident", action="store_true")
+    ap.add_argument("--no-moe-remat", action="store_true")
+    ap.add_argument("--no-zero1", action="store_true")
+    args = ap.parse_args(argv)
+    overrides = {}
+    if args.moe_dispatch:
+        overrides["moe_dispatch"] = args.moe_dispatch
+    if args.no_ep_resident:
+        overrides["moe_ep_resident"] = False
+    if args.no_moe_remat:
+        overrides["moe_remat_groups"] = False
+    overrides = overrides or None
+
+    archs = list(ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                label = (f"{arch} × {shape_name} × "
+                         f"{'2x16x16' if mp else '16x16'}")
+                try:
+                    r = run_cell(
+                        arch, shape_name, multi_pod=mp, out_dir=args.out,
+                        microbatches=args.microbatches,
+                        fsdp=not args.no_fsdp, tag=args.tag,
+                        cfg_overrides=overrides,
+                        zero1=not args.no_zero1,
+                    )
+                    if r.get("skipped"):
+                        print(f"SKIP {label}: {r['skipped']}", flush=True)
+                        continue
+                    rf = r["roofline"]
+                    print(
+                        f"OK   {label}: compile={r['compile_s']}s "
+                        f"mem={r['memory']['peak_bytes_est']/2**30:.2f}GiB "
+                        f"Tc={rf['t_compute_s']:.2e} "
+                        f"Tm={rf['t_memory_s']:.2e} "
+                        f"Tx={rf['t_collective_s']:.2e} "
+                        f"dom={rf['dominant']}",
+                        flush=True,
+                    )
+                except Exception as e:  # noqa: BLE001
+                    failures.append((label, repr(e)))
+                    print(f"FAIL {label}: {e!r}", flush=True)
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for label, err in failures:
+            print(f"  {label}: {err[:200]}")
+        sys.exit(1)
+    print("\nALL CELLS PASSED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,340 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = collective_bytes_per_device / (links × link_bw)
+
+CALIBRATION FINDING (see EXPERIMENTS.md §Dry-run): XLA's
+``compiled.cost_analysis()`` reports per-device numbers but counts a
+while-loop body ONCE, not trip_count times — for scan-over-layers models
+that undercounts FLOPs/bytes by ~n_layers×.  We therefore run our own
+static analysis over the post-SPMD HLO text:
+
+  * the call graph (ENTRY → while bodies / fusion callees) is walked with
+    multiplicity = ∏ known_trip_count along the path (XLA annotates every
+    counted loop with ``backend_config={"known_trip_count":{"n":...}}``);
+  * FLOPs: every ``dot`` counts 2·∏(result dims)·∏(contraction dims);
+    convolutions count 2·∏(result)·∏(kernel)·C_in/groups; elementwise is
+    ignored (dot-dominated workloads — standard MFU convention);
+  * HBM bytes: per top-level instruction, result + operand bytes, with
+    in-place patterns special-cased (dynamic-update-slice and
+    dynamic-slice touch only the slice, not the aliased buffer);
+  * collective wire bytes per op (ring algorithms, (N−1)/N ≈ 1):
+      all-gather ≈ result, reduce-scatter ≈ result × group,
+      all-reduce ≈ 2 × result, all-to-all / permute ≈ result.
+
+Hardware constants (TPU v5e-class, per assignment): 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s
+LINK_BW = 50e9  # bytes/s per ICI link
+N_LINKS = 4  # links usable per chip in a 2D torus mesh
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%(?P<name>[\w\.\-]+)\s*=\s*")
+_OP_RE = re.compile(r"\s*(?P<op>[\w\-]+)\(")
+_COMP_HDR_RE = re.compile(
+    r"^(?P<entry>ENTRY\s+)?%?(?P<name>[\w\.\-]+)\s*\(.*\)\s*->"
+)
+_TRIP_RE = re.compile(r'known_trip_count[":{\s]+n[":\s]+"(\d+)"')
+_CALLS_RE = re.compile(r"(?:calls|body)=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_NOBYTE_OPS = {
+    "tuple", "get-tuple-element", "bitcast", "parameter", "constant",
+    "after-all", "partition-id", "replica-id", "iota", "while",
+    "conditional", "call", "custom-call", "get-dimension-size",
+}
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _parse_dims(dims: str) -> List[int]:
+    return [int(d) for d in dims.split(",") if d] if dims else []
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in _parse_dims(dims):
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(shape_str: str) -> int:
+    total = 0
+    for _dt, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        for d in _parse_dims(dims):
+            n *= d
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    bytes_by_kind: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    count_by_kind: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+
+
+class HloAnalyzer:
+    """Static per-device FLOPs / HBM-bytes / collective-bytes from
+    post-SPMD HLO text, with while-loop trip-count multipliers."""
+
+    def __init__(self, hlo_text: str):
+        self.instrs: Dict[str, dict] = {}  # global name → info
+        self.comps: Dict[str, List[str]] = defaultdict(list)
+        self.entry = None
+        self._parse(hlo_text)
+
+    @staticmethod
+    def _matched_paren(s: str, start: int) -> int:
+        """Index one past the paren closing s[start] == '('."""
+        depth = 0
+        for i in range(start, len(s)):
+            if s[i] == "(":
+                depth += 1
+            elif s[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    return i + 1
+        return len(s)
+
+    def _parse(self, text: str):
+        current = None
+        for raw in text.splitlines():
+            if raw and not raw.startswith(" ") and "->" in raw and "{" in raw:
+                m = _COMP_HDR_RE.match(raw.strip())
+                if m:
+                    current = m.group("name")
+                    if m.group("entry"):
+                        self.entry = current
+                    continue
+            if current is None:
+                continue
+            m = _NAME_RE.match(raw)
+            if not m:
+                continue
+            name = m.group("name")
+            pos = m.end()
+            # --- result shape: tuple "(...)" (may contain /*index=N*/
+            # comments) or a single "dtype[dims]{layout}"
+            if pos < len(raw) and raw[pos] == "(":
+                end = self._matched_paren(raw, pos)
+                shape = raw[pos:end]
+            else:
+                sp = raw.find(" ", pos)
+                end = sp if sp != -1 else len(raw)
+                shape = raw[pos:end]
+            mo = _OP_RE.match(raw, end)
+            if not mo:
+                continue
+            op = mo.group("op")
+            apos = mo.end() - 1  # points at '('
+            aend = self._matched_paren(raw, apos)
+            argstr = raw[apos + 1: aend - 1]
+            rest = raw[aend:]
+            args = [
+                a.strip().lstrip("%")
+                for a in re.split(r",(?![^\[\(]*[\]\)])", argstr)
+                if a.strip().startswith("%")
+            ]
+            info = {
+                "op": op, "shape": shape, "args": args, "comp": current,
+                "bytes": _shape_bytes(shape), "elems": _shape_elems(shape),
+                "rest": rest,
+            }
+            self.instrs[name] = info
+            self.comps[current].append(name)
+
+    # ---------------- per-instruction costs ----------------
+
+    def _operand_bytes(self, info) -> List[float]:
+        out = []
+        for a in info["args"]:
+            ai = self.instrs.get(a)
+            out.append(float(ai["bytes"]) if ai else 0.0)
+        return out
+
+    def _callee_ops(self, info) -> set:
+        m = _CALLS_RE.search(info["rest"])
+        if not m:
+            return set()
+        callee = m.group(1)
+        return {self.instrs[n]["op"] for n in self.comps.get(callee, ())}
+
+    def _instr_flops(self, name: str) -> float:
+        info = self.instrs[name]
+        op = info["op"]
+        if op == "dot":
+            mc = _CONTRACT_RE.search(info["rest"])
+            contract = 1
+            lhs = self.instrs.get(info["args"][0]) if info["args"] else None
+            if mc and lhs:
+                lhs_dims_match = _SHAPE_RE.search(lhs["shape"])
+                if lhs_dims_match:
+                    lhs_dims = _parse_dims(lhs_dims_match.group(2))
+                    for ci in _parse_dims(mc.group(1)):
+                        if ci < len(lhs_dims):
+                            contract *= lhs_dims[ci]
+            return 2.0 * info["elems"] * contract
+        if op == "convolution":
+            # rough: 2 · result · (kernel spatial · C_in) — parse rhs shape
+            rhs = self.instrs.get(info["args"][1]) if len(info["args"]) > 1 \
+                else None
+            if rhs:
+                rm = _SHAPE_RE.search(rhs["shape"])
+                if rm:
+                    kdims = _parse_dims(rm.group(2))
+                    k = 1
+                    for d in kdims[:-1]:  # all but output-feature dim
+                        k *= d
+                    return 2.0 * info["elems"] * k
+            return 2.0 * info["elems"]
+        return 0.0
+
+    def _instr_bytes(self, name: str) -> float:
+        info = self.instrs[name]
+        op = info["op"]
+        if op in _NOBYTE_OPS:
+            return 0.0
+        res = float(info["bytes"])
+        operands = self._operand_bytes(info)
+        if op == "dynamic-update-slice":
+            upd = operands[1] if len(operands) > 1 else 0.0
+            return 2.0 * upd
+        if op == "dynamic-slice":
+            return 2.0 * res
+        if op == "copy":
+            return 2.0 * res
+        if op == "fusion":
+            callee_ops = self._callee_ops(info)
+            if "dynamic-update-slice" in callee_ops:
+                # in-place window update: count only sub-buffer traffic
+                small = [o for o in operands if o < res]
+                return 2.0 * sum(small) + res * 0.0
+            if "dynamic-slice" in callee_ops:
+                small = [o for o in operands if o < max(operands, default=0)]
+                return res + sum(small) + res  # read slice + write result
+            return res + sum(operands)
+        if op.startswith(_COLLECTIVES):
+            return res + sum(operands)
+        return res + sum(operands)
+
+    # ---------------- call-graph walk ----------------
+
+    def analyze(self) -> HloStats:
+        stats = HloStats()
+
+        def visit(comp: str, mult: float, depth: int):
+            if depth > 64:
+                return
+            for name in self.comps.get(comp, ()):
+                info = self.instrs[name]
+                op = info["op"]
+                stats.flops += mult * self._instr_flops(name)
+                stats.bytes += mult * self._instr_bytes(name)
+                if op.startswith(_COLLECTIVES) and not op.endswith("-done"):
+                    kind = next(k for k in _COLLECTIVES if op.startswith(k))
+                    nbytes = float(info["bytes"])
+                    mg = _GROUPS_RE.search(info["rest"])
+                    gsize = int(mg.group(2)) if mg else 1
+                    if kind == "all-reduce":
+                        wire = 2.0 * nbytes
+                    elif kind == "reduce-scatter":
+                        wire = nbytes * max(gsize, 1)
+                    else:
+                        wire = nbytes
+                    stats.collective_bytes += mult * wire
+                    stats.bytes_by_kind[kind] += mult * wire
+                    stats.count_by_kind[kind] += max(int(mult), 1)
+                if op == "while":
+                    mt = _TRIP_RE.search(info["rest"])
+                    trips = int(mt.group(1)) if mt else 1
+                    mb = _CALLS_RE.search(info["rest"])
+                    if mb:
+                        visit(mb.group(1), mult * trips, depth + 1)
+                elif op == "fusion":
+                    mb = _CALLS_RE.search(info["rest"])
+                    if mb:  # only for FLOPs of fused dots; bytes handled above
+                        for n2 in self.comps.get(mb.group(1), ()):
+                            stats.flops += mult * self._instr_flops(n2)
+                elif op in ("call", "conditional"):
+                    for mb in _CALLS_RE.finditer(info["rest"]):
+                        visit(mb.group(1), mult, depth + 1)
+
+        if self.entry:
+            visit(self.entry, 1.0, 0)
+        return stats
+
+
+def analyze_hlo(hlo_text: str) -> HloStats:
+    return HloAnalyzer(hlo_text).analyze()
+
+
+def roofline_report(*, stats: HloStats, n_chips: int,
+                    model_flops_total: float,
+                    xla_flops: float = 0.0, xla_bytes: float = 0.0) -> dict:
+    t_compute = stats.flops / PEAK_FLOPS
+    t_memory = stats.bytes / HBM_BW
+    t_coll = stats.collective_bytes / (N_LINKS * LINK_BW)
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    useful = (
+        model_flops_total / (stats.flops * n_chips) if stats.flops else 0.0
+    )
+    mfu_bound = (
+        model_flops_total / n_chips / max(bound, 1e-30) / PEAK_FLOPS
+        if bound else 0.0
+    )
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "flops_per_device": stats.flops,
+        "bytes_per_device": stats.bytes,
+        "collective_bytes_per_device": stats.collective_bytes,
+        "collective_bytes_by_kind": dict(stats.bytes_by_kind),
+        "collective_count_by_kind": dict(stats.count_by_kind),
+        "model_flops_total": model_flops_total,
+        "useful_flops_fraction": useful,
+        "roofline_mfu_bound": mfu_bound,
+        "xla_cost_analysis_flops_raw": xla_flops,
+        "xla_cost_analysis_bytes_raw": xla_bytes,
+    }
+
+
+def save_report(path, report: dict):
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, default=str)

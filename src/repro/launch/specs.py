@@ -1,0 +1,85 @@
+"""``input_specs()`` — ShapeDtypeStruct stand-ins for every model input
+of every (arch × shape) cell, plus their shardings.  Weak-type-correct,
+shardable, zero allocation.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.dist.sharding import batch_sharding, cache_shardings
+from repro.models.transformer import cache_max_len, init_cache
+
+I32 = jnp.int32
+BF16 = jnp.bfloat16
+
+
+def _sd(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Model-input ShapeDtypeStructs for one cell (no cache)."""
+    B, S = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    specs = {}
+    if kind == "decode":
+        if cfg.embeds_in and not cfg.is_encdec:
+            specs["embeds"] = _sd((B, 1, cfg.d_model), BF16)
+        else:
+            specs["tokens"] = _sd((B, 1), I32)
+        if cfg.mrope_sections:
+            specs["positions"] = _sd((3, B, 1), I32)
+        return specs
+    # train / prefill — full sequence
+    if cfg.embeds_in and not cfg.is_encdec:
+        specs["embeds"] = _sd((B, S, cfg.d_model), BF16)
+    else:
+        specs["tokens"] = _sd((B, S), I32)
+    if cfg.mrope_sections:
+        specs["positions"] = _sd((3, B, S), I32)
+    if cfg.is_encdec:
+        specs["enc_embeds"] = _sd((B, cfg.enc_len, cfg.d_model), BF16)
+    if kind == "train":
+        specs["labels"] = _sd((B, S), I32)
+    return specs
+
+
+def batch_shardings_for(cfg: ModelConfig, shape: InputShape, mesh) -> dict:
+    B = shape.global_batch
+    specs = batch_specs(cfg, shape)
+    out = {}
+    for k, v in specs.items():
+        leading = 1 if k == "positions" and v.shape[0] == 3 else 0
+        out[k] = batch_sharding(mesh, B, v.ndim, leading=leading)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape):
+    """Decode-cache ShapeDtypeStructs (cache holds seq_len tokens)."""
+    B = shape.global_batch
+    max_len = cache_max_len(shape.seq_len)
+    return jax.eval_shape(lambda: init_cache(cfg, B, max_len, BF16))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, mesh=None
+                ) -> Tuple[dict, dict]:
+    """(specs, shardings) for the cell's model inputs.  For decode cells
+    the cache specs/shardings are produced by ``cache_specs`` /
+    ``cache_shardings`` and passed as a separate argument."""
+    specs = batch_specs(cfg, shape)
+    shardings = batch_shardings_for(cfg, shape, mesh) if mesh else None
+    return specs, shardings
+
+
+def cache_shardings_for(cfg: ModelConfig, shape: InputShape, mesh):
+    return cache_shardings(
+        cfg, mesh, cache_specs(cfg, shape), shape.global_batch
+    )

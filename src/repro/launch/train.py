@@ -1,0 +1,69 @@
+"""Training launcher: ``--arch <id>`` selects any assigned architecture.
+
+On this CPU container the smoke variant of the arch is trained (the full
+configs are exercised via the dry-run); on a real TPU deployment the same
+driver takes ``--full`` and the production mesh.
+
+    PYTHONPATH=src python -m repro.launch.train --arch minicpm-2b \
+        --steps 50 --batch 4 --seq 64
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.registry import ARCHS, get_config, get_schedule, \
+    get_smoke_config
+from repro.data.lm_data import MarkovCorpus, make_lm_batch
+from repro.optim.schedules import make_schedule
+from repro.train.loop import LoopConfig, run_training
+from repro.train.step import init_train_state, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--full", action="store_true",
+                    help="use the FULL config (TPU deployments)")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress", choices=["topk", "int8"], default=None,
+                    help="error-feedback gradient compression codec")
+    ap.add_argument("--ckpt-dir", default="out/train_ckpt")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
+    if cfg.embeds_in or cfg.is_encdec:
+        raise SystemExit(
+            f"{args.arch}: modality-frontend archs train via examples/ "
+            "drivers that synthesize frontend embeddings")
+    print(f"arch={cfg.name} params={cfg.n_params()/1e6:.1f}M "
+          f"schedule={get_schedule(args.arch)}")
+    state = init_train_state(cfg, jax.random.PRNGKey(0),
+                             compress=args.compress is not None)
+    schedule = make_schedule(get_schedule(args.arch), peak_lr=args.lr,
+                             total_steps=args.steps,
+                             warmup_steps=max(args.steps // 20, 2))
+    step_fn = jax.jit(make_train_step(
+        cfg, schedule=schedule, remat=False,
+        microbatches=args.microbatches, compress_codec=args.compress,
+    ), donate_argnums=0)
+    corpus = MarkovCorpus(cfg.vocab_size, seed=0)
+    state, report = run_training(
+        state, step_fn,
+        lambda t: make_lm_batch(corpus, t, batch=args.batch, seq=args.seq),
+        LoopConfig(total_steps=args.steps,
+                   ckpt_dir=f"{args.ckpt_dir}/{args.arch}",
+                   ckpt_every=max(args.steps // 4, 5), log_every=10),
+    )
+    print(f"final loss {report.losses[-1]:.4f} "
+          f"({report.final_step} steps, {report.n_failures} failures)")
+
+
+if __name__ == "__main__":
+    main()

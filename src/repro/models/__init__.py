@@ -1,0 +1,12 @@
+"""Model zoo for the 10 assigned architectures (DESIGN.md §3, §4)."""
+
+from repro.models.transformer import (
+    decode_step,
+    forward_train,
+    init_cache,
+    init_params,
+    prefill,
+)
+
+__all__ = ["init_params", "forward_train", "init_cache", "prefill",
+           "decode_step"]

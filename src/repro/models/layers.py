@@ -1,0 +1,86 @@
+"""Shared model primitives: RMSNorm, RoPE / M-RoPE, SwiGLU, initializers.
+
+All functions are pure; parameters are plain pytrees of jnp arrays.
+Matmuls run in the params' dtype (bf16 on the production mesh) with f32
+accumulation via ``preferred_element_type``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+ACC = jnp.float32
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x.astype(ACC)), axis=-1, keepdims=True)
+    out = x.astype(ACC) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(ACC)).astype(x.dtype)
+
+
+def dense(x, w):
+    """x @ w.  bf16 inputs produce bf16 dot outputs (MXU still accumulates
+    in f32 internally) so that row-parallel TP psums travel in bf16 —
+    halving activation-collective bytes (§Perf iteration); f32 inputs keep
+    f32 end-to-end."""
+    out_dtype = x.dtype if x.dtype == jnp.bfloat16 else ACC
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=out_dtype,
+    ).astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(dense(x, w_gate)) * dense(x, w_up)
+    return dense(h, w_down)
+
+
+# ---------------------------------------------------------------- RoPE ----
+
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=ACC) / half))
+
+
+def apply_rope(x, positions, theta: float, sections=None):
+    """Rotate-half RoPE.
+
+    x: (B, S, H, hd).  positions: (B, S) int32, or (3, B, S) for M-RoPE
+    with ``sections`` (s_t, s_h, s_w) summing to hd//2 — each frequency
+    band takes its angle from the temporal/height/width position stream
+    (Qwen2-VL §M-RoPE).
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = rope_freqs(hd, theta)  # (half,)
+    if sections is not None:
+        assert positions.ndim == 3 and sum(sections) == half, (
+            positions.shape, sections, half)
+        sec_id = jnp.repeat(
+            jnp.arange(3), jnp.asarray(sections), total_repeat_length=half
+        )  # (half,) which position stream drives this band
+        pos = positions.astype(ACC)[sec_id, :, :]  # (half, B, S)
+        angles = jnp.einsum("hbs,h->bsh", pos, freqs)  # (B, S, half)
+    else:
+        if positions.ndim == 3:  # M-RoPE ids fed to a non-mrope arch
+            positions = positions[0]
+        angles = positions.astype(ACC)[..., None] * freqs  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]  # (B, S, 1, half)
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(ACC), x[..., half:].astype(ACC)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- init ----
+
+
+def he_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return (jax.random.normal(key, shape, ACC) / jnp.sqrt(fan_in)).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, ACC) * 0.02).astype(dtype)

@@ -1,0 +1,236 @@
+"""Mamba2 / SSD (state-space duality) block [arXiv:2405.21060].
+
+Chunked SSD algorithm: the sequence is split into chunks of Q tokens;
+within a chunk the quadratic "attention-like" form runs on the MXU, and
+a lax.scan carries the (H, P, N) state across chunks — O(S·Q) compute,
+O(S) memory, exact recurrence:
+
+    h_t = exp(dt_t·a_h) · h_{t-1} + dt_t · B_t ⊗ x_t
+    y_t = C_t · h_t + D_h · x_t
+
+Single-group (B, C shared across heads), scalar A per head, causal
+depthwise conv (k=4) over x and (B, C).
+
+Tensor-parallel layout note: the canonical Mamba2 fuses z/x/B/C/dt into
+one in_proj; we keep them as SEPARATE matrices so that z/x/dt can be
+column-sharded by SSD *heads* over the ``model`` mesh axis while B/C
+(shared across heads, n_groups=1) stay replicated — per-head SSD is then
+embarrassingly model-parallel and the only collective is the out_proj
+row-parallel psum, mirroring attention's wo.  Identical math, different
+matmul granularity (recorded in DESIGN.md §8).
+
+All per-chunk temporaries live inside the scan body so the peak temp is
+one chunk's (B, Q, Q, H) score tensor.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ACC, dense, rms_norm
+
+
+class SsmCacheSlice(NamedTuple):
+    """Decode-time state for ONE ssm layer (stackable over layers)."""
+
+    h: jnp.ndarray  # (B, H, P, N) running SSD state, f32
+    conv_x: jnp.ndarray  # (B, k-1, d_inner) trailing pre-conv x window
+    conv_bc: jnp.ndarray  # (B, k-1, 2N) trailing pre-conv (B,C) window
+
+
+def _causal_conv(seq, conv_w, conv_b):
+    """Depthwise causal conv1d.  seq: (B, S, C); conv_w: (k, C)."""
+    k = conv_w.shape[0]
+    B, S, C = seq.shape
+    pad = jnp.zeros((B, k - 1, C), seq.dtype)
+    xp = jnp.concatenate([pad, seq], axis=1)
+    out = jnp.zeros((B, S, C), ACC)
+    for t in range(k):  # k = 4: tiny unroll, fuses to one vectorized op
+        out = out + xp[:, t: t + S].astype(ACC) * conv_w[t].astype(ACC)
+    return jax.nn.silu(out + conv_b.astype(ACC)).astype(seq.dtype)
+
+
+def _conv_step(window, new, conv_w, conv_b):
+    """One-token causal conv.  window: (B, k-1, C) past inputs; new: (B, C).
+    Returns (activated (B, C), new window)."""
+    full = jnp.concatenate([window, new[:, None, :]], axis=1)  # (B, k, C)
+    out = jnp.einsum("bkc,kc->bc", full.astype(ACC), conv_w.astype(ACC))
+    return jax.nn.silu(out + conv_b.astype(ACC)).astype(new.dtype), full[:, 1:]
+
+
+def ssd_scan(x, dt, a, Bm, Cm, chunk: int):
+    """Chunked SSD.  x: (B,S,H,P); dt: (B,S,H); a: (H,) (negative);
+    Bm, Cm: (B,S,N).  Returns y: (B,S,H,P) and final state (B,H,P,N)."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    S_orig = S
+    if S % Q:  # pad with dt=0 tokens: exp(0)=1, zero B·x ⇒ state unchanged
+        pad = Q - S % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+
+    def reshape_c(t):
+        return t.reshape((B, nc, Q) + t.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, t.ndim + 1))
+        )  # (nc, B, Q, ...)
+
+    xs = (reshape_c(x), reshape_c(dt), reshape_c(Bm), reshape_c(Cm))
+
+    def chunk_step(h, inp):
+        xc, dtc, Bc, Cc = inp  # (B,Q,H,P), (B,Q,H), (B,Q,N), (B,Q,N)
+        dtc = dtc.astype(ACC)
+        dA = dtc * a  # (B,Q,H) negative
+        cum = jnp.cumsum(dA, axis=1)  # inclusive within-chunk cumsum
+        # --- intra-chunk quadratic form
+        CB = jnp.einsum("bin,bjn->bij", Cc.astype(ACC), Bc.astype(ACC))
+        Lmat = jnp.exp(
+            cum[:, :, None, :] - cum[:, None, :, :]
+        )  # (B,Q,Q,H) decay i←j
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        scores = CB[..., None] * jnp.where(tri[None, :, :, None], Lmat, 0.0)
+        scores = scores * dtc[:, None, :, :]  # weight by dt_j
+        y_intra = jnp.einsum(
+            "bijh,bjhp->bihp", scores, xc.astype(ACC),
+            preferred_element_type=ACC,
+        )
+        # --- contribution of incoming state
+        y_inter = jnp.einsum(
+            "bin,bhpn->bihp", Cc.astype(ACC), h, preferred_element_type=ACC
+        ) * jnp.exp(cum)[..., None]
+        # --- new state
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)  # (B,Q,H)
+        wgt = decay_to_end * dtc  # (B,Q,H)
+        states = jnp.einsum(
+            "bqh,bqn,bqhp->bhpn", wgt, Bc.astype(ACC), xc.astype(ACC),
+            preferred_element_type=ACC,
+        )
+        h_new = h * jnp.exp(cum[:, -1, :])[:, :, None, None] + states
+        return h_new, (y_intra + y_inter).astype(x.dtype)
+
+    h0 = jnp.zeros((B, H, P, N), ACC)
+    h_final, ys = jax.lax.scan(chunk_step, h0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)[:, :S_orig]
+    return y, h_final
+
+
+def _project(p, u, cfg, rules):
+    """u: (B, S, D) → z, x_conv_in, bc_conv_in, dt (pre-activation)."""
+    z = rules.act(dense(u, p["in_z"]), "act_ssm_inner")
+    x = rules.act(dense(u, p["in_x"]), "act_ssm_inner")
+    bc = dense(u, p["in_bc"])
+    dt = rules.act(dense(u, p["in_dt"]), "act_ssm_dt")
+    return z, x, bc, dt
+
+
+def _finish(p, y, x, z, dt_act, cfg, rules, shape):
+    """Shared tail: D-skip, gated norm, out projection."""
+    B, S = shape
+    di = cfg.d_inner
+    y = y + p["D_skip"].astype(ACC)[None, None, :, None] * x
+    y = y.reshape(B, S, di).astype(z.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(ACC)).astype(z.dtype),
+                 p["ssm_norm"], cfg.norm_eps)
+    return dense(y, p["out_proj"])
+
+
+def mamba2_forward(p, u, cfg, rules):
+    """Full-sequence Mamba2 block.  u: (B, S, D) → (B, S, D)."""
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    B, S, D = u.shape
+    z, x_in, bc_in, dt = _project(p, u, cfg, rules)
+    x = _causal_conv(x_in, p["conv_wx"], p["conv_bx"])
+    bc = _causal_conv(bc_in, p["conv_wbc"], p["conv_bbc"])
+    Bm, Cm = bc[..., :N], bc[..., N:]
+    dt_act = jax.nn.softplus(dt.astype(ACC) + p["dt_bias"].astype(ACC))
+    a = -jnp.exp(p["A_log"].astype(ACC))
+    xh = x.reshape(B, S, H, P).astype(ACC)
+    y, _ = ssd_scan(xh, dt_act, a, Bm, Cm, cfg.ssm_chunk)
+    return _finish(p, y, xh, z, dt_act, cfg, rules, (B, S))
+
+
+def mamba2_prefill(p, u, cfg, rules):
+    """Like forward but also returns the decode cache slice."""
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    B, S, D = u.shape
+    k = cfg.conv_kernel
+    z, x_in, bc_in, dt = _project(p, u, cfg, rules)
+    x = _causal_conv(x_in, p["conv_wx"], p["conv_bx"])
+    bc = _causal_conv(bc_in, p["conv_wbc"], p["conv_bbc"])
+    Bm, Cm = bc[..., :N], bc[..., N:]
+    dt_act = jax.nn.softplus(dt.astype(ACC) + p["dt_bias"].astype(ACC))
+    a = -jnp.exp(p["A_log"].astype(ACC))
+    xh = x.reshape(B, S, H, P).astype(ACC)
+    y, h_final = ssd_scan(xh, dt_act, a, Bm, Cm, cfg.ssm_chunk)
+    out = _finish(p, y, xh, z, dt_act, cfg, rules, (B, S))
+    # trailing pre-activation conv windows (pad on the left if S < k-1)
+    def tail(seq):
+        need = k - 1
+        if seq.shape[1] < need:
+            seq = jnp.pad(seq, ((0, 0), (need - seq.shape[1], 0), (0, 0)))
+        return seq[:, seq.shape[1] - need:, :]
+
+    return out, SsmCacheSlice(h=h_final, conv_x=tail(x_in), conv_bc=tail(bc_in))
+
+
+def mamba2_decode(p, u, cache: SsmCacheSlice, cfg, rules):
+    """One-token step.  u: (B, 1, D) → (B, 1, D), new cache."""
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    B = u.shape[0]
+    u1 = u[:, 0, :]
+    z = dense(u1, p["in_z"])
+    x_new = dense(u1, p["in_x"])
+    bc_new = dense(u1, p["in_bc"])
+    dt = dense(u1, p["in_dt"])
+    x, conv_x = _conv_step(cache.conv_x, x_new, p["conv_wx"], p["conv_bx"])
+    bc, conv_bc = _conv_step(cache.conv_bc, bc_new, p["conv_wbc"],
+                             p["conv_bbc"])
+    Bm, Cm = bc[..., :N], bc[..., N:]
+    dt_act = jax.nn.softplus(dt.astype(ACC) + p["dt_bias"].astype(ACC))  # (B,H)
+    a = -jnp.exp(p["A_log"].astype(ACC))
+    dA = jnp.exp(dt_act * a)  # (B,H)
+    xh = x.reshape(B, H, P).astype(ACC)
+    h = cache.h * dA[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt_act, Bm.astype(ACC), xh
+    )
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(ACC), h)
+    y = y + p["D_skip"].astype(ACC)[None, :, None] * xh
+    y = y.reshape(B, di).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(ACC)).astype(u.dtype),
+                 p["ssm_norm"], cfg.norm_eps)
+    out = dense(y, p["out_proj"])[:, None, :]
+    return out, SsmCacheSlice(h=h, conv_x=conv_x, conv_bc=conv_bc)
+
+
+def init_ssm_params(key, cfg, dtype):
+    """One layer's Mamba2 params (unstacked)."""
+    import jax.random as jr
+
+    from repro.models.layers import he_init
+
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    D = cfg.d_model
+    k = cfg.conv_kernel
+    ks = jr.split(key, 8)
+    return {
+        "in_z": he_init(ks[0], (D, di), dtype),
+        "in_x": he_init(ks[1], (D, di), dtype),
+        "in_bc": he_init(ks[2], (D, 2 * N), dtype),
+        "in_dt": he_init(ks[3], (D, H), dtype),
+        "conv_wx": (jr.normal(ks[4], (k, di), ACC) * 0.1).astype(dtype),
+        "conv_bx": jnp.zeros((di,), dtype),
+        "conv_wbc": (jr.normal(ks[5], (k, 2 * N), ACC) * 0.1).astype(dtype),
+        "conv_bbc": jnp.zeros((2 * N,), dtype),
+        "A_log": jnp.zeros((H,), ACC),  # a = -1
+        "D_skip": jnp.ones((H,), ACC),
+        "dt_bias": jnp.full((H,), -2.0, ACC),  # softplus ≈ 0.12
+        "ssm_norm": jnp.ones((di,), dtype),
+        "out_proj": he_init(ks[6], (di, D), dtype),
+    }

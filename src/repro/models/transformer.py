@@ -1,0 +1,706 @@
+"""Model assembly for all 10 assigned architectures.
+
+Families
+  dense / moe / vlm : decoder-only transformer, lax.scan over a stacked
+                      layer pytree (compile time independent of depth)
+  ssm               : Mamba2 stack (attention-free)
+  hybrid            : Jamba — scan over *periods* of ``attn_period``
+                      sublayer slots (7×mamba + 1×attention), MoE on odd
+                      slots
+  encdec            : whisper — encoder stack + decoder stack with
+                      cross-attention
+
+Every forward comes in three lowerings: ``forward_train`` (full teacher
+forcing), ``prefill`` (same, but emits the decode cache), and
+``decode_step`` (one token against the cache).  ``rules`` is an optional
+``ShardingRules`` object — models call ``rules.act(x, name)`` at
+annotation points so the distribution layer can constrain activation
+shardings without touching model code.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import chunked_attention
+from repro.models.layers import (
+    ACC,
+    apply_rope,
+    dense,
+    embed_init,
+    he_init,
+    rms_norm,
+)
+from repro.models.moe import moe_mlp
+from repro.models.ssm import (
+    SsmCacheSlice,
+    init_ssm_params,
+    mamba2_decode,
+    mamba2_forward,
+    mamba2_prefill,
+)
+
+KV_CHUNK = 1024  # online-softmax KV chunk (divides all assigned seq lens)
+
+
+class _NoRules:
+    def act(self, x, name):  # noqa: ARG002
+        return x
+
+
+NO_RULES = _NoRules()
+
+
+def vocab_padded(cfg: ModelConfig) -> int:
+    return ((cfg.vocab_size + 255) // 256) * 256
+
+
+# ====================================================== param init =======
+
+
+def _init_attn(key, cfg, dtype):
+    D, hd = cfg.d_model, cfg.head_dim
+    Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": jnp.ones((D,), dtype),
+        "wq": he_init(ks[0], (D, Hq * hd), dtype),
+        "wk": he_init(ks[1], (D, Hkv * hd), dtype),
+        "wv": he_init(ks[2], (D, Hkv * hd), dtype),
+        "wo": he_init(ks[3], (Hq * hd, D), dtype),
+    }
+
+
+def _init_mlp(key, cfg, dtype):
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "ln": jnp.ones((D,), dtype),
+        "wg": he_init(ks[0], (D, F), dtype),
+        "wu": he_init(ks[1], (D, F), dtype),
+        "wd": he_init(ks[2], (F, D), dtype),
+    }
+
+
+def _init_moe(key, cfg, dtype):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": jnp.ones((D,), dtype),
+        "router": he_init(ks[0], (D, E), dtype),
+        "wg": he_init(ks[1], (E, D, F), dtype, fan_in=D),
+        "wu": he_init(ks[2], (E, D, F), dtype, fan_in=D),
+        "wd": he_init(ks[3], (E, F, D), dtype, fan_in=F),
+    }
+
+
+def _init_ssm_layer(key, cfg, dtype):
+    p = init_ssm_params(key, cfg, dtype)
+    p["ln"] = jnp.ones((cfg.d_model,), dtype)
+    return p
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _stacked(init_fn, key, n, cfg, dtype):
+    return _stack([init_fn(k, cfg, dtype) for k in jax.random.split(key, n)])
+
+
+def hybrid_slot_kinds(cfg: ModelConfig):
+    """[(block_kind, mlp_kind)] for the ``attn_period`` sublayer slots."""
+    kinds = []
+    for i in range(cfg.attn_period):
+        block = "attn" if i == cfg.attn_period - 1 else "ssm"
+        mlp = (
+            "moe"
+            if cfg.n_experts and (i % cfg.moe_every == cfg.moe_offset)
+            else "mlp"
+        )
+        kinds.append((block, mlp))
+    return kinds
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Dict[str, Any]:
+    Vp, D = vocab_padded(cfg), cfg.d_model
+    keys = jax.random.split(key, 12)
+    params: Dict[str, Any] = {
+        "embed": embed_init(keys[0], (Vp, D), dtype),
+        "final_norm": jnp.ones((D,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(keys[1], (Vp, D), dtype)
+
+    if cfg.family in ("dense", "vlm"):
+        params["attn"] = _stacked(_init_attn, keys[2], cfg.n_layers, cfg, dtype)
+        params["mlp"] = _stacked(_init_mlp, keys[3], cfg.n_layers, cfg, dtype)
+    elif cfg.family == "moe":
+        params["attn"] = _stacked(_init_attn, keys[2], cfg.n_layers, cfg, dtype)
+        params["moe"] = _stacked(_init_moe, keys[3], cfg.n_layers, cfg, dtype)
+    elif cfg.family == "ssm":
+        params["ssm"] = _stacked(
+            _init_ssm_layer, keys[2], cfg.n_layers, cfg, dtype
+        )
+    elif cfg.family == "hybrid":
+        n_periods = cfg.n_layers // cfg.attn_period
+        slots = []
+        for i, (block, mlp) in enumerate(hybrid_slot_kinds(cfg)):
+            kb, km = jax.random.split(jax.random.fold_in(keys[2], i))
+            slot = {
+                "block": _stacked(
+                    _init_attn if block == "attn" else _init_ssm_layer,
+                    kb, n_periods, cfg, dtype,
+                ),
+                "mlp": _stacked(
+                    _init_moe if mlp == "moe" else _init_mlp,
+                    km, n_periods, cfg, dtype,
+                ),
+            }
+            slots.append(slot)
+        params["periods"] = slots
+    elif cfg.family == "encdec":
+        params["enc_attn"] = _stacked(
+            _init_attn, keys[2], cfg.n_enc_layers, cfg, dtype
+        )
+        params["enc_mlp"] = _stacked(
+            _init_mlp, keys[3], cfg.n_enc_layers, cfg, dtype
+        )
+        params["enc_norm"] = jnp.ones((D,), dtype)
+        params["enc_pos"] = embed_init(keys[4], (cfg.enc_len, D), dtype)
+        params["attn"] = _stacked(_init_attn, keys[5], cfg.n_layers, cfg, dtype)
+        params["cross"] = _stacked(_init_attn, keys[6], cfg.n_layers, cfg, dtype)
+        params["mlp"] = _stacked(_init_mlp, keys[7], cfg.n_layers, cfg, dtype)
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+def param_specs(cfg: ModelConfig, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree — no allocation (dry-run path)."""
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k, dtype), jax.random.PRNGKey(0)
+    )
+
+
+# ====================================================== blocks ===========
+
+
+def _attn_block(p, x, positions, cfg, rules, *, kv_chunk=KV_CHUNK,
+                cache=None, cache_len=None):
+    """Pre-norm attention with residual.  cache: (k, v) slices each
+    (B, S_max, Hkv, hd) → returns updated (k, v)."""
+    B, S, D = x.shape
+    hd, Hq, Hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    q = dense(h, p["wq"]).reshape(B, S, Hq, hd)
+    k = dense(h, p["wk"]).reshape(B, S, Hkv, hd)
+    v = dense(h, p["wv"]).reshape(B, S, Hkv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    # decode uses its own constraints: q/k/v are tiny at Sq=1 and must be
+    # heads-REPLICATED so they compose with the S-sharded cache (split-KV)
+    # instead of dragging the cache into a head-resharding.
+    sfx = "" if cache is None else "_dec"
+    q, k, v = (rules.act(q, "act_q" + sfx), rules.act(k, "act_kv" + sfx),
+               rules.act(v, "act_kv" + sfx))
+    if cache is None:
+        # train/prefill: ≤4k sequences take the single-chunk direct path
+        # (no online-softmax carries → ~2.7× fewer HBM passes over the
+        # score tensor, §Perf iteration); longer sequences stay chunked
+        # to bound the live score tensor.
+        chunk = S if S <= 4096 else min(kv_chunk, S)
+        out = chunked_attention(q, k, v, causal=True, kv_chunk=chunk)
+        new_cache = (k, v)
+    else:
+        ck, cv = cache
+        # one-hot (where-mask) cache write: a dynamic_update_slice at a
+        # dynamic offset on the S-sharded dim would force GSPMD to
+        # all-gather the whole cache; the mask update is shard-local.
+        slot = (jnp.arange(ck.shape[1]) == cache_len)[None, :, None, None]
+        ck = jnp.where(slot, k.astype(ck.dtype), ck)
+        cv = jnp.where(slot, v.astype(cv.dtype), cv)
+        ck, cv = rules.act(ck, "cache"), rules.act(cv, "cache")
+        out = chunked_attention(
+            q, ck, cv, causal=False, q_offset=cache_len,
+            kv_len=cache_len + S, kv_chunk=min(kv_chunk, ck.shape[1]),
+        )
+        new_cache = (ck, cv)
+    out = out.reshape(B, S, Hq * hd)
+    if cache is not None:
+        # stop wo's row-sharding from back-propagating head-sharding
+        # through the softmax into the S-sharded cache
+        out = rules.act(out, "act_attn_out_dec")
+    out = dense(out, p["wo"])
+    return x + out, new_cache
+
+
+def _cross_attn_block(p, x, cfg, rules, *, enc_out=None, cross_cache=None):
+    """Cross-attention (whisper decoder).  Either enc_out (prefill: build
+    the cross cache) or cross_cache (decode) must be given."""
+    B, S, D = x.shape
+    hd, Hq, Hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    q = dense(h, p["wq"]).reshape(B, S, Hq, hd)
+    if cross_cache is None:
+        k = dense(enc_out, p["wk"]).reshape(B, -1, Hkv, hd)
+        v = dense(enc_out, p["wv"]).reshape(B, -1, Hkv, hd)
+    else:
+        k, v = cross_cache
+    out = chunked_attention(
+        q, k, v, causal=False, kv_chunk=min(KV_CHUNK, k.shape[1])
+    )
+    out = dense(out.reshape(B, S, Hq * hd), p["wo"])
+    return x + out, (k, v)
+
+
+def _mlp_block(p, x, cfg, rules):
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    h = rules.act(h, "act_mlp_in")
+    from repro.models.layers import swiglu
+
+    return x + swiglu(h, p["wg"], p["wu"], p["wd"])
+
+
+def _moe_block(p, x, cfg, rules, no_drop: bool = False):
+    B, S, D = x.shape
+    h = rms_norm(x, p["ln"], cfg.norm_eps).reshape(B * S, D)
+    group = min(2048, B * S)
+    # serving (no_drop) capacity is C=g; the einsum one-hot combine is
+    # then O(g²·E) work/memory, acceptable only when experts dwarf it.
+    # Rule of thumb from §Perf: scatter when dispatch/expert FLOP ratio
+    # g/(3·d_ff) > ~0.5 (fine-grained experts, e.g. granite d_ff=512).
+    dispatch = cfg.moe_dispatch
+    if no_drop and 3 * cfg.d_ff < 2 * group:
+        dispatch = "scatter"
+    out, aux = moe_mlp(
+        h, p["router"], p["wg"], p["wu"], p["wd"],
+        top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+        group_size=group, no_drop=no_drop, dispatch=dispatch,
+        remat_groups=cfg.moe_remat_groups, rules=rules,
+    )
+    return x + out.reshape(B, S, D), aux
+
+
+def _ssm_block(p, x, cfg, rules, *, cache=None, mode="train"):
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    if mode == "train":
+        return x + mamba2_forward(p, h, cfg, rules), None
+    if mode == "prefill":
+        out, slice_ = mamba2_prefill(p, h, cfg, rules)
+        return x + out, slice_
+    out, slice_ = mamba2_decode(p, h, cache, cfg, rules)
+    return x + out, slice_
+
+
+# ====================================================== embeddings =======
+
+
+def _embed_in(cfg, params, batch, rules):
+    if cfg.embeds_in and "embeds" in batch:
+        x = batch["embeds"]
+    else:
+        x = params["embed"][batch["tokens"]]
+    return rules.act(x, "act_resid")
+
+
+def _logits_out(cfg, params, x, rules):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jax.lax.dot_general(
+        x, head, (((x.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=ACC,
+    )
+    return rules.act(logits, "act_logits")
+
+
+def _positions(batch, B, S):
+    if "positions" in batch:
+        return batch["positions"]
+    return jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+
+# ====================================================== forward_train ====
+
+
+def forward_train(cfg: ModelConfig, params, batch, rules=NO_RULES,
+                  remat: bool = True, moe_no_drop: bool = False):
+    """Teacher-forced logits.  Returns (logits (B,S,Vp), aux_loss).
+    ``moe_no_drop`` disables MoE token dropping (parity tests)."""
+    if cfg.family == "encdec":
+        return _encdec_forward(cfg, params, batch, rules, remat)
+    x = _embed_in(cfg, params, batch, rules)
+    B, S = x.shape[:2]
+    positions = _positions(batch, B, S)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        is_moe = cfg.family == "moe"
+
+        def layer(x, lp):
+            x, _ = _attn_block(lp["attn"], x, positions, cfg, rules)
+            if is_moe:
+                x, aux = _moe_block(lp["moe"], x, cfg, rules,
+                                    no_drop=moe_no_drop)
+            else:
+                x = _mlp_block(lp["mlp"], x, cfg, rules)
+                aux = jnp.zeros((), ACC)
+            return rules.act(x, "act_resid"), aux
+
+        body = jax.checkpoint(layer) if remat else layer
+        stacked = {"attn": params["attn"]}
+        stacked["moe" if is_moe else "mlp"] = params["moe" if is_moe else "mlp"]
+        x, auxs = jax.lax.scan(body, x, stacked)
+        aux = jnp.sum(auxs)
+    elif cfg.family == "ssm":
+
+        def layer(x, lp):
+            x, _ = _ssm_block(lp, x, cfg, rules, mode="train")
+            return rules.act(x, "act_resid"), ()
+
+        body = jax.checkpoint(layer) if remat else layer
+        x, _ = jax.lax.scan(body, x, params["ssm"])
+        aux = jnp.zeros((), ACC)
+    elif cfg.family == "hybrid":
+        kinds = hybrid_slot_kinds(cfg)
+
+        def period(x, slot_params):
+            aux = jnp.zeros((), ACC)
+            for i, (block, mlp) in enumerate(kinds):
+                sp = slot_params[i]
+                if block == "attn":
+                    x, _ = _attn_block(sp["block"], x, positions, cfg, rules)
+                else:
+                    x, _ = _ssm_block(sp["block"], x, cfg, rules, mode="train")
+                if mlp == "moe":
+                    x, a = _moe_block(sp["mlp"], x, cfg, rules,
+                                      no_drop=moe_no_drop)
+                    aux = aux + a
+                else:
+                    x = _mlp_block(sp["mlp"], x, cfg, rules)
+                x = rules.act(x, "act_resid")
+            return x, aux
+
+        body = jax.checkpoint(period) if remat else period
+        x, auxs = jax.lax.scan(body, x, params["periods"])
+        aux = jnp.sum(auxs)
+    else:
+        raise ValueError(cfg.family)
+    return _logits_out(cfg, params, x, rules), aux
+
+
+def _encoder(cfg, params, enc_embeds, rules, remat):
+    x = enc_embeds + params["enc_pos"][None, : enc_embeds.shape[1]]
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def layer(x, lp):
+        h = rms_norm(x, lp["attn"]["ln"], cfg.norm_eps)
+        hd, Hq, Hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+        q = dense(h, lp["attn"]["wq"]).reshape(B, S, Hq, hd)
+        k = dense(h, lp["attn"]["wk"]).reshape(B, S, Hkv, hd)
+        v = dense(h, lp["attn"]["wv"]).reshape(B, S, Hkv, hd)
+        out = chunked_attention(q, k, v, causal=False,
+                                kv_chunk=min(KV_CHUNK, S))
+        x = x + dense(out.reshape(B, S, Hq * hd), lp["attn"]["wo"])
+        x = _mlp_block(lp["mlp"], x, cfg, rules)
+        return x, ()
+
+    body = jax.checkpoint(layer) if remat else layer
+    x, _ = jax.lax.scan(
+        body, x, {"attn": params["enc_attn"], "mlp": params["enc_mlp"]}
+    )
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _encdec_forward(cfg, params, batch, rules, remat):
+    enc_out = _encoder(cfg, params, batch["enc_embeds"], rules, remat)
+    x = params["embed"][batch["tokens"]]
+    B, S = x.shape[:2]
+    positions = _positions(batch, B, S)
+
+    def layer(x, lp):
+        x, _ = _attn_block(lp["attn"], x, positions, cfg, rules)
+        x, _ = _cross_attn_block(lp["cross"], x, cfg, rules, enc_out=enc_out)
+        x = _mlp_block(lp["mlp"], x, cfg, rules)
+        return rules.act(x, "act_resid"), ()
+
+    body = jax.checkpoint(layer) if remat else layer
+    stacked = {
+        "attn": params["attn"], "cross": params["cross"], "mlp": params["mlp"]
+    }
+    x, _ = jax.lax.scan(body, x, stacked)
+    return _logits_out(cfg, params, x, rules), jnp.zeros((), ACC)
+
+
+# ====================================================== caches ===========
+
+
+class Cache(NamedTuple):
+    """Decode cache — any field may be None depending on family."""
+
+    attn_k: Optional[jnp.ndarray]  # (L_attn, B, S_max, Hkv, hd)
+    attn_v: Optional[jnp.ndarray]
+    ssm: Optional[SsmCacheSlice]  # stacked (L_ssm, ...) fields
+    cross_k: Optional[jnp.ndarray]  # (L, B, S_enc, Hkv, hd) — encdec
+    cross_v: Optional[jnp.ndarray]
+    length: jnp.ndarray  # scalar int32 — tokens already cached
+
+
+def cache_max_len(seq_len: int) -> int:
+    """seq_len cached tokens + headroom, rounded to the KV chunk."""
+    return ((seq_len + KV_CHUNK) // KV_CHUNK) * KV_CHUNK
+
+
+def _n_attn_ssm_layers(cfg):
+    if cfg.family == "ssm":
+        return 0, cfg.n_layers
+    if cfg.family == "hybrid":
+        n_periods = cfg.n_layers // cfg.attn_period
+        return n_periods, cfg.n_layers - n_periods
+    return cfg.n_layers, 0
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
+               dtype=jnp.bfloat16) -> Cache:
+    n_attn, n_ssm = _n_attn_ssm_layers(cfg)
+    hd, Hkv = cfg.head_dim, cfg.n_kv_heads
+    attn_k = attn_v = ssm = cross_k = cross_v = None
+    if n_attn:
+        shape = (n_attn, batch_size, max_len, Hkv, hd)
+        attn_k = jnp.zeros(shape, dtype)
+        attn_v = jnp.zeros(shape, dtype)
+    if n_ssm:
+        H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        ssm = SsmCacheSlice(
+            h=jnp.zeros((n_ssm, batch_size, H, P, N), ACC),
+            conv_x=jnp.zeros(
+                (n_ssm, batch_size, cfg.conv_kernel - 1, cfg.d_inner), dtype
+            ),
+            conv_bc=jnp.zeros(
+                (n_ssm, batch_size, cfg.conv_kernel - 1, 2 * cfg.ssm_state),
+                dtype,
+            ),
+        )
+    if cfg.is_encdec:
+        shape = (cfg.n_layers, batch_size, cfg.enc_len, Hkv, hd)
+        cross_k = jnp.zeros(shape, dtype)
+        cross_v = jnp.zeros(shape, dtype)
+    return Cache(attn_k, attn_v, ssm, cross_k, cross_v,
+                 jnp.zeros((), jnp.int32))
+
+
+# ====================================================== prefill ==========
+
+
+def prefill(cfg: ModelConfig, params, batch, cache: Cache, rules=NO_RULES):
+    """Run the full prompt, fill the cache.  Returns (last_logits, cache)."""
+    x = _embed_in(cfg, params, batch, rules)
+    B, S = x.shape[:2]
+    positions = _positions(batch, B, S)
+    max_len = cache.attn_k.shape[2] if cache.attn_k is not None else 0
+
+    def pad_kv(kv):  # (B,S,Hkv,hd) → (B,max_len,Hkv,hd)
+        pad = max_len - kv.shape[1]
+        return jnp.pad(kv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = _encoder(cfg, params, batch["enc_embeds"], rules, False)
+
+    if cfg.family in ("dense", "vlm", "moe", "encdec"):
+        is_moe = cfg.family == "moe"
+
+        def layer(x, lp):
+            x, (k, v) = _attn_block(lp["attn"], x, positions, cfg, rules)
+            ck = cv = None
+            if cfg.is_encdec:
+                x, (ck, cv) = _cross_attn_block(
+                    lp["cross"], x, cfg, rules, enc_out=enc_out
+                )
+            if is_moe:
+                x, _ = _moe_block(lp["moe"], x, cfg, rules, no_drop=True)
+            else:
+                x = _mlp_block(lp["mlp"], x, cfg, rules)
+            return rules.act(x, "act_resid"), (pad_kv(k), pad_kv(v), ck, cv)
+
+        stacked = {"attn": params["attn"]}
+        stacked["moe" if is_moe else "mlp"] = params["moe" if is_moe else "mlp"]
+        if cfg.is_encdec:
+            stacked["cross"] = params["cross"]
+        x, (ks, vs, cks, cvs) = jax.lax.scan(layer, x, stacked)
+        cache = cache._replace(attn_k=ks, attn_v=vs)
+        if cfg.is_encdec:
+            cache = cache._replace(cross_k=cks, cross_v=cvs)
+    elif cfg.family == "ssm":
+
+        def layer(x, lp):
+            x, slice_ = _ssm_block(lp, x, cfg, rules, mode="prefill")
+            return rules.act(x, "act_resid"), slice_
+
+        x, slices = jax.lax.scan(layer, x, params["ssm"])
+        cache = cache._replace(ssm=slices)
+    elif cfg.family == "hybrid":
+        kinds = hybrid_slot_kinds(cfg)
+
+        def period(x, slot_params):
+            outs = []
+            for i, (block, mlp) in enumerate(kinds):
+                sp = slot_params[i]
+                if block == "attn":
+                    x, (k, v) = _attn_block(sp["block"], x, positions, cfg,
+                                            rules)
+                    outs.append((pad_kv(k), pad_kv(v)))
+                else:
+                    x, slice_ = _ssm_block(sp["block"], x, cfg, rules,
+                                           mode="prefill")
+                    outs.append(slice_)
+                if mlp == "moe":
+                    x, _ = _moe_block(sp["mlp"], x, cfg, rules, no_drop=True)
+                else:
+                    x = _mlp_block(sp["mlp"], x, cfg, rules)
+                x = rules.act(x, "act_resid")
+            return x, tuple(outs)
+
+        x, outs = jax.lax.scan(period, x, params["periods"])
+        # slot outputs: ssm slots 0..p-2, attn slot p-1
+        ssm_slices = [outs[i] for i in range(len(kinds) - 1)]
+        ssm = SsmCacheSlice(
+            h=jnp.concatenate([s.h for s in ssm_slices], axis=0),
+            conv_x=jnp.concatenate([s.conv_x for s in ssm_slices], axis=0),
+            conv_bc=jnp.concatenate([s.conv_bc for s in ssm_slices], axis=0),
+        )
+        k, v = outs[-1]
+        cache = cache._replace(attn_k=k, attn_v=v, ssm=ssm)
+    else:
+        raise ValueError(cfg.family)
+
+    logits = _logits_out(cfg, params, x[:, -1:, :], rules)
+    return logits, cache._replace(length=jnp.asarray(S, jnp.int32))
+
+
+# ====================================================== decode ===========
+
+
+def decode_step(cfg: ModelConfig, params, batch, cache: Cache,
+                rules=NO_RULES):
+    """One new token.  batch: {'tokens': (B,1)} or {'embeds': (B,1,D)};
+    positions default to cache.length.  Returns (logits (B,1,Vp), cache)."""
+    x = _embed_in(cfg, params, batch, rules)
+    B = x.shape[0]
+    L = cache.length
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(L[None, None], (B, 1)).astype(jnp.int32)
+
+    if cfg.family in ("dense", "vlm", "moe", "encdec"):
+        is_moe = cfg.family == "moe"
+
+        def layer(x, lp):
+            x, (ck, cv) = _attn_block(
+                lp["attn"], x, positions, cfg, rules,
+                cache=(lp["_ck"], lp["_cv"]), cache_len=L,
+            )
+            if cfg.is_encdec:
+                x, _ = _cross_attn_block(
+                    lp["cross"], x, cfg, rules,
+                    cross_cache=(lp["_xk"], lp["_xv"]),
+                )
+            if is_moe:
+                x, _ = _moe_block(lp["moe"], x, cfg, rules, no_drop=True)
+            else:
+                x = _mlp_block(lp["mlp"], x, cfg, rules)
+            return x, (ck, cv)
+
+        stacked = {
+            "attn": params["attn"], "_ck": cache.attn_k, "_cv": cache.attn_v
+        }
+        stacked["moe" if is_moe else "mlp"] = params["moe" if is_moe else "mlp"]
+        if cfg.is_encdec:
+            stacked["cross"] = params["cross"]
+            stacked["_xk"], stacked["_xv"] = cache.cross_k, cache.cross_v
+        x, (ks, vs) = jax.lax.scan(layer, x, stacked)
+        cache = cache._replace(attn_k=ks, attn_v=vs)
+    elif cfg.family == "ssm":
+
+        def layer(x, lp):
+            sl = SsmCacheSlice(h=lp["_h"], conv_x=lp["_cx"], conv_bc=lp["_cbc"])
+            x, new_sl = _ssm_block(lp, x, cfg, rules, cache=sl, mode="decode")
+            return x, new_sl
+
+        stacked = dict(params["ssm"])
+        stacked["_h"] = cache.ssm.h
+        stacked["_cx"], stacked["_cbc"] = cache.ssm.conv_x, cache.ssm.conv_bc
+        x, slices = jax.lax.scan(layer, x, stacked)
+        cache = cache._replace(ssm=slices)
+    elif cfg.family == "hybrid":
+        kinds = hybrid_slot_kinds(cfg)
+        n_periods = cfg.n_layers // cfg.attn_period
+        n_ssm_slots = len(kinds) - 1
+
+        def per_slot(t):  # (n_slots·n_periods, ...) → (n_periods, n_slots, ...)
+            t = t.reshape((n_ssm_slots, n_periods) + t.shape[1:])
+            return t.transpose((1, 0) + tuple(range(2, t.ndim)))
+
+        ssm_h = per_slot(cache.ssm.h)
+        ssm_cx = per_slot(cache.ssm.conv_x)
+        ssm_cbc = per_slot(cache.ssm.conv_bc)
+
+        def period(x, slot_params):
+            new_ssm, new_attn = [], None
+            for i, (block, mlp) in enumerate(kinds):
+                sp = slot_params[f"slot{i}"]
+                if block == "attn":
+                    x, kv = _attn_block(
+                        sp["block"], x, positions, cfg, rules,
+                        cache=(slot_params["_ck"], slot_params["_cv"]),
+                        cache_len=L,
+                    )
+                    new_attn = kv
+                else:
+                    sl = SsmCacheSlice(
+                        h=slot_params["_h"][i],
+                        conv_x=slot_params["_cx"][i],
+                        conv_bc=slot_params["_cbc"][i],
+                    )
+                    x, new_sl = _ssm_block(sp["block"], x, cfg, rules,
+                                           cache=sl, mode="decode")
+                    new_ssm.append(new_sl)
+                if mlp == "moe":
+                    x, _ = _moe_block(sp["mlp"], x, cfg, rules, no_drop=True)
+                else:
+                    x = _mlp_block(sp["mlp"], x, cfg, rules)
+            stacked_ssm = SsmCacheSlice(
+                h=jnp.stack([s.h for s in new_ssm]),
+                conv_x=jnp.stack([s.conv_x for s in new_ssm]),
+                conv_bc=jnp.stack([s.conv_bc for s in new_ssm]),
+            )
+            return x, (stacked_ssm, new_attn)
+
+        xs = {f"slot{i}": sp for i, sp in enumerate(params["periods"])}
+        xs["_ck"], xs["_cv"] = cache.attn_k, cache.attn_v
+        xs["_h"], xs["_cx"], xs["_cbc"] = ssm_h, ssm_cx, ssm_cbc
+        x, (ssm_out, (ks, vs)) = jax.lax.scan(period, x, xs)
+
+        # ssm_out fields: (n_periods, n_slots, ...) → (n_slots·n_periods, ...)
+        def unslot(t):
+            t = t.transpose((1, 0) + tuple(range(2, t.ndim)))
+            return t.reshape((-1,) + t.shape[2:])
+
+        cache = cache._replace(
+            attn_k=ks, attn_v=vs,
+            ssm=SsmCacheSlice(
+                h=unslot(ssm_out.h),
+                conv_x=unslot(ssm_out.conv_x),
+                conv_bc=unslot(ssm_out.conv_bc),
+            ),
+        )
+    else:
+        raise ValueError(cfg.family)
+
+    logits = _logits_out(cfg, params, x, rules)
+    return logits, cache._replace(length=L + 1)

@@ -1,0 +1,19 @@
+"""Optimizers, LR schedules, gradient compression."""
+
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedules import make_schedule
+from repro.optim.grad_compress import (
+    CompressState,
+    compress_init,
+    compressed_grads,
+)
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "make_schedule",
+    "CompressState",
+    "compress_init",
+    "compressed_grads",
+]

@@ -1,0 +1,68 @@
+"""Gradient compression with error feedback (distributed-optimization
+trick for the DP all-reduce at 1000+ node scale).
+
+Two codecs:
+  * ``topk``  — per-tensor magnitude top-k with error-feedback residual
+                (Stich et al., 2018): only k fractions of the gradient
+                participate in the cross-pod reduction; the residual is
+                added back next step, preserving convergence.
+  * ``int8``  — per-tensor symmetric int8 quantization with error
+                feedback; 4× reduction bytes vs f32 (2× vs bf16).
+
+Semantics note: compression is applied to the *global* gradient inside
+the jitted step (decode→reduce is what the compiler sees); on a real
+multi-pod deployment the codec sits on the cross-pod (DCN) reduction
+boundary, which is exactly where the dry-run's ``pod`` axis places the
+collectives.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressState(NamedTuple):
+    residual: Any  # error-feedback carry, same tree as grads
+
+
+def compress_init(params) -> CompressState:
+    return CompressState(
+        jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    )
+
+
+def _topk_one(g, frac: float):
+    flat = g.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = jnp.abs(flat) >= thresh
+    kept = jnp.where(mask, flat, 0.0)
+    return kept.reshape(g.shape)
+
+
+def _int8_one(g):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_grads(grads, state: CompressState, *, codec: str = "topk",
+                     topk_frac: float = 0.05):
+    """Apply codec with error feedback.  Returns (grads', new_state)."""
+    def one(g, r):
+        acc = g.astype(jnp.float32) + r
+        if codec == "topk":
+            sent = _topk_one(acc, topk_frac)
+        elif codec == "int8":
+            sent = _int8_one(acc)
+        else:
+            raise ValueError(codec)
+        return sent.astype(g.dtype), acc - sent
+
+    outs = jax.tree.map(one, grads, state.residual)
+    sent = jax.tree.map(lambda o: o[0], outs, is_leaf=lambda x: isinstance(x, tuple))
+    resid = jax.tree.map(lambda o: o[1], outs, is_leaf=lambda x: isinstance(x, tuple))
+    return sent, CompressState(resid)

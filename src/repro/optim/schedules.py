@@ -1,0 +1,67 @@
+"""LR schedules: cosine, linear, and WSD (warmup-stable-decay — the
+MiniCPM schedule [arXiv:2404.06395], selected by the minicpm-2b config).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_schedule(kind: str, *, peak_lr: float, total_steps: int,
+                  warmup_steps: int = 0, final_frac: float = 0.1,
+                  stable_frac: float = 0.8):
+    """Returns step → lr (jnp scalar fn)."""
+    warmup_steps = max(warmup_steps, 1)
+
+    def warmup(step):
+        # step+1 so the very first step has a nonzero lr
+        return peak_lr * jnp.minimum(1.0, (step + 1.0) / warmup_steps)
+
+    if kind == "cosine":
+
+        def lr(step):
+            step = jnp.asarray(step, jnp.float32)
+            t = jnp.clip(
+                (step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                0.0, 1.0,
+            )
+            cos = final_frac + (1 - final_frac) * 0.5 * (
+                1 + jnp.cos(jnp.pi * t)
+            )
+            return jnp.where(step < warmup_steps, warmup(step), peak_lr * cos)
+
+        return lr
+    if kind == "linear":
+
+        def lr(step):
+            step = jnp.asarray(step, jnp.float32)
+            t = jnp.clip(
+                (step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                0.0, 1.0,
+            )
+            return jnp.where(
+                step < warmup_steps, warmup(step),
+                peak_lr * (1 - (1 - final_frac) * t),
+            )
+
+        return lr
+    if kind == "wsd":
+        stable_end = warmup_steps + int(
+            (total_steps - warmup_steps) * stable_frac
+        )
+
+        def lr(step):
+            step = jnp.asarray(step, jnp.float32)
+            decay_t = jnp.clip(
+                (step - stable_end) / max(total_steps - stable_end, 1),
+                0.0, 1.0,
+            )
+            # exponential-ish fast decay phase (MiniCPM uses ~10% of steps)
+            decay = final_frac ** decay_t
+            return jnp.where(
+                step < warmup_steps, warmup(step),
+                jnp.where(step < stable_end, peak_lr, peak_lr * decay),
+            )
+
+        return lr
+    raise ValueError(kind)

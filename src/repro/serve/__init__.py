@@ -1,0 +1,5 @@
+"""Serving: KV/state caches, prefill + decode steps, batching."""
+
+from repro.serve.step import make_decode_step, make_prefill_step
+
+__all__ = ["make_prefill_step", "make_decode_step"]

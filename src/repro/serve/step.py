@@ -1,0 +1,25 @@
+"""Serving step factories (prefill / decode) — thin jittable wrappers
+around the model zoo's cache-aware forwards."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import NO_RULES, decode_step, prefill
+
+
+def make_prefill_step(cfg: ModelConfig, rules=NO_RULES):
+    def step(params, batch, cache):
+        return prefill(cfg, params, batch, cache, rules)
+
+    return step
+
+
+def make_decode_step(cfg: ModelConfig, rules=NO_RULES, *, greedy=True):
+    def step(params, batch, cache):
+        logits, cache = decode_step(cfg, params, batch, cache, rules)
+        token = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1)
+        return token.astype(jnp.int32), logits, cache
+
+    return step

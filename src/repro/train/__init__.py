@@ -1,0 +1,5 @@
+"""Training: step factory, loop, checkpointing, fault tolerance."""
+
+from repro.train.step import TrainState, make_train_step, train_state_specs
+
+__all__ = ["TrainState", "make_train_step", "train_state_specs"]

@@ -1,0 +1,137 @@
+"""Checkpointing: atomic, content-hashed, elastic-restore.
+
+Design for 1000+ nodes (documented; exercised here single-process):
+  * step-scoped directories ``ckpt_<step>/`` written via tmp + atomic
+    rename — a crash mid-write can never corrupt the latest checkpoint;
+  * a ``manifest.json`` with per-leaf shapes/dtypes and a content hash —
+    restore validates integrity before touching the training state;
+  * leaves are stored by *pytree path*, not device layout, so a restore
+    may target a DIFFERENT mesh (elastic scaling: re-shard on load via
+    ``jax.device_put`` with the new shardings);
+  * on a real multi-host deployment each host writes its addressable
+    shards (process-sliced npz) and the manifest records the global
+    shape — the single-process code path here is the degenerate case.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(e, "key", getattr(e, "name", getattr(e, "idx", "?"))))
+            for e in path
+        )
+        names.append(name)
+        leaves.append(leaf)
+    return names, leaves, treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, state) -> str:
+    """Write ``<ckpt_dir>/ckpt_<step>`` atomically.  Returns the path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    names, leaves, _ = _flatten_with_names(state)
+    arrays = {}
+    manifest = {"step": int(step), "leaves": {}}
+    hasher = hashlib.sha256()
+    for i, (name, leaf) in enumerate(zip(names, leaves)):
+        arr = np.asarray(jax.device_get(leaf))
+        key = f"leaf_{i}"
+        arrays[key] = arr
+        manifest["leaves"][key] = {
+            "name": name, "shape": list(arr.shape), "dtype": str(arr.dtype)
+        }
+        hasher.update(arr.tobytes()[:4096])  # prefix hash: cheap integrity
+    manifest["content_hash"] = hasher.hexdigest()
+    final = os.path.join(ckpt_dir, f"ckpt_{step}")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_ckpt_")
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("ckpt_"):
+            try:
+                steps.append(int(d.split("_")[1]))
+            except ValueError:
+                continue
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, state_template,
+                       shardings=None, *, validate: bool = True):
+    """Load ``ckpt_<step>`` into the template's structure.  If
+    ``shardings`` (same pytree) is given, leaves are placed with those —
+    this is the elastic-resharding path (works across mesh changes)."""
+    path = os.path.join(ckpt_dir, f"ckpt_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    names, leaves, treedef = _flatten_with_names(state_template)
+    by_name = {
+        meta["name"]: key for key, meta in manifest["leaves"].items()
+    }
+    if validate:
+        hasher = hashlib.sha256()
+        for i in range(len(manifest["leaves"])):
+            hasher.update(data[f"leaf_{i}"].tobytes()[:4096])
+        if hasher.hexdigest() != manifest["content_hash"]:
+            raise ValueError(f"checkpoint {path} failed integrity check")
+    new_leaves = []
+    sh_leaves = (
+        jax.tree_util.tree_leaves(shardings) if shardings is not None
+        else [None] * len(leaves)
+    )
+    for name, tmpl, sh in zip(names, leaves, sh_leaves):
+        key = by_name.get(name)
+        if key is None:
+            raise KeyError(f"leaf {name!r} missing from checkpoint {path}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(tmpl.shape):
+            raise ValueError(
+                f"shape mismatch for {name}: ckpt {arr.shape} vs "
+                f"template {tmpl.shape}"
+            )
+        arr = arr.astype(tmpl.dtype)
+        new_leaves.append(
+            jax.device_put(arr, sh) if sh is not None else jax.device_put(arr)
+        )
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), manifest["step"]
+
+
+def gc_checkpoints(ckpt_dir: str, keep: int = 3):
+    """Delete all but the newest ``keep`` checkpoints."""
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(
+        int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+        if d.startswith("ckpt_") and d.split("_")[1].isdigit()
+    )
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"ckpt_{s}"),
+                      ignore_errors=True)

@@ -1,0 +1,118 @@
+"""Fault-tolerant training loop.
+
+Production posture (1000+ nodes), each mechanism implemented and tested:
+
+  * **checkpoint/restart** — resume-exact: state + step from the newest
+    valid checkpoint; data order is step-indexed (``lm_data``), so no
+    iterator state exists to lose;
+  * **failure handling** — a step that raises (device loss, preemption,
+    injected fault) triggers restore-from-checkpoint and replay; after
+    ``max_retries`` consecutive failures the loop aborts loudly;
+  * **straggler mitigation** — per-step deadline; steps exceeding it are
+    counted and surfaced (on a real cluster the driver re-dispatches the
+    step to a healthy slice — the hook is ``on_straggler``);
+  * **elastic scaling** — checkpoints are layout-free; a restart may pass
+    different shardings (new mesh) to ``restore_checkpoint``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.train.checkpoint import (
+    gc_checkpoints,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep_ckpts: int = 3
+    max_retries: int = 3
+    step_deadline_s: Optional[float] = None  # straggler threshold
+    log_every: int = 10
+
+
+@dataclasses.dataclass
+class LoopReport:
+    final_step: int
+    losses: list
+    n_failures: int
+    n_stragglers: int
+    restarts: list
+
+
+def run_training(
+    state,
+    step_fn: Callable,  # (state, batch) -> (state, metrics)
+    batch_fn: Callable,  # step -> batch
+    cfg: LoopConfig,
+    *,
+    shardings=None,
+    fault_hook: Optional[Callable] = None,  # step -> None | raises
+    on_straggler: Optional[Callable] = None,
+    log: Callable = print,
+) -> tuple[Any, LoopReport]:
+    start = latest_step(cfg.ckpt_dir)
+    restarts = []
+    if start is not None:
+        state, start_step = restore_checkpoint(
+            cfg.ckpt_dir, start, state, shardings
+        )
+        step = start_step
+        restarts.append(("resume", step))
+        log(f"[loop] resumed from checkpoint at step {step}")
+    else:
+        step = 0
+        save_checkpoint(cfg.ckpt_dir, 0, state)
+
+    losses = []
+    n_failures = 0
+    n_stragglers = 0
+    consecutive = 0
+    while step < cfg.total_steps:
+        try:
+            if fault_hook is not None:
+                fault_hook(step)  # test hook: may raise to inject failure
+            t0 = time.time()
+            batch = batch_fn(step)
+            state, metrics = step_fn(state, batch)
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            if cfg.step_deadline_s and dt > cfg.step_deadline_s:
+                n_stragglers += 1
+                if on_straggler is not None:
+                    on_straggler(step, dt)
+            losses.append(loss)
+            consecutive = 0
+            step += 1
+            if step % cfg.log_every == 0:
+                log(f"[loop] step {step} loss {loss:.4f} ({dt*1e3:.0f} ms)")
+            if step % cfg.ckpt_every == 0:
+                save_checkpoint(cfg.ckpt_dir, step, state)
+                gc_checkpoints(cfg.ckpt_dir, cfg.keep_ckpts)
+        except Exception as e:  # noqa: BLE001 — any step failure
+            n_failures += 1
+            consecutive += 1
+            if consecutive > cfg.max_retries:
+                raise RuntimeError(
+                    f"aborting: {consecutive} consecutive step failures"
+                ) from e
+            last = latest_step(cfg.ckpt_dir)
+            log(f"[loop] step {step} FAILED ({e!r}); restoring ckpt {last}")
+            state, step = restore_checkpoint(
+                cfg.ckpt_dir, last, state, shardings
+            )
+            restarts.append(("failure", step))
+    save_checkpoint(cfg.ckpt_dir, step, state)
+    gc_checkpoints(cfg.ckpt_dir, cfg.keep_ckpts)
+    return state, LoopReport(step, losses, n_failures, n_stragglers, restarts)

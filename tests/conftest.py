@@ -1,0 +1,39 @@
+import os
+import sys
+
+# tests must see exactly ONE device (the dry-run alone uses 512);
+# keep any user XLA_FLAGS out of the test environment.
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.core.duals import Hinge, SquaredHinge  # noqa: E402
+from repro.data.synthetic import make_dataset  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def tiny():
+    return make_dataset("tiny")
+
+
+@pytest.fixture(scope="session")
+def tiny_dense(tiny):
+    return tiny.dense_train()
+
+
+@pytest.fixture(scope="session")
+def tiny_test_dense(tiny):
+    return tiny.dense_test()
+
+
+@pytest.fixture(scope="session")
+def hinge():
+    return Hinge(C=1.0)
+
+
+@pytest.fixture(scope="session")
+def sq_hinge():
+    return SquaredHinge(C=1.0)

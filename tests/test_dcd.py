@@ -1,0 +1,79 @@
+"""Serial DCD (Algorithm 1): convergence, ELL/dense equivalence,
+shrinking heuristic."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dcd_solve, duality_gap, predict_accuracy
+from repro.core.dcd import DcdState, dcd_epoch
+from repro.core.duals import Hinge, Logistic, SquaredHinge
+from repro.core.shrinking import dcd_solve_shrink
+from repro.data.synthetic import make_dataset
+
+
+@pytest.mark.parametrize("loss", [Hinge(1.0), SquaredHinge(1.0),
+                                  Logistic(1.0)],
+                         ids=["hinge", "sq_hinge", "logistic"])
+def test_gap_converges(tiny_dense, loss):
+    r = dcd_solve(tiny_dense, loss, epochs=25)
+    gaps = np.asarray(r.gaps)
+    assert gaps[-1] < 0.05 * gaps[0], gaps
+    assert gaps[-1] < 0.5
+
+
+def test_dual_monotone_decrease(tiny_dense, hinge):
+    from repro.core.objective import dual_objective
+
+    X = tiny_dense
+    sq = jnp.sum(X * X, axis=1)
+    state = DcdState(jnp.zeros(X.shape[0]), jnp.zeros(X.shape[1]))
+    prev = float(dual_objective(state.alpha, X, hinge))
+    for e in range(5):
+        perm = jax.random.permutation(jax.random.PRNGKey(e), X.shape[0])
+        state = dcd_epoch(X, sq, state, perm, hinge)
+        cur = float(dual_objective(state.alpha, X, hinge))
+        assert cur <= prev + 1e-4, (e, prev, cur)
+        prev = cur
+
+
+def test_w_maintenance_invariant(tiny_dense, hinge):
+    """After any number of epochs, the maintained w equals Σ α_i x_i
+    exactly (eq. 3) — the core trick of the serial algorithm."""
+    r = dcd_solve(tiny_dense, hinge, epochs=3)
+    w_bar = tiny_dense.T @ r.alpha
+    np.testing.assert_allclose(np.asarray(r.w), np.asarray(w_bar),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ell_matches_dense(tiny, hinge):
+    """Same permutation sequence ⇒ identical iterates on ELL vs dense."""
+    X_ell = tiny.X_train
+    X_d = tiny.dense_train()
+    r_e = dcd_solve(X_ell, hinge, epochs=4, seed=7)
+    r_d = dcd_solve(X_d, hinge, epochs=4, seed=7)
+    np.testing.assert_allclose(np.asarray(r_e.alpha), np.asarray(r_d.alpha),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(r_e.w), np.asarray(r_d.w),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_accuracy_reasonable(tiny, hinge):
+    r = dcd_solve(tiny.dense_train(), hinge, epochs=20)
+    acc = float(predict_accuracy(r.w, tiny.dense_train()))
+    assert acc > 0.85, acc
+
+
+def test_shrinking_matches_full(tiny_dense, hinge):
+    """Shrinking reaches a comparable gap while freezing coordinates."""
+    a, w, gaps, active = dcd_solve_shrink(tiny_dense, hinge, epochs=20)
+    full = dcd_solve(tiny_dense, hinge, epochs=20)
+    assert gaps[-1] < 5 * max(float(full.gaps[-1]), 1e-3) + 0.3
+    assert active[-1] < 1.0  # something actually got shrunk
+
+
+def test_warm_start(tiny_dense, hinge):
+    r1 = dcd_solve(tiny_dense, hinge, epochs=10)
+    r2 = dcd_solve(tiny_dense, hinge, epochs=2, alpha0=r1.alpha)
+    assert float(r2.gaps[-1]) <= float(r1.gaps[-1]) + 1e-3

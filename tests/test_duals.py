@@ -1,0 +1,88 @@
+"""Losses, conjugates, and the exact 1-D coordinate solver (paper §3.1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.duals import Hinge, Logistic, SquaredHinge
+
+LOSSES = [Hinge(C=1.0), Hinge(C=0.25), SquaredHinge(C=1.0),
+          SquaredHinge(C=2.0), Logistic(C=1.0)]
+
+
+def subproblem_value(loss, alpha, delta, wx, q):
+    """½‖w+δx‖² + ℓ*(−(α+δ)) as a function of δ, dropping const terms:
+    = wᵀx·δ + ½q·δ² + ℓ*(−(α+δ)) (+ ½‖w‖² const)."""
+    return wx * delta + 0.5 * q * delta**2 + loss.conj(alpha + delta)
+
+
+@pytest.mark.parametrize("loss", LOSSES, ids=lambda l: type(l).__name__ + str(l.C))
+def test_delta_minimizes_subproblem(loss):
+    """Δα from the closed form beats a dense grid of alternatives (eq. 4)."""
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        alpha = float(loss.feasible(jnp.asarray(rng.uniform(0, 1))))
+        wx = float(rng.normal())
+        q = float(rng.uniform(0.1, 1.0))
+        d_star = float(loss.delta(jnp.asarray(alpha), jnp.asarray(wx),
+                                  jnp.asarray(q)))
+        v_star = float(subproblem_value(loss, alpha, d_star, wx, q))
+        # grid over the feasible δ range
+        if isinstance(loss, Hinge):
+            lo, hi = -alpha, loss.C - alpha
+        elif isinstance(loss, SquaredHinge):
+            lo, hi = -alpha, 10.0
+        else:
+            eps = 1e-5 * loss.C
+            lo, hi = -alpha + eps, loss.C - alpha - eps
+        grid = np.linspace(lo, hi, 2001)
+        vals = np.asarray(subproblem_value(loss, alpha, jnp.asarray(grid),
+                                           wx, q))
+        assert v_star <= vals.min() + 1e-4, (
+            type(loss).__name__, v_star, vals.min())
+
+
+@pytest.mark.parametrize("loss", LOSSES, ids=lambda l: type(l).__name__ + str(l.C))
+def test_conjugate_fenchel_young(loss):
+    """ℓ*(−α) == max_z(−α·z − ℓ(z)) numerically (definition in §1)."""
+    zs = jnp.linspace(-30.0, 30.0, 20001)
+    for alpha in [0.1 * loss.C, 0.5 * loss.C, 0.9 * loss.C]:
+        direct = float(loss.conj(jnp.asarray(alpha)))
+        numeric = float(jnp.max(-alpha * zs - loss.primal_loss(zs)))
+        assert abs(direct - numeric) < 2e-2 * max(1.0, abs(direct)), (
+            type(loss).__name__, alpha, direct, numeric)
+
+
+@given(
+    s1=st.floats(-5, 5), s2=st.floats(-5, 5),
+    alpha=st.floats(0.05, 0.95), q=st.floats(0.1, 2.0),
+)
+@settings(max_examples=50, deadline=None)
+def test_prox_nonexpansive_hinge(s1, s2, alpha, q):
+    """Preposition 3: |T_i(w1,s) − T_i(w2,s)| ≤ |Δ(wᵀx)|/q — the update is
+    non-expansive in the observed dot product (basis of Lemma 1)."""
+    loss = Hinge(C=1.0)
+    a = jnp.asarray(alpha)
+    t1 = a + loss.delta(a, jnp.asarray(s1), jnp.asarray(q))
+    t2 = a + loss.delta(a, jnp.asarray(s2), jnp.asarray(q))
+    assert abs(float(t1 - t2)) <= abs(s1 - s2) / q + 1e-5
+
+
+@pytest.mark.parametrize("loss", LOSSES, ids=lambda l: type(l).__name__ + str(l.C))
+def test_delta_fixpoint_at_optimum(loss):
+    """Applying delta twice from the same w changes nothing (exact solve)."""
+    rng = np.random.default_rng(1)
+    for _ in range(10):
+        alpha = float(loss.feasible(jnp.asarray(rng.uniform(0, 1))))
+        wx0 = float(rng.normal())
+        q = float(rng.uniform(0.2, 1.0))
+        d1 = float(loss.delta(jnp.asarray(alpha), jnp.asarray(wx0),
+                              jnp.asarray(q)))
+        # after the update, wᵀx changes by d1·q (since w += d1·x)
+        wx1 = wx0 + d1 * q
+        d2 = float(loss.delta(jnp.asarray(alpha + d1), jnp.asarray(wx1),
+                              jnp.asarray(q)))
+        assert abs(d2) < 5e-3, (type(loss).__name__, d1, d2)

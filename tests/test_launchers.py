@@ -1,0 +1,35 @@
+"""Launcher CLIs end-to-end (smoke configs), incl. the gradient
+compression codec inside the train step."""
+
+import numpy as np
+import pytest
+
+from repro.launch.serve import main as serve_main
+from repro.launch.train import main as train_main
+
+
+def test_train_launcher(tmp_path):
+    train_main(["--arch", "minitron-4b", "--steps", "8", "--batch", "2",
+                "--seq", "32", "--ckpt-dir", str(tmp_path)])
+
+
+def test_train_launcher_with_compression(tmp_path):
+    train_main(["--arch", "minicpm-2b", "--steps", "8", "--batch", "2",
+                "--seq", "32", "--compress", "int8",
+                "--ckpt-dir", str(tmp_path)])
+
+
+def test_train_launcher_microbatched(tmp_path):
+    train_main(["--arch", "granite-moe-3b-a800m", "--steps", "6",
+                "--batch", "4", "--seq", "32", "--microbatches", "2",
+                "--ckpt-dir", str(tmp_path)])
+
+
+def test_serve_launcher():
+    serve_main(["--arch", "mamba2-780m", "--requests", "2",
+                "--prompt-len", "16", "--gen", "6"])
+
+
+def test_serve_launcher_hybrid():
+    serve_main(["--arch", "jamba-1.5-large-398b", "--requests", "2",
+                "--prompt-len", "16", "--gen", "4"])

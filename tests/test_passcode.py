@@ -1,0 +1,122 @@
+"""PASSCoDe (Algorithm 2) — memory-model semantics and convergence.
+
+These tests machine-check the paper's core claims:
+  * Lock is serializable (≡ serial DCD on the same update order);
+  * Atomic converges with stale reads and loses no update (ŵ == w̄);
+  * Wild converges to a *perturbed* fixpoint: ŵ ≠ w̄, yet one more exact
+    coordinate pass against ŵ moves nothing (Thm 3's optimality), and
+    prediction with ŵ beats w̄ (Table 2);
+  * staleness (τ) degrades gracefully / eventually breaks (eq. 7).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    dcd_solve,
+    duality_gap,
+    passcode_solve,
+    predict_accuracy,
+)
+from repro.core.backward_error import backward_error_report, fixpoint_residual
+from repro.core.duals import Hinge, SquaredHinge
+from repro.data.synthetic import make_dataset
+
+
+def test_lock_equals_serial_sequence(tiny_dense, hinge):
+    """With the same global coordinate order, Lock reproduces the serial
+    iterate exactly (serializability, §3.2)."""
+    from repro.core.dcd import DcdState, dcd_epoch
+    from repro.core.passcode import _round_indices
+
+    X = tiny_dense
+    n = X.shape[0]
+    sq = jnp.sum(X * X, axis=1)
+    key = jax.random.PRNGKey(3)
+    rounds = _round_indices(key, n, 8)  # (rounds, 8)
+    order = rounds.reshape(-1)
+    # serial epoch with that exact order
+    st = dcd_epoch(X, sq, DcdState(jnp.zeros(n), jnp.zeros(X.shape[1])),
+                   order, hinge)
+    # lock epoch with the same per-round indices
+    from repro.core.passcode import _passcode_epoch_dense
+
+    alpha, w = _passcode_epoch_dense(
+        X, sq, jnp.zeros(n), jnp.zeros(X.shape[1]), rounds,
+        jax.random.split(key, rounds.shape[0]), hinge, "lock", 8, 0, 0.0,
+    )
+    np.testing.assert_allclose(np.asarray(alpha), np.asarray(st.alpha),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(st.w),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("threads", [2, 4, 10])
+def test_atomic_converges_and_loses_nothing(tiny_dense, hinge, threads):
+    r = passcode_solve(tiny_dense, hinge, n_threads=threads,
+                       memory_model="atomic", epochs=20)
+    assert float(r.gaps[-1]) < 0.5, r.gaps
+    # atomic adds never lose updates ⇒ maintained ŵ == w̄ = Σαx
+    assert float(r.eps_norms[-1]) < 1e-3
+
+
+def test_atomic_matches_serial_quality(tiny_dense, tiny_test_dense, hinge):
+    serial = dcd_solve(tiny_dense, hinge, epochs=20)
+    par = passcode_solve(tiny_dense, hinge, n_threads=8,
+                         memory_model="atomic", epochs=20)
+    acc_s = float(predict_accuracy(serial.w, tiny_test_dense))
+    acc_p = float(predict_accuracy(par.w_hat, tiny_test_dense))
+    assert abs(acc_s - acc_p) < 0.05, (acc_s, acc_p)
+
+
+def test_wild_backward_error(tiny_dense, tiny_test_dense, hinge):
+    """Thm 3: ŵ is an exact perturbed-problem solution (fixpoint residual
+    ≈ 0 against ŵ) even though ε = w̄ − ŵ is large and the *nominal*
+    solution w̄ is far from optimal."""
+    r = passcode_solve(tiny_dense, hinge, n_threads=8, memory_model="wild",
+                       epochs=40, conflict_rate=0.8)
+    rep = backward_error_report(tiny_dense, tiny_test_dense, hinge, r)
+    assert rep["eps_norm"] > 0.5, "conflicts should produce real ε"
+    assert rep["fixpoint_residual_w_hat"] < 5e-3, rep
+    assert rep["fixpoint_residual_w_bar"] > 10 * max(
+        rep["fixpoint_residual_w_hat"], 1e-6)
+
+
+def test_wild_predict_with_w_hat(hinge):
+    """Table 2: accuracy(ŵ) ≥ accuracy(w̄) under memory conflicts."""
+    ds = make_dataset("tiny", seed=5)
+    X, Xt = ds.dense_train(), ds.dense_test()
+    accs_hat, accs_bar = [], []
+    for seed in range(3):
+        r = passcode_solve(X, hinge, n_threads=8, memory_model="wild",
+                           epochs=30, conflict_rate=0.8, seed=seed)
+        accs_hat.append(float(predict_accuracy(r.w_hat, X)))
+        accs_bar.append(float(predict_accuracy(r.w_bar, X)))
+    assert np.mean(accs_hat) >= np.mean(accs_bar) + 0.01, (
+        accs_hat, accs_bar)
+
+
+def test_wild_eps_grows_with_conflicts(tiny_dense, hinge):
+    eps = []
+    for rate in [0.1, 0.5, 0.9]:
+        r = passcode_solve(tiny_dense, hinge, n_threads=8,
+                           memory_model="wild", epochs=15,
+                           conflict_rate=rate, seed=0)
+        eps.append(float(r.eps_norms[-1]))
+    assert eps[0] < eps[-1], eps
+
+
+def test_staleness_tolerated(tiny_dense, hinge):
+    """Small extra delay (larger τ) still converges (Thm 2 regime)."""
+    r = passcode_solve(tiny_dense, hinge, n_threads=4,
+                       memory_model="atomic", epochs=25, delay=2)
+    assert float(r.gaps[-1]) < 1.0, r.gaps
+
+
+def test_sq_hinge_variant(tiny_dense):
+    loss = SquaredHinge(C=1.0)
+    r = passcode_solve(tiny_dense, loss, n_threads=8, memory_model="atomic",
+                       epochs=20)
+    assert float(r.gaps[-1]) < 0.5 * float(r.gaps[0])

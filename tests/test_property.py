@@ -1,0 +1,189 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.dcd import DcdState, dcd_epoch
+from repro.core.duals import Hinge, SquaredHinge
+from repro.core.objective import dual_objective, duality_gap
+from repro.data.sparse import dense_to_ell, ell_matvec, ell_rmatvec
+from repro.models.attention import chunked_attention, full_attention
+from repro.models.ssm import ssd_scan
+
+
+@st.composite
+def small_dataset(draw):
+    n = draw(st.integers(8, 40))
+    d = draw(st.integers(4, 24))
+    seed = draw(st.integers(0, 2**16))
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, d)).astype(np.float32)
+    X /= np.maximum(np.linalg.norm(X, axis=1, keepdims=True), 1e-6)
+    return jnp.asarray(X)
+
+
+@given(X=small_dataset(), c=st.sampled_from([0.25, 1.0, 4.0]),
+       sq=st.booleans())
+@settings(max_examples=15, deadline=None)
+def test_epoch_never_increases_dual(X, c, sq):
+    loss = SquaredHinge(C=c) if sq else Hinge(C=c)
+    n, d = X.shape
+    sqn = jnp.sum(X * X, axis=1)
+    state = DcdState(jnp.zeros(n), jnp.zeros(d))
+    prev = float(dual_objective(state.alpha, X, loss))
+    for e in range(3):
+        perm = jax.random.permutation(jax.random.PRNGKey(e), n)
+        state = dcd_epoch(X, sqn, state, perm, loss)
+        cur = float(dual_objective(state.alpha, X, loss))
+        assert cur <= prev + 1e-4
+        prev = cur
+
+
+@given(X=small_dataset())
+@settings(max_examples=15, deadline=None)
+def test_gap_nonnegative(X):
+    loss = Hinge(C=1.0)
+    n = X.shape[0]
+    alpha = loss.feasible(
+        jax.random.uniform(jax.random.PRNGKey(0), (n,), minval=-1.0,
+                           maxval=2.0))
+    assert float(duality_gap(alpha, X, loss)) >= -1e-4
+
+
+@given(X=small_dataset())
+@settings(max_examples=15, deadline=None)
+def test_ell_roundtrip_and_ops(X):
+    ell = dense_to_ell(np.asarray(X))
+    np.testing.assert_allclose(np.asarray(ell.to_dense()), np.asarray(X),
+                               rtol=1e-6, atol=1e-6)
+    w = jnp.asarray(np.random.default_rng(0).standard_normal(X.shape[1])
+                    .astype(np.float32))
+    np.testing.assert_allclose(np.asarray(ell_matvec(ell, w)),
+                               np.asarray(X @ w), rtol=1e-4, atol=1e-4)
+    a = jnp.asarray(np.random.default_rng(1).standard_normal(X.shape[0])
+                    .astype(np.float32))
+    np.testing.assert_allclose(np.asarray(ell_rmatvec(ell, a)),
+                               np.asarray(X.T @ a), rtol=1e-4, atol=1e-4)
+
+
+@given(
+    b=st.integers(1, 3), sq_len=st.integers(2, 33), hkv=st.sampled_from([1, 2]),
+    rep=st.sampled_from([1, 3]), chunk=st.sampled_from([4, 8, 16]),
+    causal=st.booleans(), seed=st.integers(0, 1000),
+)
+@settings(max_examples=20, deadline=None)
+def test_chunked_attention_matches_full(b, sq_len, hkv, rep, chunk, causal,
+                                        seed):
+    hd = 8
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, sq_len, hkv * rep, hd))
+    k = jax.random.normal(kk, (b, sq_len, hkv, hd))
+    v = jax.random.normal(kv, (b, sq_len, hkv, hd))
+    out_c = chunked_attention(q, k, v, causal=causal, kv_chunk=chunk)
+    out_f = full_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_f),
+                               rtol=2e-3, atol=2e-3)
+
+
+def _ssd_naive(x, dt, a, Bm, Cm):
+    """Token-by-token oracle of the SSD recurrence."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    h = np.zeros((B, H, P, N), np.float64)
+    ys = np.zeros((B, S, H, P), np.float64)
+    x, dt, a, Bm, Cm = map(np.asarray, (x, dt, a, Bm, Cm))
+    for t in range(S):
+        dA = np.exp(dt[:, t] * a)  # (B,H)
+        h = h * dA[:, :, None, None] + np.einsum(
+            "bh,bn,bhp->bhpn", dt[:, t], Bm[:, t], x[:, t])
+        ys[:, t] = np.einsum("bn,bhpn->bhp", Cm[:, t], h)
+    return ys
+
+
+@given(
+    b=st.integers(1, 2), s=st.integers(3, 24), h=st.sampled_from([1, 2]),
+    p=st.sampled_from([2, 4]), n=st.sampled_from([2, 4]),
+    chunk=st.sampled_from([4, 8]), seed=st.integers(0, 500),
+)
+@settings(max_examples=20, deadline=None)
+def test_ssd_scan_matches_naive_recurrence(b, s, h, p, n, chunk, seed):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (b, s, n))
+    Cm = jax.random.normal(ks[4], (b, s, n))
+    y, _ = ssd_scan(x, dt, a, Bm, Cm, chunk)
+    y_ref = _ssd_naive(x, dt, a, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-3, atol=2e-3)
+
+
+@given(seed=st.integers(0, 1000), v=st.sampled_from([37, 64, 129]))
+@settings(max_examples=10, deadline=None)
+def test_cross_entropy_matches_manual(seed, v):
+    from repro.train.step import cross_entropy
+
+    key = jax.random.PRNGKey(seed)
+    B, S = 2, 6
+    logits = jax.random.normal(key, (B, S, v))
+    labels = jax.random.randint(jax.random.PRNGKey(seed + 1), (B, S), 0, v)
+    ce = float(cross_entropy(logits, labels, v))
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    manual = -np.mean(
+        np.take_along_axis(np.asarray(lp), np.asarray(labels[:, 1:, None]),
+                           axis=-1))
+    assert abs(ce - manual) < 1e-4
+
+
+@given(seed=st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_rope_preserves_norms(seed):
+    """Rotations preserve the per-position L2 norm of each head vector."""
+    from repro.models.layers import apply_rope
+
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (2, 8, 3, 16))
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    y = apply_rope(x, pos, theta=1e4)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-4, atol=1e-4)
+
+
+@given(seed=st.integers(0, 200), topk=st.sampled_from([1, 2]))
+@settings(max_examples=10, deadline=None)
+def test_moe_no_drop_matches_dense_mixture(seed, topk):
+    """With no_drop capacity, grouped-dispatch MoE equals the dense
+    'run every expert, weight by gates' oracle."""
+    from repro.models.moe import moe_mlp
+
+    key = jax.random.PRNGKey(seed)
+    T, D, F, E = 16, 8, 12, 4
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (T, D))
+    router = jax.random.normal(ks[1], (D, E))
+    wg = jax.random.normal(ks[2], (E, D, F)) / np.sqrt(D)
+    wu = jax.random.normal(ks[3], (E, D, F)) / np.sqrt(D)
+    wd = jax.random.normal(ks[4], (E, F, D)) / np.sqrt(F)
+    out, _ = moe_mlp(x, router, wg, wu, wd, top_k=topk, group_size=T,
+                     no_drop=True)
+    # oracle
+    probs = jax.nn.softmax(x @ router, axis=-1)
+    gate_vals, ids = jax.lax.top_k(probs, topk)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    expert_out = jnp.einsum(
+        "ecf,efd->ecd",
+        jax.nn.silu(jnp.einsum("td,edf->etf", x, wg))
+        * jnp.einsum("td,edf->etf", x, wu), wd)  # (E,T,D)
+    ref = jnp.zeros((T, D))
+    for kk in range(topk):
+        ref = ref + gate_vals[:, kk, None] * jnp.take_along_axis(
+            expert_out.transpose(1, 0, 2), ids[:, kk, None, None]
+            .repeat(D, -1), axis=1)[:, 0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-2, atol=2e-2)

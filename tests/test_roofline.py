@@ -1,0 +1,140 @@
+"""HLO static analyzer: exact dot FLOPs, trip-count multiplication,
+collective wire-byte model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.roofline import (
+    HloAnalyzer,
+    analyze_hlo,
+    roofline_report,
+)
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_matmul_flops_exact():
+    M, K, N = 64, 128, 32
+    c = _compile(lambda a, b: a @ b,
+                 jax.ShapeDtypeStruct((M, K), jnp.float32),
+                 jax.ShapeDtypeStruct((K, N), jnp.float32))
+    st = analyze_hlo(c.as_text())
+    assert st.flops == pytest.approx(2 * M * K * N, rel=1e-6)
+
+
+def test_scan_multiplies_by_trip_count():
+    L, D = 7, 32
+
+    def f(ws, x):
+        def body(x, w):
+            return jnp.tanh(x @ w), ()
+        x, _ = jax.lax.scan(body, x, ws)
+        return x
+
+    c = _compile(f, jax.ShapeDtypeStruct((L, D, D), jnp.float32),
+                 jax.ShapeDtypeStruct((4, D), jnp.float32))
+    st = analyze_hlo(c.as_text())
+    assert st.flops >= 2 * 4 * D * D * L  # trip-count applied
+    assert st.flops < 2 * 4 * D * D * L * 1.5
+
+
+def test_nested_scan_trip_counts_compose():
+    def f(ws, x):
+        def outer(x, w):
+            def inner(x, _):
+                return jnp.tanh(x @ w), ()
+            x, _ = jax.lax.scan(inner, x, jnp.arange(3))
+            return x, ()
+        x, _ = jax.lax.scan(outer, x, ws)
+        return x
+
+    D, L = 16, 5
+    c = _compile(f, jax.ShapeDtypeStruct((L, D, D), jnp.float32),
+                 jax.ShapeDtypeStruct((2, D), jnp.float32))
+    st = analyze_hlo(c.as_text())
+    expect = 2 * 2 * D * D * 3 * L  # inner×outer multipliers
+    assert st.flops == pytest.approx(expect, rel=0.5)
+
+
+def test_xla_cost_analysis_undercounts_scans():
+    """The calibration finding that motivated the analyzer (§Dry-run)."""
+    L, D = 9, 32
+
+    def f(ws, x):
+        def body(x, w):
+            return jnp.tanh(x @ w), ()
+        x, _ = jax.lax.scan(body, x, ws)
+        return x
+
+    c = _compile(f, jax.ShapeDtypeStruct((L, D, D), jnp.float32),
+                 jax.ShapeDtypeStruct((4, D), jnp.float32))
+    xla_flops = c.cost_analysis().get("flops", 0.0)
+    ours = analyze_hlo(c.as_text()).flops
+    assert ours > 5 * xla_flops  # XLA counts the body once
+
+
+def test_report_terms_and_dominance():
+    from repro.launch.roofline import HloStats
+
+    st = HloStats(flops=197e12, bytes=819e9 * 2, collective_bytes=0.0)
+    rep = roofline_report(stats=st, n_chips=4, model_flops_total=197e12 * 2)
+    assert rep["t_compute_s"] == pytest.approx(1.0)
+    assert rep["t_memory_s"] == pytest.approx(2.0)
+    assert rep["dominant"] == "memory"
+    assert rep["useful_flops_fraction"] == pytest.approx(0.5)
+
+
+def test_parser_handles_tuple_shapes_with_comments():
+    """Regression: tuple result shapes embed /*index=N*/ comments that
+    broke the original regex and silently dropped while-loops."""
+    hlo = """
+HloModule test
+
+%body (p: (s32[], f32[4,4], f32[2,4,4])) -> (s32[], f32[4,4], f32[2,4,4]) {
+  %p = (s32[], f32[4,4], f32[2,4,4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[4,4]{1,0} get-tuple-element(%p), index=1
+  %ws = f32[2,4,4]{2,1,0} get-tuple-element(%p), index=2
+  %d = f32[4,4]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[4,4], f32[2,4,4]) tuple(%i, %d, %ws)
+}
+
+%cond (p2: (s32[], f32[4,4], f32[2,4,4])) -> pred[] {
+  %p2 = (s32[], f32[4,4], f32[2,4,4]) parameter(0)
+  ROOT %lt = pred[] constant(false)
+}
+
+ENTRY %main (a: f32[4,4], ws0: f32[2,4,4], big: (s32[], f32[4,4], f32[2,4,4], f32[4], f32[4], /*index=5*/f32[4])) -> f32[4,4] {
+  %a = f32[4,4]{1,0} parameter(0)
+  %ws0 = f32[2,4,4]{2,1,0} parameter(1)
+  %c = s32[] constant(0)
+  %t0 = (s32[], f32[4,4], f32[2,4,4]) tuple(%c, %a, %ws0)
+  %w = (s32[], f32[4,4], f32[2,4,4]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"6"}}
+  ROOT %out = f32[4,4]{1,0} get-tuple-element(%w), index=1
+}
+"""
+    st = analyze_hlo(hlo)
+    assert st.flops == pytest.approx(2 * 4 * 4 * 4 * 6)  # dot × 6 trips
+
+
+def test_collective_wire_model():
+    hlo = """
+HloModule test
+
+ENTRY %main (a: f32[128]) -> f32[128] {
+  %a = f32[128]{0} parameter(0)
+  %ar = f32[128]{0} all-reduce(%a), replica_groups=[1,4]<=[4], to_apply=%add
+  %ag = f32[128]{0} all-gather(%ar), replica_groups=[1,4]<=[4], dimensions={0}
+  ROOT %rs = f32[128]{0} reduce-scatter(%ag), replica_groups=[1,4]<=[4], dimensions={0}
+}
+"""
+    st = analyze_hlo(hlo)
+    b = 128 * 4
+    # AR: 2×b ; AG: b ; RS: b×group(4)
+    assert st.bytes_by_kind["all-reduce"] == pytest.approx(2 * b)
+    assert st.bytes_by_kind["all-gather"] == pytest.approx(b)
+    assert st.bytes_by_kind["reduce-scatter"] == pytest.approx(4 * b)

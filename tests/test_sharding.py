@@ -1,0 +1,118 @@
+"""Sharding rules: param/batch/cache specs, divisibility, rules.act."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.dist.sharding import (
+    ShardingRules,
+    batch_pspec,
+    cache_shardings,
+    param_shardings,
+)
+from repro.launch.specs import batch_specs, cache_specs
+from repro.models.transformer import param_specs
+
+
+def _fake_mesh(shape, axes):
+    """Abstract mesh over fake devices — fine for spec construction."""
+    devs = np.asarray(jax.devices() * int(np.prod(shape)))[: int(np.prod(shape))]
+    return jax.sharding.Mesh(devs.reshape(shape), axes)
+
+
+MESH = _fake_mesh((1, 1), ("data", "model"))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_shardings_cover_tree(arch):
+    cfg = get_config(arch)
+    specs = param_specs(cfg)
+    sh = param_shardings(cfg, MESH, specs, fsdp=True)
+    n_leaves = len(jax.tree.leaves(specs))
+    assert len(jax.tree.leaves(sh)) == n_leaves
+    for s in jax.tree.leaves(sh):
+        assert isinstance(s, jax.sharding.NamedSharding)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_shardings_divisible_on_production_mesh(arch):
+    """Every sharded dim must divide by its mesh-axis size (16/16)."""
+    cfg = get_config(arch)
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    specs = param_specs(cfg)
+    sh = param_shardings(cfg, mesh, specs, fsdp=True)
+
+    def check(path, leaf, s):
+        for dim, ax in enumerate(s.spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            k = 1
+            for a in axes:
+                k *= mesh.shape[a]
+            assert leaf.shape[dim] % k == 0, (path, leaf.shape, s.spec)
+
+    jax.tree_util.tree_map_with_path(check, specs, sh)
+
+
+def test_batch_pspec_divisibility():
+    mesh = _fake_mesh((2, 16, 16), ("pod", "data", "model"))
+    assert batch_pspec(mesh, 256) == P(("pod", "data"))
+    assert batch_pspec(mesh, 32) == P(("pod", "data"))
+    assert batch_pspec(mesh, 16) == P("pod")  # 16 % (2*16) != 0 but % 2 == 0
+    assert batch_pspec(mesh, 1) == P(None)
+
+
+@pytest.mark.parametrize("arch", ["mistral-nemo-12b", "mamba2-780m",
+                                  "jamba-1.5-large-398b", "whisper-small"])
+def test_cache_shardings_match_structure(arch):
+    cfg = get_config(arch)
+    shape = SHAPES["decode_32k"]
+    cs = cache_specs(cfg, shape)
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    sh = cache_shardings(cfg, mesh, cs, shape.global_batch)
+    assert len(jax.tree.leaves(sh)) == len(jax.tree.leaves(cs))
+    if cfg.n_heads:
+        assert sh.attn_k.spec == P(None, "data", "model", None, None)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+def test_batch_specs_shapes(arch, shape_name):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    specs = batch_specs(cfg, shape)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        main = specs.get("tokens", specs.get("embeds"))
+        assert main.shape[:2] == (B, 1)
+    else:
+        main = specs.get("tokens", specs.get("embeds"))
+        assert main.shape[:2] == (B, S)
+        if shape.kind == "train":
+            assert specs["labels"].shape == (B, S)
+    if cfg.mrope_sections:
+        assert specs["positions"].shape[0] == 3
+    if cfg.is_encdec and shape.kind != "decode":
+        assert specs["enc_embeds"].shape == (B, cfg.enc_len, cfg.d_model)
+
+
+def test_rules_act_noop_without_mesh():
+    rules = ShardingRules(mesh=None)
+    x = jnp.ones((4, 4))
+    assert rules.act(x, "act_resid") is x
+
+
+def test_rules_act_skips_indivisible():
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    rules = ShardingRules(mesh=mesh)
+    x = jnp.ones((3, 5, 7))  # nothing divides 16 — constraint dropped
+
+    def f(x):
+        return rules.act(x, "act_resid")
+
+    jaxpr = jax.make_jaxpr(f)(x)  # must not raise
+    assert "3,5,7" not in ()  # smoke: tracing succeeded

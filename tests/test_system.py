@@ -1,0 +1,86 @@
+"""End-to-end behaviour tests for the whole system."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    dcd_solve,
+    passcode_solve,
+    predict_accuracy,
+)
+from repro.core.backward_error import backward_error_report
+from repro.core.duals import Hinge
+from repro.data.synthetic import make_dataset
+
+
+def test_e2e_svm_training_pipeline():
+    """Full PASSCoDe pipeline on an rcv1-like (scaled) dataset: sparse ELL
+    data → Atomic solve → accuracy ≈ serial, ε ≈ 0."""
+    ds = make_dataset("tiny-dense", seed=1)
+    X, Xt = ds.dense_train(), ds.dense_test()
+    loss = Hinge(C=1.0)
+    serial = dcd_solve(X, loss, epochs=15)
+    atomic = passcode_solve(X, loss, n_threads=8, memory_model="atomic",
+                            epochs=15)
+    acc_serial = float(predict_accuracy(serial.w, Xt))
+    acc_atomic = float(predict_accuracy(atomic.w_hat, Xt))
+    assert acc_atomic > acc_serial - 0.05
+    assert float(atomic.eps_norms[-1]) < 1e-3
+
+
+def test_e2e_wild_report():
+    ds = make_dataset("tiny", seed=2)
+    X, Xt = ds.dense_train(), ds.dense_test()
+    loss = Hinge(C=1.0)
+    wild = passcode_solve(X, loss, n_threads=8, memory_model="wild",
+                          epochs=30, conflict_rate=0.6)
+    rep = backward_error_report(X, Xt, loss, wild)
+    assert rep["fixpoint_residual_w_hat"] < 1e-2
+    assert rep["train_acc_w_hat"] > 0.8
+
+
+def test_e2e_lm_training_decreases_loss():
+    """Tiny LM (minicpm smoke config) learns the Markov corpus."""
+    from repro.configs import get_smoke_config
+    from repro.data.lm_data import MarkovCorpus, make_lm_batch
+    from repro.optim.schedules import make_schedule
+    from repro.train.step import init_train_state, make_train_step
+
+    cfg = get_smoke_config("minicpm-2b")
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, schedule=make_schedule(
+        "wsd", peak_lr=5e-3, total_steps=60, warmup_steps=3), remat=False))
+    corpus = MarkovCorpus(cfg.vocab_size, seed=0)
+    losses = []
+    for t in range(30):
+        state, m = step(state, make_lm_batch(corpus, t, batch=4, seq=32))
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3, losses
+
+
+def test_e2e_serve_generates():
+    """Prefill + greedy decode loop emits in-vocab tokens and a growing
+    cache — the serving path end to end."""
+    from repro.configs import get_smoke_config
+    from repro.models import init_cache, init_params, prefill
+    from repro.models.transformer import cache_max_len
+    from repro.serve.step import make_decode_step
+
+    cfg = get_smoke_config("mistral-nemo-12b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 16
+    prompt = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                           cfg.vocab_size)}
+    cache = init_cache(cfg, B, cache_max_len(S + 8), dtype=jnp.float32)
+    logits, cache = prefill(cfg, params, prompt, cache)
+    decode = jax.jit(make_decode_step(cfg))
+    tok = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1).astype(
+        jnp.int32)
+    outs = []
+    for _ in range(5):
+        tok, logits, cache = decode(params, {"tokens": tok[:, None]}, cache)
+        outs.append(np.asarray(tok))
+    toks = np.stack(outs)
+    assert toks.min() >= 0 and toks.max() < cfg.vocab_size
+    assert int(cache.length) == S + 5
