@@ -58,12 +58,6 @@ def _round_indices(key, n, n_threads):
     return perm[: rounds * n_threads].reshape(rounds, n_threads)
 
 
-def _gather_rows(X, idx):
-    if isinstance(X, EllMatrix):
-        return X.indices[idx], X.values[idx]
-    return X[idx]
-
-
 @functools.partial(
     jax.jit,
     static_argnames=("loss", "memory_model", "n_threads", "delay"),

@@ -32,10 +32,13 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro.core.objective import duality_gap, w_of_alpha
+from repro.dist.compat import shard_map
+from repro.dist.mesh import solver_mesh
+from repro.dist.sharding import named, replicated
 
 
 class ShardedResult(NamedTuple):
@@ -89,7 +92,7 @@ def make_sharded_epoch(mesh: Mesh, loss, block_size: int, delay_rounds: int = 0)
             )
             return alpha_loc, w_loc, dw_prev
 
-        return jax.shard_map(
+        return shard_map(
             device_fn,
             mesh=mesh,
             in_specs=(P(axis), P(axis), P(axis), P(), P(axis), P()),
@@ -114,16 +117,16 @@ def sharded_passcode_solve(
     """Distributed PASSCoDe-Atomic.  ``X_host``: dense (n, d) array; rows
     are sharded across the mesh's ``data`` axis."""
     if mesh is None:
-        mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+        mesh = solver_mesh("data")
     p = mesh.shape["data"]
     n, d = X_host.shape
     n_loc = n // p
     n_use = n_loc * p
     X = jnp.asarray(X_host[:n_use])
     sq_norms = jnp.sum(X * X, axis=1)
-    data_sh = NamedSharding(mesh, P("data"))
-    rep_sh = NamedSharding(mesh, P())
-    X = jax.device_put(X, NamedSharding(mesh, P("data", None)))
+    data_sh = named(mesh, "data")
+    rep_sh = replicated(mesh)
+    X = jax.device_put(X, named(mesh, "data", None))
     sq_norms = jax.device_put(sq_norms, data_sh)
     alpha = jax.device_put(jnp.zeros((n_use,), jnp.float32), data_sh)
     w = jax.device_put(jnp.zeros((d,), jnp.float32), rep_sh)
@@ -168,16 +171,14 @@ def sharded_passcode_feature(
     shards.  Updates are serial in i ⇒ exactly Algorithm 1 output, with
     the *communication* pattern of a model-parallel deployment."""
     if mesh is None:
-        mesh = jax.make_mesh((len(jax.devices()),), ("model",))
+        mesh = solver_mesh("model")
     n, d = X_host.shape
     m = mesh.shape["model"]
     d_pad = ((d + m - 1) // m) * m
     X = jnp.zeros((n, d_pad), jnp.float32).at[:, :d].set(jnp.asarray(X_host))
     sq_norms = jnp.sum(X * X, axis=1)
-    X = jax.device_put(X, NamedSharding(mesh, P(None, "model")))
-    w = jax.device_put(
-        jnp.zeros((d_pad,), jnp.float32), NamedSharding(mesh, P("model"))
-    )
+    X = jax.device_put(X, named(mesh, None, "model"))
+    w = jax.device_put(jnp.zeros((d_pad,), jnp.float32), named(mesh, "model"))
     alpha = jnp.zeros((n,), jnp.float32)
 
     def epoch(X, sq_norms, alpha, w, perm):
@@ -191,7 +192,7 @@ def sharded_passcode_feature(
 
             return jax.lax.fori_loop(0, perm.shape[0], body, (alpha, w_loc))
 
-        return jax.shard_map(
+        return shard_map(
             device_fn,
             mesh=mesh,
             in_specs=(P(None, "model"), P(), P(), P("model"), P()),

@@ -1,0 +1,40 @@
+"""Mesh construction and data-parallel axis helpers.
+
+Functions (not module-level constants) so importing this module never
+touches jax device state — callers control when devices are initialized
+(the dry-run sets ``xla_force_host_platform_device_count=512`` first).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips.
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis
+    composes with ``data`` for the DP gradient reduction and carries the
+    cross-pod (DCN-ish) collectives that the dry-run must prove shard."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def solver_mesh(axis: str = "data", n_devices: int | None = None):
+    """1-D mesh for the dual-coordinate solvers: every local device along
+    one named axis.  ``axis="data"`` is the paper's thread→device mapping
+    (rows / dual coordinates sharded); ``axis="model"`` is the
+    feature-sharded deployment (w sharded, psum per dot product)."""
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((n,), (axis,))
+
+
+def data_axes(mesh) -> tuple:
+    """Axes that form the data-parallel dimension."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_size(mesh) -> int:
+    return math.prod(mesh.shape[a] for a in data_axes(mesh))

@@ -1,0 +1,338 @@
+"""Sharding policy: logical activation rules, param / batch / cache /
+optimizer shardings.
+
+Everything here is *divisibility-aware*: a proposed mesh axis is dropped
+from a dimension whose size it does not divide, so one policy covers all
+10 architectures and every mesh without per-arch special cases.  This
+mirrors the paper's separation of concerns — the solver (model) is
+written once, the memory/consistency policy (sharding) is a pluggable
+object layered on top.
+
+Logical activation names (``ShardingRules.act(x, name)``):
+
+  act_resid        (B, S, D)        residual stream — batch over DP
+  act_mlp_in       (B, S, D)        pre-MLP hidden
+  act_q / act_kv   (B, S, H, hd)    train/prefill heads over 'model'
+  act_q_dec /      (B, 1, H, hd)    decode q/k/v — heads REPLICATED so
+  act_kv_dec                        they compose with the S-sharded
+                                    cache (split-KV)
+  cache            (B, S_max, Hkv, hd)  decode KV cache: S over 'model'
+  act_attn_out_dec (B, 1, H·hd)     pre-wo decode activations
+  act_logits       (B, S, Vp)       vocab over 'model'
+  act_moe_groups   (G, g, D)        token groups over DP
+  act_moe_xe       (E, C, D)        dispatched tokens: experts on 'model'
+  act_moe_xe4      (G, E, C, D)     grouped dispatch: G on DP, E on model
+  act_ssm_inner    (B, S, d_inner)  SSD head-parallel inner width
+  act_ssm_dt       (B, S, H)        per-head dt
+
+PASSCoDe memory-model mapping (DESIGN note): the ``data`` axis carries
+the paper's thread→device assignment (dual coordinates / batch rows);
+the ``model`` axis carries the feature/width sharding whose only
+collective is a psum — the mesh analogue of atomic adds into shared w.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.mesh import data_axes
+
+# sentinels resolved per-mesh at application time
+BATCH = "__batch__"  # the data-parallel axis product (pod, data)
+FSDP = "__fsdp__"  # 'data' when fsdp=True, dropped otherwise
+
+
+# ===================================================== primitives ========
+
+
+def named(mesh, *spec) -> NamedSharding:
+    """``NamedSharding(mesh, P(*spec))`` — the one construction point."""
+    return NamedSharding(mesh, P(*spec))
+
+
+def replicated(mesh) -> NamedSharding:
+    return named(mesh)
+
+
+def logits_sharding(mesh) -> NamedSharding:
+    """(B, S, Vp) logits: vocab over 'model' (no logits all-gather)."""
+    return named(mesh, None, None, "model")
+
+
+def token_sharding(mesh) -> NamedSharding:
+    """(B,) sampled tokens — replicated batch vector."""
+    return named(mesh, None)
+
+
+def _axes_dividing(dim_size: int, axes: tuple, mesh) -> tuple:
+    """Longest prefix of ``axes`` whose mesh-size product divides
+    ``dim_size`` (constraint dropping: indivisible dims silently skip)."""
+    axes = tuple(a for a in axes if a in mesh.axis_names)
+    while axes:
+        k = 1
+        for a in axes:
+            k *= mesh.shape[a]
+        if k and dim_size % k == 0:
+            return axes
+        axes = axes[:-1]
+    return ()
+
+
+def _resolve_entry(entry, dim_size: int, mesh, fsdp: bool = True):
+    """One spec entry (axis name / tuple / sentinel / None) → final entry
+    with indivisible axes dropped."""
+    if entry is None:
+        return None
+    if entry == BATCH:
+        axes = data_axes(mesh)
+    elif entry == FSDP:
+        axes = ("data",) if fsdp else ()
+    elif isinstance(entry, tuple):
+        axes = entry
+    else:
+        axes = (entry,)
+    axes = _axes_dividing(dim_size, axes, mesh)
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+def _spec_for(template, shape, mesh, fsdp: bool = True) -> P:
+    """Right-align ``template`` to ``shape`` (leading dims replicate) and
+    resolve every entry with divisibility dropping."""
+    ndim = len(shape)
+    if len(template) > ndim:
+        template = template[len(template) - ndim:]
+    pad = ndim - len(template)
+    entries = [None] * pad + [
+        _resolve_entry(e, shape[pad + i], mesh, fsdp)
+        for i, e in enumerate(template)
+    ]
+    return P(*entries)
+
+
+# ===================================================== batch =============
+
+
+def batch_pspec(mesh, global_batch: int) -> P:
+    """Largest data-axis product that divides the global batch.  Axes are
+    dropped outermost-last: (pod, data) → (pod,) → () so a batch that
+    fits only the pod axis still shards across pods."""
+    entry = _resolve_entry(BATCH, global_batch, mesh)
+    return P(entry)
+
+
+def batch_sharding(mesh, global_batch: int, ndim: int,
+                   leading: int = 0) -> NamedSharding:
+    """Batch-dim-only sharding for an input of ``ndim`` dims whose batch
+    dimension sits after ``leading`` leading dims (e.g. M-RoPE positions
+    are (3, B, S) → leading=1)."""
+    entry = _resolve_entry(BATCH, global_batch, mesh)
+    spec = [None] * ndim
+    spec[leading] = entry
+    return named(mesh, *spec)
+
+
+# ===================================================== activations =======
+
+
+# templates are right-aligned against the activation's shape
+ACT_RULES: Mapping[str, tuple] = {
+    "act_resid": (BATCH, None, None),
+    "act_mlp_in": (BATCH, None, None),
+    "act_q": (BATCH, None, "model", None),
+    "act_kv": (BATCH, None, "model", None),
+    "act_q_dec": (BATCH, None, None, None),
+    "act_kv_dec": (BATCH, None, None, None),
+    "cache": (BATCH, "model", None, None),
+    "act_attn_out_dec": (BATCH, None, None),
+    "act_logits": (BATCH, None, "model"),
+    "act_moe_groups": (BATCH, None, None),
+    "act_moe_xe": ("model", None, None),
+    "act_moe_xe4": (BATCH, "model", None, None),
+    "act_ssm_inner": (BATCH, None, "model"),
+    "act_ssm_dt": (BATCH, None, "model"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Mesh-optional activation-sharding policy.
+
+    ``rules.act(x, name)`` constrains ``x`` to the logical spec for
+    ``name`` on ``rules.mesh``; with no mesh (or an unknown name, a rank
+    mismatch, or a fully-dropped spec) it is the identity, so model code
+    can annotate unconditionally.
+    """
+
+    mesh: Any = None
+    rules: Optional[Mapping[str, tuple]] = None
+
+    def spec(self, name: str, shape) -> Optional[P]:
+        template = (self.rules or ACT_RULES).get(name)
+        if template is None or self.mesh is None:
+            return None
+        return _spec_for(template, shape, self.mesh)
+
+    def act(self, x, name: str):
+        spec = self.spec(name, x.shape)
+        if spec is None or all(e is None for e in spec):
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec)
+        )
+
+
+NO_RULES = ShardingRules(mesh=None)
+
+
+# ===================================================== params ============
+
+
+# per-param-name templates over the leaf's TRAILING dims (stacked layer
+# dims on the left replicate).  FSDP resolves to 'data' when fsdp=True.
+_PARAM_RULES: Mapping[str, tuple] = {
+    # embeddings / heads: (Vp, D)
+    "embed": ("model", FSDP),
+    "lm_head": ("model", FSDP),
+    "enc_pos": (None, FSDP),
+    # attention: column-parallel in, row-parallel out
+    "wq": (FSDP, "model"),
+    "wk": (FSDP, "model"),
+    "wv": (FSDP, "model"),
+    "wo": ("model", FSDP),
+    # dense SwiGLU: (D, F) / (F, D)
+    "wg": (FSDP, "model"),
+    "wu": (FSDP, "model"),
+    "wd": ("model", FSDP),
+    "router": (FSDP, None),
+    # Mamba2: z/x/dt column-sharded by SSD heads; B/C replicated
+    "in_z": (FSDP, "model"),
+    "in_x": (FSDP, "model"),
+    "in_dt": (FSDP, "model"),
+    "in_bc": (FSDP, None),
+    "out_proj": ("model", FSDP),
+    "conv_wx": (None, "model"),
+    "conv_bx": ("model",),
+    "A_log": ("model",),
+    "D_skip": ("model",),
+    "dt_bias": ("model",),
+}
+
+# expert-stacked MoE weights (E, D, F) / (E, F, D): EP-resident shards
+# experts over 'model' only; otherwise tensor-parallel like dense MLP.
+_MOE_EP_RULES: Mapping[str, tuple] = {
+    "wg": ("model", None, None),
+    "wu": ("model", None, None),
+    "wd": ("model", None, None),
+}
+_MOE_TP_RULES: Mapping[str, tuple] = {
+    "wg": (None, FSDP, "model"),
+    "wu": (None, FSDP, "model"),
+    "wd": (None, "model", FSDP),
+}
+
+
+def _leaf_name(path) -> str:
+    for key in reversed(path):
+        if isinstance(key, jax.tree_util.DictKey):
+            return str(key.key)
+        if isinstance(key, jax.tree_util.GetAttrKey):
+            return key.name
+    return ""
+
+
+def _is_expert_stacked(name: str, leaf) -> bool:
+    # moe wg/wu/wd carry an extra expert dim: (L, E, D, F) vs (L, D, F)
+    return name in ("wg", "wu", "wd") and leaf.ndim >= 4
+
+
+def param_shardings(cfg, mesh, specs, *, fsdp: bool = True):
+    """NamedSharding tree for a param (or ShapeDtypeStruct) tree.
+
+    FSDP shards the non-'model' matmul dim over 'data'; tensor parallel
+    follows the Megatron column→row pattern over 'model'.  Indivisible
+    dims drop their constraint, so the same policy lowers on any mesh.
+    """
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        if _is_expert_stacked(name, leaf):
+            table = (_MOE_EP_RULES if getattr(cfg, "moe_ep_resident", True)
+                     else _MOE_TP_RULES)
+            template = table[name]
+        else:
+            template = _PARAM_RULES.get(name, ())
+        spec = _spec_for(template, leaf.shape, mesh, fsdp)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, specs)
+
+
+def opt_shardings(p_sh, mesh, specs, *, zero1_axis: str = "data"):
+    """ZeRO-1 optimizer-state shardings: additionally shard each moment
+    over ``zero1_axis`` on the first still-replicated divisible dim
+    (keeps Adam state at 1/dp_size per device)."""
+    k = mesh.shape.get(zero1_axis, 1) if hasattr(mesh.shape, "get") else \
+        mesh.shape[zero1_axis]
+
+    def one(sh, leaf):
+        spec = list(sh.spec) + [None] * (leaf.ndim - len(sh.spec))
+        used = {a for e in spec if e is not None
+                for a in (e if isinstance(e, tuple) else (e,))}
+        if zero1_axis in used:  # FSDP already owns this param's slice
+            return sh
+        for dim in range(leaf.ndim):
+            if spec[dim] is None and k > 1 and leaf.shape[dim] % k == 0:
+                spec[dim] = zero1_axis
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, p_sh, specs)
+
+
+# ===================================================== caches ============
+
+
+# right-aligned templates per cache field (leading layer dim replicates):
+#   attn/cross K,V : (L, B, S, Hkv, hd) — B over DP, S over 'model'
+#                    (split-KV: decode q is heads-replicated, so the
+#                    sequence axis is the profitable one to shard)
+#   ssm h          : (L, B, H, P, N)    — SSD heads over 'model'
+#   ssm conv_x     : (L, B, k-1, d_in)  — inner width over 'model'
+#   ssm conv_bc    : (L, B, k-1, 2N)    — replicated (shared B/C)
+_CACHE_RULES: Mapping[str, tuple] = {
+    "attn_k": (BATCH, "model", None, None),
+    "attn_v": (BATCH, "model", None, None),
+    "cross_k": (BATCH, "model", None, None),
+    "cross_v": (BATCH, "model", None, None),
+    "h": (BATCH, "model", None, None),
+    "conv_x": (BATCH, None, "model"),
+    "conv_bc": (BATCH, None, None),
+}
+
+
+def cache_shardings(cfg, mesh, cache_specs, global_batch: int):
+    """NamedSharding tree matching a ``Cache`` spec tree.  The batch dim
+    shards like the model inputs (``batch_pspec``); every other proposed
+    axis drops when indivisible (e.g. whisper's 1500-frame cross cache)."""
+    batch_entry = _resolve_entry(BATCH, global_batch, mesh)
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        template = _CACHE_RULES.get(name)
+        if template is None or leaf.ndim < len(template):
+            return replicated(mesh)
+        # resolve the batch slot against the actual batch entry so the
+        # cache composes with the input shardings even when the global
+        # batch only fits a prefix of the data axes
+        template = tuple(batch_entry if e == BATCH else e for e in template)
+        spec = _spec_for(template, leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_specs)

@@ -29,18 +29,20 @@ import traceback
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding
-from jax.sharding import PartitionSpec as P
 
 from repro.configs import SHAPES, cells_for_arch, get_config
 from repro.configs.registry import ARCHS, get_schedule
 from repro.configs.shapes import shape_applicable
+from repro.dist.compat import cost_analysis
+from repro.dist.mesh import make_production_mesh
 from repro.dist.sharding import (
     ShardingRules,
     cache_shardings,
+    logits_sharding,
     param_shardings,
+    replicated,
+    token_sharding,
 )
-from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import analyze_hlo, roofline_report
 from repro.launch.specs import (
     batch_shardings_for,
@@ -102,7 +104,7 @@ def build_train_lowering(cfg, shape, mesh, *, microbatches=None,
                            microbatches=mb, remat=True,
                            acc_shardings=(o_sh if (zero1 and mb > 1)
                                           else None))
-    rep = NamedSharding(mesh, P())
+    rep = replicated(mesh)
     state_sh = state_specs._replace(
         params=p_sh,
         opt=state_specs.opt._replace(
@@ -137,8 +139,7 @@ def build_prefill_lowering(cfg, shape, mesh, *, microbatches=None,
     b_sh = batch_shardings_for(cfg, shape, mesh)
     c_specs = cache_specs(cfg, shape)
     c_sh = cache_shardings(cfg, mesh, c_specs, shape.global_batch)
-    rep = NamedSharding(mesh, P())
-    logits_sh = NamedSharding(mesh, P(None, None, "model"))
+    logits_sh = logits_sharding(mesh)
     jitted = jax.jit(
         step,
         in_shardings=(p_sh, b_sh, c_sh),
@@ -159,9 +160,8 @@ def build_decode_lowering(cfg, shape, mesh, *, microbatches=None,
     b_sh = batch_shardings_for(cfg, shape, mesh)
     c_specs = cache_specs(cfg, shape)
     c_sh = cache_shardings(cfg, mesh, c_specs, shape.global_batch)
-    rep = NamedSharding(mesh, P())
-    logits_sh = NamedSharding(mesh, P(None, None, "model"))
-    token_sh = NamedSharding(mesh, P(None))
+    logits_sh = logits_sharding(mesh)
+    token_sh = token_sharding(mesh)
     jitted = jax.jit(
         step,
         in_shardings=(p_sh, b_sh, c_sh),
@@ -217,7 +217,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     compiled = lowered.compile()
     t_compile = time.time() - t0
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis()
+    ca = cost_analysis(compiled)
     hlo = compiled.as_text()
     stats = analyze_hlo(hlo)
     n_chips = mesh.devices.size

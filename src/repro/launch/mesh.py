@@ -1,31 +1,8 @@
-"""Production mesh construction.
+"""Thin re-export shim — the mesh layer moved to ``repro.dist.mesh``."""
 
-A function (not a module-level constant) so importing this module never
-touches jax device state — callers control when devices are initialized
-(the dry-run sets ``xla_force_host_platform_device_count=512`` first).
-"""
-
-from __future__ import annotations
-
-import jax
-
-
-def make_production_mesh(*, multi_pod: bool = False):
-    """Single pod: (data=16, model=16) = 256 chips.
-    Multi-pod: (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis
-    composes with ``data`` for the DP gradient reduction and carries the
-    cross-pod (DCN-ish) collectives that the dry-run must prove shard."""
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
-
-
-def data_axes(mesh) -> tuple:
-    """Axes that form the data-parallel dimension."""
-    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-
-
-def dp_size(mesh) -> int:
-    import math
-
-    return math.prod(mesh.shape[a] for a in data_axes(mesh))
+from repro.dist.mesh import (  # noqa: F401
+    data_axes,
+    dp_size,
+    make_production_mesh,
+    solver_mesh,
+)

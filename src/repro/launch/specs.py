@@ -9,8 +9,6 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding
-from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.configs.shapes import InputShape

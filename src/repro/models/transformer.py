@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.dist.sharding import NO_RULES, ShardingRules  # noqa: F401 — re-export
 from repro.models.attention import chunked_attention
 from repro.models.layers import (
     ACC,
@@ -46,14 +47,6 @@ from repro.models.ssm import (
 )
 
 KV_CHUNK = 1024  # online-softmax KV chunk (divides all assigned seq lens)
-
-
-class _NoRules:
-    def act(self, x, name):  # noqa: ARG002
-        return x
-
-
-NO_RULES = _NoRules()
 
 
 def vocab_padded(cfg: ModelConfig) -> int:

@@ -6,7 +6,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.transformer import NO_RULES, decode_step, prefill
+from repro.dist.sharding import NO_RULES
+from repro.models.transformer import decode_step, prefill
 
 
 def make_prefill_step(cfg: ModelConfig, rules=NO_RULES):

@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.transformer import NO_RULES, forward_train, vocab_padded
+from repro.dist.sharding import NO_RULES
+from repro.models.transformer import forward_train, vocab_padded
 from repro.optim.adamw import AdamWState, adamw_init, adamw_update
 from repro.optim.grad_compress import (
     CompressState,

@@ -1,0 +1,95 @@
+"""Minimal, deterministic stand-in for the ``hypothesis`` API surface
+used by this test suite.
+
+The CI image installs real hypothesis (see pyproject's ``test`` extra);
+hermetic containers without it get this fallback instead, wired up by
+``conftest.py`` ONLY when ``import hypothesis`` fails.  It implements
+just what the suite uses — ``given`` (keyword strategies), ``settings``
+(max_examples / deadline) and the ``floats`` / ``integers`` /
+``sampled_from`` / ``booleans`` / ``composite`` strategies — drawing
+uniform seeded examples, so property tests stay meaningful (many random
+examples per property) and reproducible (seeded per test name).
+"""
+
+from __future__ import annotations
+
+import random
+import types
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 50
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def _floats(min_value, max_value):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def _booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def _composite(fn):
+    def build(*args, **kwargs):
+        def draw_fn(rng):
+            return fn(lambda s: s.example(rng), *args, **kwargs)
+
+        return _Strategy(draw_fn)
+
+    return build
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.floats = _floats
+strategies.integers = _integers
+strategies.sampled_from = _sampled_from
+strategies.booleans = _booleans
+strategies.composite = _composite
+
+
+def settings(**kwargs):
+    def deco(fn):
+        fn._hyp_settings = kwargs
+        return fn
+
+    return deco
+
+
+def given(**strategy_kwargs):
+    def deco(fn):
+        # NOTE: no functools.wraps — the wrapper must expose a
+        # (*args, **kwargs) signature so pytest does not mistake the
+        # strategy parameters for fixtures.
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_hyp_settings", None) or getattr(
+                fn, "_hyp_settings", {}
+            )
+            n = cfg.get("max_examples", DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(zlib.crc32(fn.__name__.encode()))
+            for _ in range(n):
+                drawn = {k: s.example(rng) for k, s in strategy_kwargs.items()}
+                fn(*args, **{**kwargs, **drawn})
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._hyp_settings = getattr(fn, "_hyp_settings", {})
+        return wrapper
+
+    return deco

@@ -7,6 +7,23 @@ os.environ.pop("XLA_FLAGS", None)
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# hypothesis is a test-only dependency (pyproject ``test`` extra); on
+# hermetic containers without it, register the deterministic fallback
+# under the real module names BEFORE test modules import it.
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import importlib.util
+
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis",
+        os.path.join(os.path.dirname(__file__), "_hypothesis_fallback.py"),
+    )
+    _mod = importlib.util.module_from_spec(_spec)
+    sys.modules["hypothesis"] = _mod
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis.strategies"] = _mod.strategies
+
 import jax  # noqa: E402
 import pytest  # noqa: E402
 
