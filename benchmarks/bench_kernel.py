@@ -1,25 +1,35 @@
-"""DCD Pallas kernel benchmark: epoch wall time vs the pure-jnp oracle
-(interpret mode on CPU — semantics validation + host-side throughput;
-the BlockSpec tiling targets TPU VMEM)."""
+"""DCD Pallas kernel benchmark: epoch wall time vs the pure-jnp oracle,
+plus the fused (Pallas block engine) vs unfused (jnp fori_loop) sharded
+PASSCoDe epoch head-to-head (interpret mode on CPU — semantics
+validation + host-side throughput; the BlockSpec tiling targets TPU).
+
+``main()`` returns its rows so benchmarks/run.py can persist them as
+out/BENCH_kernel.json and the perf trajectory starts recording.
+"""
 
 from __future__ import annotations
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, timeit
+from repro.core.duals import Hinge
+from repro.core.sharded import make_sharded_epoch
+from repro.dist.mesh import solver_mesh
 from repro.kernels import dcd_epoch_pallas, dcd_epoch_ref
 
 
-def main() -> None:
+def _bench_epoch_vs_oracle(rows):
     rng = np.random.default_rng(0)
     for n, d in ((1024, 256), (2048, 512)):
         X = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32)) * 0.1
         q = jnp.sum(X * X, axis=1)
         alpha, w = jnp.zeros(n), jnp.zeros(d)
         t_ref = timeit(lambda: dcd_epoch_ref(X, alpha, w, q, 1.0, False))
-        emit(f"kernel/ref_jnp/n={n},d={d}", t_ref * 1e6, "")
+        rows.append({"name": f"kernel/ref_jnp/n={n},d={d}",
+                     "us_per_call": t_ref * 1e6, "derived": ""})
         for block in (128, 256):
             t = timeit(lambda: dcd_epoch_pallas(
                 X, alpha, w, q, c=1.0, block_rows=block))
@@ -27,8 +37,62 @@ def main() -> None:
                                       block_rows=block)
             a2, w2 = dcd_epoch_ref(X, alpha, w, q, 1.0, False)
             err = float(jnp.max(jnp.abs(w1 - w2)))
-            emit(f"kernel/pallas_interpret/n={n},d={d},block={block}",
-                 t * 1e6, f"max_err_vs_ref={err:.2e}")
+            rows.append({
+                "name": f"kernel/pallas_interpret/n={n},d={d},block={block}",
+                "us_per_call": t * 1e6,
+                "derived": f"max_err_vs_ref={err:.2e}",
+            })
+
+
+def _bench_fused_vs_unfused_sharded(rows):
+    """The head-to-head the fusion PR exists for: one sharded PASSCoDe
+    epoch with the jnp block engine vs the Pallas block engine, same
+    mesh, same blocks."""
+    rng = np.random.default_rng(1)
+    n, d, block_size = 1024, 256, 64
+    X = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32)) * 0.1
+    loss = Hinge(C=1.0)
+    mesh = solver_mesh("data")
+    p = mesh.shape["data"]
+    n_loc = n // p
+    sq = jnp.sum(X * X, axis=1)
+    alpha = jnp.zeros((n,), jnp.float32)
+    w = jnp.zeros((d,), jnp.float32)
+    carry = jnp.zeros((d,), jnp.float32)
+    n_blocks = n_loc // block_size
+    keys = jax.random.split(jax.random.PRNGKey(0), p)
+    perms = jax.vmap(
+        lambda k: jax.random.permutation(k, n_loc)[: n_blocks * block_size]
+    )(keys)
+    blocks = perms.reshape(p * n_blocks, block_size)
+
+    times = {}
+    for label, use_kernel in (("unfused_jnp", False), ("fused_pallas", True)):
+        epoch_fn = make_sharded_epoch(mesh, loss, block_size,
+                                      use_kernel=use_kernel)
+        t = timeit(lambda: epoch_fn(X, sq, alpha, w, blocks, carry))
+        times[label] = t
+        mode = ("interpret" if use_kernel and
+                jax.default_backend() != "tpu" else "compiled")
+        rows.append({
+            "name": f"kernel/sharded_epoch_{label}/n={n},d={d},B={block_size}",
+            "us_per_call": t * 1e6,
+            "derived": f"mode={mode}",
+        })
+    rows.append({
+        "name": f"kernel/sharded_fused_over_unfused/n={n},d={d}",
+        "us_per_call": times["fused_pallas"] * 1e6,
+        "derived": f"ratio={times['fused_pallas'] / times['unfused_jnp']:.2f}",
+    })
+
+
+def main() -> list:
+    rows: list = []
+    _bench_epoch_vs_oracle(rows)
+    _bench_fused_vs_unfused_sharded(rows)
+    for r in rows:
+        emit(r["name"], r["us_per_call"], r["derived"])
+    return rows
 
 
 if __name__ == "__main__":

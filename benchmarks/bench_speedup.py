@@ -14,6 +14,8 @@ from repro.core.dcd import DcdState, dcd_epoch
 from repro.core.duals import Hinge
 from repro.core.passcode import passcode_epoch
 from repro.core.asyscd import _asyscd_epoch
+from repro.core.sharded import make_sharded_epoch
+from repro.dist.mesh import _lane_pad, solver_mesh
 
 
 def main() -> None:
@@ -48,6 +50,32 @@ def main() -> None:
         t = timeit(fn) * (rounds / sample)
         emit(f"fig_speedup/asyscd/threads={threads}", t * 1e6,
              f"speedup={t_serial / t:.3f}x;extrapolated_from=50rounds")
+
+    # sharded (shard_map) epoch, unfused jnp vs fused Pallas block engine
+    # — same solver, two executions of the hot loop.  On this CPU host
+    # the fused row runs the kernel in interpret mode (semantics, not
+    # perf); on TPU it is the compiled head-to-head.
+    mesh = solver_mesh("data")
+    p = mesh.shape["data"]
+    block_size = 64
+    n_loc = n // p
+    n_blocks = max(n_loc // block_size, 1)
+    keys = jax.random.split(jax.random.PRNGKey(1), p)
+    perms = jax.vmap(
+        lambda k: jax.random.permutation(k, n_loc)[: n_blocks * block_size]
+    )(keys)
+    blocks = perms.reshape(p * n_blocks, block_size)
+    d_pad = _lane_pad(d)  # fused path wants 128-lane tiling
+    Xp = X if d_pad == d else \
+        jnp.zeros((n, d_pad), X.dtype).at[:, :d].set(X)
+    for label, use_kernel in (("unfused", False), ("fused", True)):
+        epoch_fn = make_sharded_epoch(mesh, loss, block_size,
+                                      use_kernel=use_kernel)
+        Xr, dr = (Xp, d_pad) if use_kernel else (X, d)
+        t = timeit(lambda: epoch_fn(Xr, sq, jnp.zeros(n), jnp.zeros(dr),
+                                    blocks, jnp.zeros(dr)))
+        emit(f"fig_speedup/sharded_{label}/devices={p}", t * 1e6,
+             f"speedup={t_serial / t:.2f}x")
 
 
 if __name__ == "__main__":

@@ -1,12 +1,25 @@
 """Benchmark driver — one section per paper table/figure + roofline.
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows.  Sections whose ``main()``
+returns row dicts additionally persist them as out/BENCH_<tag>.json so
+the perf trajectory is recorded across PRs (currently: the DCD Pallas
+kernel section → out/BENCH_kernel.json, fused vs unfused epoch).
 """
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
+
+
+def _persist(tag: str, rows) -> None:
+    os.makedirs("out", exist_ok=True)
+    path = os.path.join("out", f"BENCH_{tag}.json")
+    with open(path, "w") as f:
+        json.dump({"rows": rows}, f, indent=2)
+    print(f"# wrote {path} ({len(rows)} rows)", file=sys.stderr)
 
 
 def main() -> None:
@@ -20,18 +33,20 @@ def main() -> None:
     )
 
     sections = [
-        ("Table 1 (scaling)", bench_scaling),
-        ("Table 2 (w_hat vs w_bar accuracy)", bench_accuracy),
-        ("Fig 4-6a (convergence)", bench_convergence),
-        ("Fig 2-6d (speedup)", bench_speedup),
-        ("DCD Pallas kernel", bench_kernel),
-        ("Roofline (dry-run artifacts)", bench_roofline),
+        ("Table 1 (scaling)", bench_scaling, None),
+        ("Table 2 (w_hat vs w_bar accuracy)", bench_accuracy, None),
+        ("Fig 4-6a (convergence)", bench_convergence, None),
+        ("Fig 2-6d (speedup)", bench_speedup, None),
+        ("DCD Pallas kernel", bench_kernel, "kernel"),
+        ("Roofline (dry-run artifacts)", bench_roofline, None),
     ]
     print("name,us_per_call,derived")
-    for title, mod in sections:
+    for title, mod, tag in sections:
         print(f"# --- {title} ---", file=sys.stderr)
         t0 = time.time()
-        mod.main()
+        rows = mod.main()
+        if tag is not None and rows:
+            _persist(tag, rows)
         print(f"# {title}: {time.time()-t0:.1f}s", file=sys.stderr)
 
 

@@ -1,7 +1,9 @@
 """End-to-end SVM training with every PASSCoDe execution mode, including
-the Pallas-kernel epoch and the shard_map-distributed solver.
+the Pallas-kernel epoch, the shard_map-distributed solver, and the fused
+combination (the kernel as the solver's per-device block engine).
 
     PYTHONPATH=src python examples/train_svm_passcode.py [--dataset rcv1]
+                                                         [--use-kernel auto]
 """
 
 import argparse
@@ -27,7 +29,14 @@ def main():
     ap.add_argument("--dataset", default="tiny",
                     choices=sorted(DATASET_RECIPES))
     ap.add_argument("--epochs", type=int, default=10)
+    ap.add_argument("--use-kernel", default="on",
+                    choices=["off", "on", "auto"],
+                    help="block engine for the fused sharded run: the "
+                         "Pallas kernel (interpret mode on CPU), or "
+                         "'auto' (kernel only on TPU when the shard "
+                         "fits VMEM)")
     args = ap.parse_args()
+    use_kernel = {"off": False, "on": True, "auto": "auto"}[args.use_kernel]
 
     ds = make_dataset(args.dataset)
     X, Xt = ds.dense_train(), ds.dense_test()
@@ -46,6 +55,9 @@ def main():
             X, loss, n_threads=8, memory_model="wild", epochs=args.epochs)),
         ("sharded (shard_map)", lambda: sharded_passcode_solve(
             X, loss, epochs=args.epochs, block_size=16)),
+        ("sharded + Pallas fused", lambda: sharded_passcode_solve(
+            X, loss, epochs=args.epochs, block_size=16,
+            use_kernel=use_kernel)),
     ]:
         t0 = time.time()
         r = fn()

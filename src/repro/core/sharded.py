@@ -23,6 +23,20 @@ Mapping of the paper's shared-memory model onto an SPMD mesh:
 like §3.3's per-thread permutation blocks); X rows likewise.  w is
 replicated (d fits on-chip for all paper datasets; a feature-sharded
 variant for kddb-scale d lives in ``sharded_passcode_feature``).
+
+The per-device block of B locally-sequential updates — the hot loop —
+has two interchangeable engines (DESIGN.md §6):
+
+  * ``_local_block_update`` — unfused ``fori_loop`` of jnp ops (default);
+  * ``use_kernel=True`` — the fused Pallas indexed-block kernel
+    (``repro.kernels.dcd_block_update_pallas``): the device's whole row
+    shard is VMEM-resident, updates gather/scatter by row id inside one
+    kernel (interpret mode on CPU, compiled on TPU).  ``"auto"`` fuses
+    only on TPU when ``repro.dist.mesh.dcd_kernel_fits`` says the shard
+    fits VMEM, falling back to pure jnp otherwise.
+
+Both compute the identical update sequence; tests assert agreement to
+atol 1e-5 across hinge / squared-hinge / logistic and delay_rounds.
 """
 
 from __future__ import annotations
@@ -37,8 +51,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.objective import duality_gap, w_of_alpha
 from repro.dist.compat import shard_map
-from repro.dist.mesh import solver_mesh
+from repro.dist.mesh import _lane_pad, dcd_kernel_fits, solver_mesh
 from repro.dist.sharding import named, replicated
+from repro.kernels.ops import dcd_block_update_pallas
 
 
 class ShardedResult(NamedTuple):
@@ -64,9 +79,43 @@ def _local_block_update(X_loc, sq_loc, alpha_loc, w, idx_block, loss):
     return alpha_loc, w_new - w  # (updated α shard, local Δw)
 
 
-def make_sharded_epoch(mesh: Mesh, loss, block_size: int, delay_rounds: int = 0):
-    """Build the jitted shard_map epoch function for a given mesh."""
+def _resolve_kernel_mode(use_kernel, n_loc: int, d: int):
+    """Resolve ``use_kernel`` ∈ {False, True, "auto"} → (fused?, interpret?).
+
+    "auto" fuses only where it pays: compiled on TPU with the row shard
+    VMEM-resident (``dcd_kernel_fits``); everywhere else the pure-jnp
+    block update is kept.  ``True`` forces the kernel — in interpret mode
+    off-TPU, which validates semantics rather than speed.
+    """
+    on_tpu = jax.default_backend() == "tpu"
+    if use_kernel == "auto":
+        use_kernel = on_tpu and dcd_kernel_fits(n_loc, d)
+    return bool(use_kernel), not on_tpu
+
+
+def make_sharded_epoch(mesh: Mesh, loss, block_size: int,
+                       delay_rounds: int = 0, *, use_kernel: bool = False,
+                       interpret: bool | None = None):
+    """Build the jitted shard_map epoch function for a given mesh.
+
+    ``use_kernel`` swaps the per-device block engine for the fused Pallas
+    indexed-block kernel; callers must then lane-pad d to a multiple of
+    128 (``sharded_passcode_solve`` does).  ``interpret`` defaults to
+    True off-TPU.
+    """
     axis = "data"
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    def block_update(X_loc, sq_loc, alpha_loc, w_eff, idx_block):
+        if use_kernel:
+            return dcd_block_update_pallas(
+                X_loc, sq_loc, alpha_loc, w_eff, idx_block, loss=loss,
+                interpret=interpret,
+            )
+        return _local_block_update(
+            X_loc, sq_loc, alpha_loc, w_eff, idx_block, loss
+        )
 
     def epoch(X, sq_norms, alpha, w, blocks_idx, carry_dw):
         # blocks_idx: (n_blocks, B) *local* row ids per device (sharded).
@@ -78,8 +127,8 @@ def make_sharded_epoch(mesh: Mesh, loss, block_size: int, delay_rounds: int = 0)
                     w_eff = w_loc + dw_prev
                 else:
                     w_eff = w_loc
-                alpha_loc, dw_local = _local_block_update(
-                    X_loc, sq_loc, alpha_loc, w_eff, idx_block, loss
+                alpha_loc, dw_local = block_update(
+                    X_loc, sq_loc, alpha_loc, w_eff, idx_block
                 )
                 dw_all = jax.lax.psum(dw_local, axis)
                 if delay_rounds > 0:
@@ -113,26 +162,39 @@ def sharded_passcode_solve(
     delay_rounds: int = 0,
     seed: int = 0,
     record: bool = True,
+    use_kernel: bool | str = False,
 ) -> ShardedResult:
     """Distributed PASSCoDe-Atomic.  ``X_host``: dense (n, d) array; rows
-    are sharded across the mesh's ``data`` axis."""
+    are sharded across the mesh's ``data`` axis.
+
+    ``use_kernel``: False (pure-jnp block update), True (fused Pallas
+    block engine — interpret mode off-TPU), or "auto" (fused only on TPU
+    when the shard fits VMEM; see ``_resolve_kernel_mode``)."""
     if mesh is None:
         mesh = solver_mesh("data")
     p = mesh.shape["data"]
     n, d = X_host.shape
     n_loc = n // p
     n_use = n_loc * p
+    use_k, interpret = _resolve_kernel_mode(use_kernel, n_loc, d)
     X = jnp.asarray(X_host[:n_use])
+    X_gap = X  # duality gap always reads the unpadded data
     sq_norms = jnp.sum(X * X, axis=1)
+    # the kernel wants clean (8, 128) f32 tiling: lane-pad d with zero
+    # columns (inert in every dot product; sliced off the returned w)
+    d_run = _lane_pad(d) if use_k else d
+    if d_run != d:
+        X = jnp.zeros((n_use, d_run), jnp.float32).at[:, :d].set(X)
     data_sh = named(mesh, "data")
     rep_sh = replicated(mesh)
     X = jax.device_put(X, named(mesh, "data", None))
     sq_norms = jax.device_put(sq_norms, data_sh)
     alpha = jax.device_put(jnp.zeros((n_use,), jnp.float32), data_sh)
-    w = jax.device_put(jnp.zeros((d,), jnp.float32), rep_sh)
-    carry_dw = jax.device_put(jnp.zeros((d,), jnp.float32), rep_sh)
+    w = jax.device_put(jnp.zeros((d_run,), jnp.float32), rep_sh)
+    carry_dw = jax.device_put(jnp.zeros((d_run,), jnp.float32), rep_sh)
 
-    epoch_fn = make_sharded_epoch(mesh, loss, block_size, delay_rounds)
+    epoch_fn = make_sharded_epoch(mesh, loss, block_size, delay_rounds,
+                                  use_kernel=use_k, interpret=interpret)
     key = jax.random.PRNGKey(seed)
     n_blocks = max(n_loc // block_size, 1)
     gaps = []
@@ -151,10 +213,10 @@ def sharded_passcode_solve(
         )
         alpha, w, carry_dw = epoch_fn(X, sq_norms, alpha, w, blocks, carry_dw)
         if record:
-            gaps.append(float(duality_gap(alpha, X, loss)))
+            gaps.append(float(duality_gap(alpha, X_gap, loss)))
     if delay_rounds > 0:
         w = w + carry_dw  # flush in-flight aggregate
-    return ShardedResult(alpha, w, jnp.asarray(gaps), epochs)
+    return ShardedResult(alpha, w[:d], jnp.asarray(gaps), epochs)
 
 
 def sharded_passcode_feature(

@@ -38,3 +38,43 @@ def data_axes(mesh) -> tuple:
 
 def dp_size(mesh) -> int:
     return math.prod(mesh.shape[a] for a in data_axes(mesh))
+
+
+# ------------------------------------------------------- VMEM policy ----
+# Whether a solver shard fits on-chip is *distribution* policy (it decides
+# between the fused Pallas round and the pure-jnp fallback in
+# ``repro.core.sharded``), so it lives here next to ``solver_mesh`` rather
+# than in the kernel package.  DESIGN.md §6.
+
+VMEM_BYTES = 16 * 2**20  # per-TensorCore VMEM (v4/v5-class parts)
+
+
+def _lane_pad(d: int, lanes: int = 128) -> int:
+    return ((d + lanes - 1) // lanes) * lanes
+
+
+def dcd_kernel_vmem_bytes(n_loc: int, d: int, *, itemsize: int = 4) -> int:
+    """Resident working set of the fused indexed-block DCD round: the
+    whole (n_loc, d̃) local shard plus w in/out (2·d̃), α in/out + q
+    (3·n_loc f32) and the int32 index block (n_loc upper bound)."""
+    dp = _lane_pad(d)
+    return itemsize * (n_loc * dp + 2 * dp + 3 * n_loc) + 4 * n_loc
+
+
+def dcd_kernel_fits(n_loc: int, d: int, *, vmem_bytes: int = VMEM_BYTES,
+                    headroom: float = 0.9) -> bool:
+    """True when a device's row shard can stay VMEM-resident for the fused
+    kernel; otherwise ``sharded_passcode_solve(use_kernel="auto")`` keeps
+    the pure-jnp block update."""
+    return dcd_kernel_vmem_bytes(n_loc, d) <= headroom * vmem_bytes
+
+
+def dcd_block_rows(d: int, *, vmem_bytes: int = VMEM_BYTES,
+                   headroom: float = 0.9, max_rows: int = 512) -> int:
+    """Largest power-of-two row tile for the *contiguous* epoch kernel
+    whose (B, d̃) tile + w + per-row vectors fit the VMEM budget."""
+    dp = _lane_pad(d)
+    b = max_rows
+    while b > 8 and 4 * (b * dp + 2 * dp + 3 * b) > headroom * vmem_bytes:
+        b //= 2
+    return b

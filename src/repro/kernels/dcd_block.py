@@ -1,8 +1,8 @@
 """Pallas TPU kernel: block-resident dual coordinate descent epoch.
 
-TPU adaptation of the PASSCoDe hot loop (DESIGN.md §2).  The GPU/multicore
-original races on a shared DRAM ``w``; the TPU version makes the working
-set explicit:
+TPU adaptation of the PASSCoDe hot loop (DESIGN.md §2, §6).  The
+GPU/multicore original races on a shared DRAM ``w``; the TPU version
+makes the working set explicit:
 
   * rows arrive in VMEM as dense (BLOCK_ROWS, d) tiles (one grid step per
     tile — ELL/CSR rows are densified into tiles by the op wrapper);
@@ -11,15 +11,35 @@ set explicit:
     step sees the previous step's writes — serial-DCD-exact semantics
     with zero locking;
   * within a tile, updates run sequentially (fori_loop): w·x_t is a VPU
-    reduction over d lanes, the closed-form δ is scalar work, and the
-    rank-1 update w += δ·x_t is a vector axpy.
+    reduction over d lanes, the closed-form (or Newton, for logistic) δ
+    is scalar work, and the rank-1 update w += δ·x_t is a vector axpy.
+
+Two addressing modes share the δ machinery:
+
+  contiguous (``idx=None``) — grid step i processes rows
+    [i·B, (i+1)·B) in order; only the current tile is VMEM-resident.
+  indexed (``idx=``) — grid step i processes the arbitrary *local* row
+    ids idx[i·B:(i+1)·B], gathered from a fully VMEM-resident X; α is
+    carried across steps like w.  This computes exactly what the sharded
+    solver's ``_local_block_update`` computes on a permuted block, which
+    is how ``repro.core.sharded`` fuses its per-device round
+    (``make_sharded_epoch(use_kernel=True)``).  The VMEM feasibility
+    policy for the resident shard lives in ``repro.dist.mesh``
+    (``dcd_kernel_fits`` / ``dcd_block_rows``).
+
+The one-variable subproblem is solved by the *same* ``loss.delta`` the
+jnp solvers use (``repro.core.duals``: hinge and squared-hinge closed
+forms, logistic via safeguarded Newton) — the loss object is a frozen
+dataclass, hashable, and traces fine inside the kernel, so the fused and
+unfused paths share one definition of the update math.
 
 dtype: f32 accumulators (α, w); X tiles may be f32 or bf16 (cast on use).
 
 VMEM budget per grid step (f32): BLOCK_ROWS·d (tile) + 2·d (w, x) +
 3·BLOCK_ROWS (α, q, scratch) ≈ 256·8192·4B ≈ 8 MiB at the default block —
 inside the ~16 MiB/core budget, and d is lane-aligned to 128 by the
-wrapper for clean (8,128) f32 tiling.
+wrapper for clean (8,128) f32 tiling.  The indexed mode instead holds the
+whole (n_loc, d) shard: see ``repro.dist.mesh.dcd_kernel_vmem_bytes``.
 """
 
 from __future__ import annotations
@@ -31,16 +51,26 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def _legacy_loss(c: float, sq_hinge: bool):
+    """Loss object for the pre-``loss=`` API (``c``/``sq_hinge`` flags).
+
+    Imported lazily: ``repro.core`` imports ``repro.kernels`` (the solver
+    wires the kernel in), so a module-level import here would be a cycle.
+    """
+    from repro.core.duals import Hinge, SquaredHinge
+
+    return (SquaredHinge if sq_hinge else Hinge)(C=c)
+
+
 def _dcd_tile_kernel(
     x_ref,  # (B, d)  row tile, VMEM
-    alpha_ref,  # (B, 1)  dual block, VMEM (aliased in/out)
+    alpha_ref,  # (B, 1)  dual block, VMEM
     q_ref,  # (B, 1)  row squared norms
     w_ref,  # (1, d)  primal — full vector, constant index_map (carried)
     alpha_out,  # (B, 1)
     w_out,  # (1, d)
     *,
-    c: float,
-    sq_hinge: bool,
+    loss,
     block_rows: int,
 ):
     # First grid step must seed the carried w output; afterwards w_out
@@ -54,57 +84,117 @@ def _dcd_tile_kernel(
         wx = jnp.sum(w * x)
         a = alpha_ref[pl.ds(t, 1), :]  # (1, 1)
         q = q_ref[pl.ds(t, 1), :]
-        if sq_hinge:
-            denom = q + 1.0 / (2.0 * c)
-            new = jnp.maximum(a + (1.0 - wx - a / (2.0 * c)) / denom, 0.0)
-        else:
-            new = jnp.clip(a + (1.0 - wx) / jnp.maximum(q, 1e-12), 0.0, c)
-        delta = new - a
-        alpha_out[pl.ds(t, 1), :] = new
+        delta = loss.delta(a, wx, q)
+        alpha_out[pl.ds(t, 1), :] = a + delta
         return w + delta * x  # rank-1 axpy, stays in registers/VMEM
 
     w = jax.lax.fori_loop(0, block_rows, body, w_out[...].astype(jnp.float32))
     w_out[...] = w
 
 
+def _dcd_indexed_kernel(
+    idx_ref,  # (B, 1)  int32 local row ids for this grid step
+    x_ref,  # (n, d)  whole shard, VMEM-resident (constant index_map)
+    alpha_ref,  # (n, 1)  duals — full vector (seeds the carried output)
+    q_ref,  # (n, 1)  row squared norms
+    w_ref,  # (1, d)  primal (seeds the carried output)
+    alpha_out,  # (n, 1)  carried across grid steps
+    w_out,  # (1, d)  carried across grid steps
+    *,
+    loss,
+    block_rows: int,
+):
+    @pl.when(pl.program_id(0) == 0)
+    def _seed():
+        alpha_out[...] = alpha_ref[...]
+        w_out[...] = w_ref[...]
+
+    def body(t, w):
+        i = idx_ref[t, 0]
+        x = x_ref[pl.ds(i, 1), :].astype(jnp.float32)  # gather one row
+        wx = jnp.sum(w * x)
+        a = alpha_out[pl.ds(i, 1), :]  # read the running α, not the seed
+        q = q_ref[pl.ds(i, 1), :]
+        delta = loss.delta(a, wx, q)
+        alpha_out[pl.ds(i, 1), :] = a + delta  # scatter back
+        return w + delta * x
+
+    w = jax.lax.fori_loop(0, block_rows, body, w_out[...].astype(jnp.float32))
+    w_out[...] = w
+
+
 def dcd_epoch_pallas_call(
-    X,  # (n, d) dense, n % block_rows == 0, d % 128 == 0
+    X,  # (n, d) dense, d % 128 == 0; n % block_rows == 0 if idx is None
     alpha,  # (n,)
     w,  # (d,)
     sq_norms,  # (n,)
     *,
-    c: float,
+    c: float = 1.0,
     sq_hinge: bool = False,
+    loss=None,  # overrides c/sq_hinge: any repro.core.duals-style loss
+    idx=None,  # (m,) int32 row ids, m % block_rows == 0 → indexed mode
     block_rows: int = 256,
     interpret: bool = False,
 ):
     n, d = X.shape
-    assert n % block_rows == 0, (n, block_rows)
-    grid = (n // block_rows,)
+    if loss is None:
+        loss = _legacy_loss(c, sq_hinge)
     alpha2 = alpha.reshape(n, 1).astype(jnp.float32)
     q2 = sq_norms.reshape(n, 1).astype(jnp.float32)
     w2 = w.reshape(1, d).astype(jnp.float32)
 
+    if idx is None:
+        assert n % block_rows == 0, (n, block_rows)
+        grid = (n // block_rows,)
+        kernel = functools.partial(
+            _dcd_tile_kernel, loss=loss, block_rows=block_rows
+        )
+        alpha_out, w_out = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_rows, d), lambda i: (i, 0)),  # row tile
+                pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),  # alpha
+                pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),  # sq norms
+                pl.BlockSpec((1, d), lambda i: (0, 0)),  # w: constant map
+            ],
+            out_specs=[
+                pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+                pl.BlockSpec((1, d), lambda i: (0, 0)),  # carried
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((n, 1), jnp.float32),
+                jax.ShapeDtypeStruct((1, d), jnp.float32),
+            ],
+            interpret=interpret,
+        )(X, alpha2, q2, w2)
+        return alpha_out.reshape(n), w_out.reshape(d)
+
+    m = idx.shape[0]
+    assert m % block_rows == 0, (m, block_rows)
+    grid = (m // block_rows,)
+    idx2 = idx.reshape(m, 1).astype(jnp.int32)
     kernel = functools.partial(
-        _dcd_tile_kernel, c=c, sq_hinge=sq_hinge, block_rows=block_rows
+        _dcd_indexed_kernel, loss=loss, block_rows=block_rows
     )
     alpha_out, w_out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),  # row tile
-            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),  # alpha block
-            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),  # sq norms
-            pl.BlockSpec((1, d), lambda i: (0, 0)),  # w: constant map
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),  # idx block
+            pl.BlockSpec((n, d), lambda i: (0, 0)),  # X: whole shard
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),  # alpha seed
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),  # sq norms
+            pl.BlockSpec((1, d), lambda i: (0, 0)),  # w seed
         ],
         out_specs=[
-            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
-            pl.BlockSpec((1, d), lambda i: (0, 0)),  # carried across steps
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),  # carried α
+            pl.BlockSpec((1, d), lambda i: (0, 0)),  # carried w
         ],
         out_shape=[
             jax.ShapeDtypeStruct((n, 1), jnp.float32),
             jax.ShapeDtypeStruct((1, d), jnp.float32),
         ],
         interpret=interpret,
-    )(X, alpha2, q2, w2)
+    )(idx2, X, alpha2, q2, w2)
     return alpha_out.reshape(n), w_out.reshape(d)

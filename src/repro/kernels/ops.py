@@ -18,12 +18,26 @@ def _on_tpu() -> bool:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("c", "sq_hinge", "block_rows", "interpret"),
+    static_argnames=("c", "sq_hinge", "loss", "block_rows", "interpret"),
 )
-def _epoch(X, alpha, w, sq_norms, c, sq_hinge, block_rows, interpret):
+def _epoch(X, alpha, w, sq_norms, c, sq_hinge, loss, block_rows, interpret):
     return dcd_epoch_pallas_call(
         X, alpha, w, sq_norms,
-        c=c, sq_hinge=sq_hinge, block_rows=block_rows, interpret=interpret,
+        c=c, sq_hinge=sq_hinge, loss=loss, block_rows=block_rows,
+        interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("c", "sq_hinge", "loss", "block_rows",
+                              "interpret"),
+)
+def _epoch_indexed(X, alpha, w, sq_norms, idx, c, sq_hinge, loss,
+                   block_rows, interpret):
+    return dcd_epoch_pallas_call(
+        X, alpha, w, sq_norms,
+        c=c, sq_hinge=sq_hinge, loss=loss, idx=idx, block_rows=block_rows,
+        interpret=interpret,
     )
 
 
@@ -35,29 +49,79 @@ def dcd_epoch_pallas(
     *,
     c: float = 1.0,
     sq_hinge: bool = False,
+    loss=None,
+    idx=None,
     block_rows: int = 256,
     interpret: bool | None = None,
 ):
-    """One in-order DCD epoch via the Pallas kernel.
+    """One DCD epoch via the Pallas kernel — in row order, or in ``idx``
+    order when a row-index vector is given (indexed/gather mode).
 
-    Pads rows to a block multiple (with zero rows: q=0 ⇒ δ clipped to the
-    box, α stays 0 since padding α=0 and wx=0 ⇒ hinge δ would be
-    clip(0 + 1/eps)... zero rows are instead given q=1, value 0 ⇒ δ=clip(1)
-    — so we mask them by α=0, x=0 ⇒ w unchanged; α of padding discarded)
-    and lanes to 128.
+    Padding semantics: rows are padded to a block multiple with all-zero
+    rows carrying α=0 and q=1, and lanes (d) to a multiple of 128 with
+    zero columns.  A zero row cannot change ``w``: its wᵀx is 0 and the
+    rank-1 update δ·x is identically zero whatever δ the update rule
+    produces.  The q=1 (not the true q=0) only keeps δ finite — e.g. the
+    hinge update would otherwise divide (1 − wᵀx) = 1 by the q→1e-12
+    safeguard and clip a huge step.  The padding rows' α entries do take
+    nonzero junk values (hinge: clip(0 + 1/1, 0, C) = min(1, C)), which
+    is why they are sliced off before returning; zero lane-padding
+    columns are inert in every dot product and are likewise sliced off
+    w.  Net effect: the returned (α[:n], w[:d]) are exactly the unpadded
+    epoch's result.
+
+    ``loss`` (any ``repro.core.duals``-style frozen loss) overrides the
+    legacy ``c``/``sq_hinge`` flags and extends coverage to logistic.
+    ``idx`` (int32 row ids into X) runs the indexed kernel: updates are
+    applied in idx order, X stays fully VMEM-resident; out-of-order and
+    repeated ids are allowed.
     """
     if interpret is None:
         interpret = not _on_tpu()
     n, d = X.shape
-    br = min(block_rows, max(8, n))
-    n_pad = ((n + br - 1) // br) * br
     d_pad = ((d + 127) // 128) * 128
     if sq_norms is None:
         sq_norms = jnp.sum(X * X, axis=1)
+    if idx is None:
+        br = min(block_rows, max(8, n))
+        n_pad = ((n + br - 1) // br) * br
+    else:
+        idx = jnp.asarray(idx, jnp.int32)
+        m = idx.shape[0]
+        br = min(block_rows, max(1, m))
+        m_pad = ((m + br - 1) // br) * br
+        # one extra zero row for padded index slots to land on
+        n_pad = n + 1 if m_pad > m else n
+        if m_pad > m:
+            idx = jnp.concatenate(
+                [idx, jnp.full((m_pad - m,), n, jnp.int32)]
+            )
     Xp = jnp.zeros((n_pad, d_pad), X.dtype).at[:n, :d].set(X)
     ap = jnp.zeros((n_pad,), jnp.float32).at[:n].set(alpha)
     qp = jnp.ones((n_pad,), jnp.float32).at[:n].set(sq_norms)
     wp = jnp.zeros((d_pad,), jnp.float32).at[:d].set(w)
-    a_out, w_out = _epoch(Xp, ap, wp, qp, float(c), bool(sq_hinge), br,
-                          bool(interpret))
+    if idx is None:
+        a_out, w_out = _epoch(Xp, ap, wp, qp, float(c), bool(sq_hinge),
+                              loss, br, bool(interpret))
+    else:
+        a_out, w_out = _epoch_indexed(Xp, ap, wp, qp, idx, float(c),
+                                      bool(sq_hinge), loss, br,
+                                      bool(interpret))
     return a_out[:n], w_out[:d]
+
+
+def dcd_block_update_pallas(X, sq_norms, alpha, w, idx, *, loss,
+                            interpret: bool = False):
+    """One indexed block of B sequential DCD updates — the fused
+    equivalent of ``repro.core.sharded._local_block_update``.
+
+    Traced (not jitted) so it can run inside a ``shard_map`` body: X is
+    this device's (n_loc, d) shard with d already lane-padded to 128 by
+    the caller, ``idx`` the (B,) local row ids of the block.  Returns
+    (updated α shard, local Δw) exactly like the pure-jnp version.
+    """
+    a_new, w_new = dcd_epoch_pallas_call(
+        X, alpha, w, sq_norms, loss=loss, idx=idx,
+        block_rows=idx.shape[0], interpret=interpret,
+    )
+    return a_new, w_new - w

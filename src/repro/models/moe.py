@@ -22,7 +22,7 @@ Dispatch codecs (``dispatch=``):
 ``group_size`` should scale with d_ff: dispatch/expert FLOP ratio is
 g/(3·d_ff) for einsum, so the default adapts (``auto_group_size``).
 
-Groups are processed under ``lax.map`` with per-group ``jax.checkpoint``
+Groups are processed under a scan-of-vmapped-blocks with per-group ``jax.checkpoint``
 so one group's tensors never outlive its step (the 242 GiB → HBM-fit fix
 for granite, §Perf iteration 1).
 """
@@ -34,9 +34,27 @@ import jax.numpy as jnp
 
 from repro.models.layers import ACC, dense
 
-# number of token-groups processed per lax.map step; higher = more
+# number of token-groups processed per scan step; higher = more
 # parallelism, more temp memory.
 _GROUP_BLOCK = 1
+
+
+def _scan_groups(fn, xg, block):
+    """``lax.map(fn, xg, batch_size=block)`` replacement: scan of vmapped
+    blocks.  jax 0.4.x's ``batch_size=`` path always builds a remainder
+    scan; when ``block`` divides G that scan has length 0 and the top_k
+    VJP inside emits a gather on a size-0 dim ("slice size ... must be
+    within [0, 0 + 1)"), so we block by hand and never create a
+    zero-length remainder."""
+    G = xg.shape[0]
+    blk = max(1, min(block, G))
+    while G % blk:
+        blk -= 1
+    xb = xg.reshape((G // blk, blk) + xg.shape[1:])
+    _, (out, aux) = jax.lax.scan(
+        lambda c, xs: (c, jax.vmap(fn)(xs)), None, xb
+    )
+    return out.reshape((G,) + out.shape[2:]), aux.reshape(G)
 
 
 def auto_group_size(d_ff: int, T: int, requested: int = 2048) -> int:
@@ -203,5 +221,5 @@ def moe_mlp(x, router_w, w_gate, w_up, w_down, *, top_k: int,
     one_group = one_group_scatter
     if remat_groups:
         one_group = jax.checkpoint(one_group)
-    out, aux = jax.lax.map(one_group, xg, batch_size=_GROUP_BLOCK)
+    out, aux = _scan_groups(one_group, xg, _GROUP_BLOCK)
     return out.reshape(T, D), jnp.mean(aux)

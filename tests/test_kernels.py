@@ -1,12 +1,18 @@
 """Pallas DCD kernel vs pure-jnp oracle — shape/dtype sweeps in
 interpret mode (CPU); the kernel itself targets TPU BlockSpec tiling."""
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.dcd import dcd_solve
-from repro.kernels import dcd_epoch_pallas, dcd_epoch_ref
+from repro.core.dcd import DcdState, dcd_epoch, dcd_solve
+from repro.core.duals import Hinge, Logistic, SquaredHinge
+from repro.kernels import (
+    dcd_block_update_pallas,
+    dcd_epoch_pallas,
+    dcd_epoch_ref,
+)
 
 
 def _data(n, d, seed=0, scale=0.1):
@@ -79,4 +85,83 @@ def test_kernel_nondivisible_padding():
     np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), rtol=1e-5,
                                atol=1e-5)
     np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "loss", [Hinge(C=1.0), SquaredHinge(C=0.5), Logistic(C=1.0)],
+    ids=["hinge", "sq", "logistic"],
+)
+def test_indexed_kernel_matches_permuted_dcd(loss):
+    """The indexed (gather) kernel on a shuffled id vector == serial DCD
+    run in that permutation order — incl. logistic's in-kernel Newton."""
+    X, q = _data(96, 72, seed=7)
+    n, d = X.shape
+    perm = jax.random.permutation(jax.random.PRNGKey(2), n)
+    a1, w1 = dcd_epoch_pallas(X, jnp.zeros(n), jnp.zeros(d), q,
+                              loss=loss, idx=perm, block_rows=32)
+    st = dcd_epoch(X, q, DcdState(jnp.zeros(n), jnp.zeros(d)), perm, loss)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(st.alpha),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(st.w),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_indexed_kernel_partial_and_repeated_ids():
+    """idx may visit a subset, repeat rows, and have len % block != 0
+    (padded slots land on a sentinel zero row that cannot move w)."""
+    X, q = _data(64, 40, seed=8)
+    loss = Hinge(C=1.0)
+    idx = jnp.asarray([3, 3, 17, 5, 63, 0, 17], jnp.int32)
+    a1, w1 = dcd_epoch_pallas(X, jnp.zeros(64), jnp.zeros(40), q,
+                              loss=loss, idx=idx, block_rows=4)
+    # oracle: sequential updates in idx order
+    alpha, w = jnp.zeros(64), jnp.zeros(40)
+    for i in [int(v) for v in idx]:
+        delta = loss.delta(alpha[i], jnp.dot(w, X[i]), q[i])
+        alpha = alpha.at[i].add(delta)
+        w = w + delta * X[i]
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(alpha),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w),
+                               rtol=1e-5, atol=1e-5)
+    # untouched rows stay exactly zero
+    touched = set(int(v) for v in idx)
+    mask = np.ones(64, bool)
+    mask[list(touched)] = False
+    assert not np.asarray(a1)[mask].any()
+
+
+def test_logistic_epoch_kernel_contiguous():
+    """Contiguous-tile mode with the generic loss= path (logistic)."""
+    X, q = _data(128, 64, seed=9)
+    loss = Logistic(C=1.0)
+    a1, w1 = dcd_epoch_pallas(X, jnp.zeros(128), jnp.zeros(64), q,
+                              loss=loss, block_rows=64)
+    st = dcd_epoch(X, q, DcdState(jnp.zeros(128), jnp.zeros(64)),
+                   jnp.arange(128), loss)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(st.alpha),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(st.w),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_block_update_matches_local_block_update():
+    """dcd_block_update_pallas == sharded._local_block_update on one
+    permuted block (the exact contract the fused solver relies on)."""
+    from repro.core.sharded import _local_block_update
+
+    X, q = _data(64, 128, seed=10)  # d already lane-aligned
+    loss = SquaredHinge(C=1.0)
+    alpha = jnp.abs(jnp.asarray(
+        np.random.default_rng(1).standard_normal(64), jnp.float32)) * 0.1
+    w = jnp.asarray(
+        np.random.default_rng(2).standard_normal(128), jnp.float32) * 0.05
+    idx = jax.random.permutation(jax.random.PRNGKey(3), 64)[:16]
+    a1, dw1 = dcd_block_update_pallas(X, q, alpha, w, idx, loss=loss,
+                                      interpret=True)
+    a2, dw2 = _local_block_update(X, q, alpha, w, idx, loss)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(dw1), np.asarray(dw2), rtol=1e-5,
                                atol=1e-5)
