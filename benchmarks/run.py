@@ -3,7 +3,9 @@
 Prints ``name,us_per_call,derived`` CSV rows.  Sections whose ``main()``
 returns row dicts additionally persist them as out/BENCH_<tag>.json so
 the perf trajectory is recorded across PRs (currently: the DCD Pallas
-kernel section → out/BENCH_kernel.json, fused vs unfused epoch).
+kernel section → out/BENCH_kernel.json, fused vs unfused epoch; the
+sparse ELL section → out/BENCH_sparse.json, dense-vs-ELL epoch + VMEM
+frontier).
 """
 
 from __future__ import annotations
@@ -29,6 +31,7 @@ def main() -> None:
         bench_kernel,
         bench_roofline,
         bench_scaling,
+        bench_sparse,
         bench_speedup,
     )
 
@@ -38,6 +41,7 @@ def main() -> None:
         ("Fig 4-6a (convergence)", bench_convergence, None),
         ("Fig 2-6d (speedup)", bench_speedup, None),
         ("DCD Pallas kernel", bench_kernel, "kernel"),
+        ("Sparse ELL path", bench_sparse, "sparse"),
         ("Roofline (dry-run artifacts)", bench_roofline, None),
     ]
     print("name,us_per_call,derived")

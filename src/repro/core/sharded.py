@@ -25,18 +25,31 @@ replicated (d fits on-chip for all paper datasets; a feature-sharded
 variant for kddb-scale d lives in ``sharded_passcode_feature``).
 
 The per-device block of B locally-sequential updates — the hot loop —
-has two interchangeable engines (DESIGN.md §6):
+has four interchangeable engines, selected by the type of ``X_host``
+(dense array vs ``repro.data.sparse.EllMatrix``) × ``use_kernel``
+(DESIGN.md §6, §9):
 
-  * ``_local_block_update`` — unfused ``fori_loop`` of jnp ops (default);
-  * ``use_kernel=True`` — the fused Pallas indexed-block kernel
-    (``repro.kernels.dcd_block_update_pallas``): the device's whole row
+  * ``_local_block_update`` — unfused ``fori_loop`` of dense jnp ops;
+  * ``_local_block_update_ell`` — unfused ELL engine: O(k_max) gather /
+    dot / dummy-slot scatter per update against a (d+1)-padded primal;
+  * ``use_kernel=True`` — the fused Pallas indexed-block kernels
+    (``repro.kernels.dcd_block_update_pallas`` dense,
+    ``dcd_ell_block_update_pallas`` sparse): the device's whole row
     shard is VMEM-resident, updates gather/scatter by row id inside one
     kernel (interpret mode on CPU, compiled on TPU).  ``"auto"`` fuses
-    only on TPU when ``repro.dist.mesh.dcd_kernel_fits`` says the shard
-    fits VMEM, falling back to pure jnp otherwise.
+    only on TPU when the shard fits VMEM — ``dcd_kernel_fits`` for the
+    dense n_loc·d̃ shard, ``dcd_ell_kernel_fits`` for the ~2·n_loc·k̃
+    ELL shard — falling back to pure jnp otherwise.
 
-Both compute the identical update sequence; tests assert agreement to
-atol 1e-5 across hinge / squared-hinge / logistic and delay_rounds.
+All four compute the identical update sequence; tests assert agreement
+to atol 1e-5 across hinge / squared-hinge / logistic and delay_rounds
+(``tests/test_sharded_kernel.py``, ``tests/test_sharded_ell.py``).
+
+Rows whose count is not divisible by the device count are no longer
+dropped: the tail pads to p-divisibility with zero rows (q set to 1 so
+δ stays finite) that are masked out of every block permutation, so they
+are never selected where a device owns at least one real row, and can
+never move w regardless (a zero row's rank-1 update is identically 0).
 """
 
 from __future__ import annotations
@@ -50,10 +63,16 @@ from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro.core.objective import duality_gap, w_of_alpha
+from repro.data.sparse import EllMatrix
 from repro.dist.compat import shard_map
-from repro.dist.mesh import _lane_pad, dcd_kernel_fits, solver_mesh
+from repro.dist.mesh import (
+    _lane_pad,
+    dcd_ell_kernel_fits,
+    dcd_kernel_fits,
+    solver_mesh,
+)
 from repro.dist.sharding import named, replicated
-from repro.kernels.ops import dcd_block_update_pallas
+from repro.kernels.ops import dcd_block_update_pallas, dcd_ell_block_update_pallas
 
 
 class ShardedResult(NamedTuple):
@@ -79,35 +98,103 @@ def _local_block_update(X_loc, sq_loc, alpha_loc, w, idx_block, loss):
     return alpha_loc, w_new - w  # (updated α shard, local Δw)
 
 
-def _resolve_kernel_mode(use_kernel, n_loc: int, d: int):
+def _local_block_update_ell(cols_loc, vals_loc, sq_loc, alpha_loc, w_pad,
+                            idx_block, loss):
+    """B sequential DCD updates on this device's ELL shard: O(k_max)
+    gather-dot and dummy-slot scatter per update.  ``w_pad`` carries the
+    padded primal (slot d — and any lane padding above it — always 0,
+    since padding ids scatter δ·0 there)."""
+
+    def body(t, carry):
+        alpha_loc, w_loc = carry
+        i = idx_block[t]
+        c = cols_loc[i]
+        v = vals_loc[i]
+        wx = jnp.sum(w_loc[c] * v)
+        delta = loss.delta(alpha_loc[i], wx, sq_loc[i])
+        return alpha_loc.at[i].add(delta), w_loc.at[c].add(delta * v)
+
+    alpha_loc, w_new = jax.lax.fori_loop(
+        0, idx_block.shape[0], body, (alpha_loc, w_pad)
+    )
+    return alpha_loc, w_new - w_pad  # (updated α shard, local Δw_pad)
+
+
+def _resolve_kernel_mode(use_kernel, n_loc: int, d: int,
+                         k_max: int | None = None):
     """Resolve ``use_kernel`` ∈ {False, True, "auto"} → (fused?, interpret?).
 
     "auto" fuses only where it pays: compiled on TPU with the row shard
-    VMEM-resident (``dcd_kernel_fits``); everywhere else the pure-jnp
-    block update is kept.  ``True`` forces the kernel — in interpret mode
+    VMEM-resident (``dcd_kernel_fits``, or ``dcd_ell_kernel_fits`` when
+    ``k_max`` marks the shard as ELL — the sparse policy admits large-d
+    problems the dense one rejects); everywhere else the pure-jnp block
+    update is kept.  ``True`` forces the kernel — in interpret mode
     off-TPU, which validates semantics rather than speed.
     """
     on_tpu = jax.default_backend() == "tpu"
     if use_kernel == "auto":
-        use_kernel = on_tpu and dcd_kernel_fits(n_loc, d)
+        if k_max is not None:
+            use_kernel = on_tpu and dcd_ell_kernel_fits(n_loc, k_max, d)
+        else:
+            use_kernel = on_tpu and dcd_kernel_fits(n_loc, d)
     return bool(use_kernel), not on_tpu
+
+
+def _masked_block_perms(key, p: int, n_loc: int, n_rows: int,
+                        n_blocks: int, block_size: int):
+    """Per-device block permutations that never select padding rows.
+
+    Device k owns local rows [0, n_loc) = global [k·n_loc, (k+1)·n_loc);
+    only the first ``valid_k = clip(n_rows − k·n_loc, 1, n_loc)`` are
+    real data.  Each device draws a permutation of n_loc, stable-sorts
+    the invalid ids to the back (keeping the permuted order of the valid
+    ones) and cycles through the valid prefix — with no padding this
+    reduces exactly to ``permutation(n_loc)[:n_blocks·B]``.  The clip to
+    ≥1 covers a device that owns *only* padding (possible when
+    n_rows < (p−1)·n_loc): it repeatedly selects local row 0, a zero row
+    with q←1 whose update cannot move w.
+    """
+    m = n_blocks * block_size
+    keys = jax.random.split(key, p)
+    valid = jnp.clip(n_rows - jnp.arange(p) * n_loc, 1, n_loc)
+
+    def one(k, v):
+        perm = jax.random.permutation(k, n_loc)
+        order = jnp.argsort(perm >= v)  # stable: valid ids first, in order
+        return perm[order][jnp.arange(m) % v]
+
+    return jax.vmap(one)(keys, valid)  # (p, m)
 
 
 def make_sharded_epoch(mesh: Mesh, loss, block_size: int,
                        delay_rounds: int = 0, *, use_kernel: bool = False,
-                       interpret: bool | None = None):
+                       interpret: bool | None = None, ell: bool = False):
     """Build the jitted shard_map epoch function for a given mesh.
 
     ``use_kernel`` swaps the per-device block engine for the fused Pallas
     indexed-block kernel; callers must then lane-pad d to a multiple of
-    128 (``sharded_passcode_solve`` does).  ``interpret`` defaults to
-    True off-TPU.
+    128 (``sharded_passcode_solve`` does).  ``ell`` selects the sparse
+    engines: ``X`` becomes a ``(cols, vals)`` pair of row-sharded ELL
+    arrays and ``w`` the (d₁,) padded primal with the dummy slot at
+    index d (lane-padded when fused).  ``interpret`` defaults to True
+    off-TPU.
     """
     axis = "data"
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
 
     def block_update(X_loc, sq_loc, alpha_loc, w_eff, idx_block):
+        if ell:
+            cols_loc, vals_loc = X_loc
+            if use_kernel:
+                return dcd_ell_block_update_pallas(
+                    cols_loc, vals_loc, sq_loc, alpha_loc, w_eff,
+                    idx_block, loss=loss, interpret=interpret,
+                )
+            return _local_block_update_ell(
+                cols_loc, vals_loc, sq_loc, alpha_loc, w_eff, idx_block,
+                loss,
+            )
         if use_kernel:
             return dcd_block_update_pallas(
                 X_loc, sq_loc, alpha_loc, w_eff, idx_block, loss=loss,
@@ -116,6 +203,8 @@ def make_sharded_epoch(mesh: Mesh, loss, block_size: int,
         return _local_block_update(
             X_loc, sq_loc, alpha_loc, w_eff, idx_block, loss
         )
+
+    x_spec = (P(axis), P(axis)) if ell else P(axis)
 
     def epoch(X, sq_norms, alpha, w, blocks_idx, carry_dw):
         # blocks_idx: (n_blocks, B) *local* row ids per device (sharded).
@@ -144,7 +233,7 @@ def make_sharded_epoch(mesh: Mesh, loss, block_size: int,
         return shard_map(
             device_fn,
             mesh=mesh,
-            in_specs=(P(axis), P(axis), P(axis), P(), P(axis), P()),
+            in_specs=(x_spec, P(axis), P(axis), P(), P(axis), P()),
             out_specs=(P(axis), P(), P()),
             check_vma=False,  # carries flip replicated→varying across psum
         )(X, sq_norms, alpha, w, blocks_idx, carry_dw)
@@ -163,48 +252,88 @@ def sharded_passcode_solve(
     seed: int = 0,
     record: bool = True,
     use_kernel: bool | str = False,
+    gap_every: int = 1,
 ) -> ShardedResult:
-    """Distributed PASSCoDe-Atomic.  ``X_host``: dense (n, d) array; rows
-    are sharded across the mesh's ``data`` axis.
+    """Distributed PASSCoDe-Atomic.  ``X_host``: dense (n, d) array or an
+    ``EllMatrix`` (the sparse fast path — per-update work drops from
+    O(d) to O(k_max)); rows are sharded across the mesh's ``data`` axis,
+    padded to p-divisibility with masked zero rows (never dropped).
 
     ``use_kernel``: False (pure-jnp block update), True (fused Pallas
     block engine — interpret mode off-TPU), or "auto" (fused only on TPU
-    when the shard fits VMEM; see ``_resolve_kernel_mode``)."""
+    when the shard fits VMEM — the dense or ELL policy as appropriate;
+    see ``_resolve_kernel_mode``).
+
+    ``gap_every``: with ``record=True``, compute the duality gap every
+    that many epochs (plus the final one).  Gap values stay on device
+    until the solve finishes, so recording no longer host-syncs (and
+    thereby serializes) every epoch."""
     if mesh is None:
         mesh = solver_mesh("data")
     p = mesh.shape["data"]
-    n, d = X_host.shape
-    n_loc = n // p
-    n_use = n_loc * p
-    use_k, interpret = _resolve_kernel_mode(use_kernel, n_loc, d)
-    X = jnp.asarray(X_host[:n_use])
-    X_gap = X  # duality gap always reads the unpadded data
-    sq_norms = jnp.sum(X * X, axis=1)
-    # the kernel wants clean (8, 128) f32 tiling: lane-pad d with zero
-    # columns (inert in every dot product; sliced off the returned w)
-    d_run = _lane_pad(d) if use_k else d
-    if d_run != d:
-        X = jnp.zeros((n_use, d_run), jnp.float32).at[:, :d].set(X)
+    is_ell = isinstance(X_host, EllMatrix)
+    if is_ell:
+        n, d, k_max = X_host.n_rows, X_host.n_features, X_host.k_max
+    else:
+        n, d = X_host.shape
+        k_max = None
+    n_loc = -(-n // p)  # ceil: the n % p tail is padded, not dropped
+    n_pad = n_loc * p
+    use_k, interpret = _resolve_kernel_mode(use_kernel, n_loc, d, k_max)
     data_sh = named(mesh, "data")
     rep_sh = replicated(mesh)
-    X = jax.device_put(X, named(mesh, "data", None))
+    if is_ell:
+        X_gap = X_host  # duality gap always reads the unpadded data
+        # lane-pad k_max to the 128-lane tile when fused; pad rows to
+        # n_pad with all-padding rows (index d, value 0)
+        k_run = _lane_pad(k_max) if use_k else k_max
+        cols = jnp.full((n_pad, k_run), d, jnp.int32)
+        cols = cols.at[:n, :k_max].set(jnp.asarray(X_host.indices, jnp.int32))
+        vals = jnp.zeros((n_pad, k_run), jnp.float32)
+        vals = vals.at[:n, :k_max].set(
+            jnp.asarray(X_host.values, jnp.float32))
+        # padded primal with the dummy slot at index d (lane-padded for
+        # clean tiling when fused); padding scatter-adds land there
+        d_run = _lane_pad(d + 1) if use_k else d + 1
+        sq_norms = jnp.ones((n_pad,), jnp.float32)
+        sq_norms = sq_norms.at[:n].set(X_host.row_sq_norms())
+        X = (
+            jax.device_put(cols, named(mesh, "data", None)),
+            jax.device_put(vals, named(mesh, "data", None)),
+        )
+    else:
+        X = jnp.asarray(X_host)
+        X_gap = X  # duality gap always reads the unpadded data
+        # the kernel wants clean (8, 128) f32 tiling: lane-pad d with
+        # zero columns (inert in every dot product; sliced off the
+        # returned w); row padding is all-zero rows with q set to 1 so
+        # their (never-selected) update stays finite
+        d_run = _lane_pad(d) if use_k else d
+        if d_run != d or n_pad != n:
+            X = jnp.zeros((n_pad, d_run), X.dtype).at[:n, :d].set(X)
+        sq_norms = jnp.sum(X * X, axis=1)
+        if n_pad != n:
+            sq_norms = sq_norms.at[n:].set(1.0)
+        X = jax.device_put(X, named(mesh, "data", None))
     sq_norms = jax.device_put(sq_norms, data_sh)
-    alpha = jax.device_put(jnp.zeros((n_use,), jnp.float32), data_sh)
+    alpha = jax.device_put(jnp.zeros((n_pad,), jnp.float32), data_sh)
     w = jax.device_put(jnp.zeros((d_run,), jnp.float32), rep_sh)
     carry_dw = jax.device_put(jnp.zeros((d_run,), jnp.float32), rep_sh)
 
     epoch_fn = make_sharded_epoch(mesh, loss, block_size, delay_rounds,
-                                  use_kernel=use_k, interpret=interpret)
+                                  use_kernel=use_k, interpret=interpret,
+                                  ell=is_ell)
     key = jax.random.PRNGKey(seed)
     n_blocks = max(n_loc // block_size, 1)
+    gap_every = max(int(gap_every), 1)
     gaps = []
-    for _ in range(epochs):
+    for e in range(epochs):
         key, sub = jax.random.split(key)
-        # per-device local permutation → (p, n_blocks, B) → flatten axis 0
-        keys = jax.random.split(sub, p)
-        local_perms = jax.vmap(
-            lambda k: jax.random.permutation(k, n_loc)[: n_blocks * block_size]
-        )(keys)
+        # per-device local permutation over *valid* rows only → (p,
+        # n_blocks, B); identical to permutation(n_loc)[:n_blocks*B]
+        # when nothing is padded
+        local_perms = _masked_block_perms(sub, p, n_loc, n, n_blocks,
+                                          block_size)
         blocks = local_perms.reshape(p, n_blocks, block_size)
         # shard_map expects the leading axis sharded: (p*n_blocks, B) with
         # device i owning rows [i*n_blocks, (i+1)*n_blocks)
@@ -212,11 +341,14 @@ def sharded_passcode_solve(
             blocks.reshape(p * n_blocks, block_size), data_sh
         )
         alpha, w, carry_dw = epoch_fn(X, sq_norms, alpha, w, blocks, carry_dw)
-        if record:
-            gaps.append(float(duality_gap(alpha, X_gap, loss)))
+        if record and ((e + 1) % gap_every == 0 or e == epochs - 1):
+            # device scalar — converted to host floats only after the
+            # final epoch, so epochs dispatch back-to-back
+            gaps.append(duality_gap(alpha[:n], X_gap, loss))
     if delay_rounds > 0:
         w = w + carry_dw  # flush in-flight aggregate
-    return ShardedResult(alpha, w[:d], jnp.asarray(gaps), epochs)
+    gaps_arr = jnp.stack(gaps) if gaps else jnp.zeros((0,), jnp.float32)
+    return ShardedResult(alpha[:n], w[:d], gaps_arr, epochs)
 
 
 def sharded_passcode_feature(

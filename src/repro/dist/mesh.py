@@ -69,6 +69,34 @@ def dcd_kernel_fits(n_loc: int, d: int, *, vmem_bytes: int = VMEM_BYTES,
     return dcd_kernel_vmem_bytes(n_loc, d) <= headroom * vmem_bytes
 
 
+def dcd_ell_kernel_vmem_bytes(n_loc: int, k_max: int, d: int, *,
+                              itemsize: int = 4) -> int:
+    """Resident working set of the fused *ELL* indexed-block round
+    (DESIGN.md §9): the (n_loc, k̃) column-id and value shards
+    (2·n_loc·k̃ words, k̃ = k_max lane-padded), the padded primal in/out
+    (2·d₁ with d₁ = lane_pad(d+1) for the dummy slot), α in/out + q
+    (3·n_loc f32) and the int32 index block (n_loc upper bound).
+
+    Independent of d except through the 2·d₁ primal term — this is what
+    admits the large-d problems (rcv1 d≈47k, news20 d≈1.3M at paper
+    scale) whose dense n_loc·d̃ shard ``dcd_kernel_fits`` rejects."""
+    kp = _lane_pad(k_max)
+    d1 = _lane_pad(d + 1)
+    return itemsize * (2 * n_loc * kp + 2 * d1 + 3 * n_loc) + 4 * n_loc
+
+
+def dcd_ell_kernel_fits(n_loc: int, k_max: int, d: int, *,
+                        vmem_bytes: int = VMEM_BYTES,
+                        headroom: float = 0.9) -> bool:
+    """True when a device's ELL row shard can stay VMEM-resident for the
+    fused sparse kernel; otherwise
+    ``sharded_passcode_solve(use_kernel="auto")`` keeps the unfused jnp
+    ELL block update."""
+    return dcd_ell_kernel_vmem_bytes(n_loc, k_max, d) <= (
+        headroom * vmem_bytes
+    )
+
+
 def dcd_block_rows(d: int, *, vmem_bytes: int = VMEM_BYTES,
                    headroom: float = 0.9, max_rows: int = 512) -> int:
     """Largest power-of-two row tile for the *contiguous* epoch kernel

@@ -7,16 +7,29 @@ tiled HBM→VMEM in blocks of B; within a block the updates run
 "maintain the primal" trick at VMEM latency); the sequential TPU grid
 carries w across blocks, so a whole epoch is ONE pallas_call.
 
-  dcd_block.py — the kernels (contiguous-tile + indexed/gather modes,
-                 pl.pallas_call + BlockSpec)
+  dcd_block.py — the dense kernels (contiguous-tile + indexed/gather
+                 modes, pl.pallas_call + BlockSpec)
+  dcd_ell.py   — the sparse (ELL) indexed kernel: O(k_max) gather /
+                 dummy-slot scatter per update against a 2·n_loc·k̃-word
+                 resident shard (DESIGN.md §9)
   ops.py       — jitted wrappers with CPU interpret fallback, plus
-                 ``dcd_block_update_pallas`` — the per-device block
-                 engine ``repro.core.sharded`` fuses into its shard_map
-                 rounds (``use_kernel=True``)
+                 ``dcd_block_update_pallas`` / ``dcd_ell_block_update_
+                 pallas`` — the per-device block engines
+                 ``repro.core.sharded`` fuses into its shard_map rounds
+                 (``use_kernel=True``)
   ref.py       — pure-jnp oracle (identical update order)
 """
 
-from repro.kernels.ops import dcd_block_update_pallas, dcd_epoch_pallas
+from repro.kernels.ops import (
+    dcd_block_update_pallas,
+    dcd_ell_block_update_pallas,
+    dcd_epoch_pallas,
+)
 from repro.kernels.ref import dcd_epoch_ref
 
-__all__ = ["dcd_block_update_pallas", "dcd_epoch_pallas", "dcd_epoch_ref"]
+__all__ = [
+    "dcd_block_update_pallas",
+    "dcd_ell_block_update_pallas",
+    "dcd_epoch_pallas",
+    "dcd_epoch_ref",
+]

@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: ELL (padded-sparse) indexed dual coordinate descent.
+
+Sparse sibling of ``repro.kernels.dcd_block``'s indexed mode (DESIGN.md
+§9).  PASSCoDe's datasets are 0.03–1% dense, so the dense kernel's
+per-update O(d) dot/axpy and O(n_loc·d) VMEM residency are both ~1000×
+larger than the work actually performed.  This kernel keeps the device's
+row shard in the ELL layout of ``repro.data.sparse.EllMatrix``:
+
+  cols: (n_loc, k̃) int32 column ids, padding == d (one past the end)
+  vals: (n_loc, k̃) f32 values, padding == 0.0
+
+with k̃ = k_max lane-padded to a multiple of 128, and holds ≈ 2·n_loc·k̃
+words resident instead of n_loc·d̃ — the VMEM policy is
+``repro.dist.mesh.dcd_ell_kernel_fits``.
+
+Per update (grid step i, loop step t over the block's row ids):
+
+  * gather the row's k̃ (column, value) pairs from the resident shard
+    (two dynamic row slices — same addressing as the dense indexed
+    kernel's row gather);
+  * w·x_i = Σ_k w[cols_k]·vals_k — an O(k̃) lane gather + reduction
+    against the (1, d₁) primal carried in VMEM, where d₁ = d+1
+    lane-padded: slot d is the *dummy slot*, so padded lanes gather
+    w[d] = 0 (times val 0) and contribute nothing;
+  * δ via the same ``loss.delta`` as every other engine
+    (``repro.core.duals``: closed forms + logistic Newton);
+  * scatter-add w[cols] += δ·vals — duplicate padding ids all land in
+    the dummy slot and add exact zeros, so w[d] stays 0 forever.
+
+α and w have constant BlockSpec index_maps and the TPU grid executes
+sequentially, so both carry across grid steps exactly like the dense
+indexed kernel: one pallas_call runs the whole sequence of blocks with
+serial-DCD semantics and zero locking.
+
+Lowering note: the lane gather/scatter (``jnp.take`` / ``.at[].add`` on
+the carried w *value*) is exact in interpret mode (CPU CI) and maps to
+Mosaic's dynamic-gather/scatter path on TPU; rows are gathered via
+``pl.ds`` dynamic slices like the dense kernel, so the only new
+primitive on the compiled path is the lane-indexed gather.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dcd_ell_indexed_kernel(
+    idx_ref,  # (B, 1)  int32 local row ids for this grid step
+    col_ref,  # (n, k)  whole shard's column ids, VMEM-resident
+    val_ref,  # (n, k)  whole shard's values, VMEM-resident
+    alpha_ref,  # (n, 1)  duals — seeds the carried output
+    q_ref,  # (n, 1)  row squared norms
+    w_ref,  # (1, d1) padded primal (dummy slot at d) — seeds the carry
+    alpha_out,  # (n, 1)  carried across grid steps
+    w_out,  # (1, d1) carried across grid steps
+    *,
+    loss,
+    block_rows: int,
+):
+    @pl.when(pl.program_id(0) == 0)
+    def _seed():
+        alpha_out[...] = alpha_ref[...]
+        w_out[...] = w_ref[...]
+
+    def body(t, w):  # w: (1, d1) f32 value, stays in VMEM/registers
+        i = idx_ref[t, 0]
+        cols = col_ref[pl.ds(i, 1), :][0]  # (k,) int32 row gather
+        vals = val_ref[pl.ds(i, 1), :].astype(jnp.float32)[0]  # (k,)
+        wx = jnp.sum(jnp.take(w[0], cols) * vals)  # O(k) lane gather
+        a = alpha_out[pl.ds(i, 1), :]  # running α, not the seed
+        q = q_ref[pl.ds(i, 1), :]
+        delta = loss.delta(a, wx, q)
+        alpha_out[pl.ds(i, 1), :] = a + delta
+        # rank-1 sparse axpy; padding ids scatter δ·0 into the dummy slot
+        return w.at[0, cols].add(delta[0, 0] * vals)
+
+    w = jax.lax.fori_loop(0, block_rows, body, w_out[...].astype(jnp.float32))
+    w_out[...] = w
+
+
+def dcd_ell_epoch_pallas_call(
+    cols,  # (n, k) int32, k % 128 == 0; padding ids == d (dummy slot)
+    vals,  # (n, k) f32, padding == 0
+    alpha,  # (n,)
+    w_pad,  # (d1,) padded primal, d1 % 128 == 0, slot d and above == 0
+    sq_norms,  # (n,)
+    *,
+    loss,
+    idx,  # (m,) int32 row ids, m % block_rows == 0
+    block_rows: int = 256,
+    interpret: bool = False,
+):
+    n, k = cols.shape
+    d1 = w_pad.shape[0]
+    m = idx.shape[0]
+    assert m % block_rows == 0, (m, block_rows)
+    grid = (m // block_rows,)
+    idx2 = idx.reshape(m, 1).astype(jnp.int32)
+    alpha2 = alpha.reshape(n, 1).astype(jnp.float32)
+    q2 = sq_norms.reshape(n, 1).astype(jnp.float32)
+    w2 = w_pad.reshape(1, d1).astype(jnp.float32)
+    kernel = functools.partial(
+        _dcd_ell_indexed_kernel, loss=loss, block_rows=block_rows
+    )
+    alpha_out, w_out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),  # idx block
+            pl.BlockSpec((n, k), lambda i: (0, 0)),  # cols: whole shard
+            pl.BlockSpec((n, k), lambda i: (0, 0)),  # vals: whole shard
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),  # alpha seed
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),  # sq norms
+            pl.BlockSpec((1, d1), lambda i: (0, 0)),  # w seed
+        ],
+        out_specs=[
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),  # carried α
+            pl.BlockSpec((1, d1), lambda i: (0, 0)),  # carried w
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, d1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(idx2, cols, vals, alpha2, q2, w2)
+    return alpha_out.reshape(n), w_out.reshape(d1)

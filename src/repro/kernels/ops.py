@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.dcd_block import dcd_epoch_pallas_call
+from repro.kernels.dcd_ell import dcd_ell_epoch_pallas_call
 
 
 def _on_tpu() -> bool:
@@ -125,3 +126,23 @@ def dcd_block_update_pallas(X, sq_norms, alpha, w, idx, *, loss,
         block_rows=idx.shape[0], interpret=interpret,
     )
     return a_new, w_new - w
+
+
+def dcd_ell_block_update_pallas(cols, vals, sq_norms, alpha, w_pad, idx, *,
+                                loss, interpret: bool = False):
+    """One indexed block of B sequential DCD updates on an ELL shard —
+    the fused equivalent of ``repro.core.sharded._local_block_update_ell``.
+
+    Traced (not jitted) so it can run inside a ``shard_map`` body:
+    ``cols``/``vals`` are this device's (n_loc, k̃) ELL shard with k̃
+    already lane-padded to 128 by the caller, ``w_pad`` the (d₁,) padded
+    primal (dummy slot at index d, d₁ a multiple of 128), ``idx`` the
+    (B,) local row ids of the block.  Returns (updated α shard, local
+    Δw_pad) exactly like the dense block engine — the padding slots of
+    Δw_pad are identically zero.
+    """
+    a_new, w_new = dcd_ell_epoch_pallas_call(
+        cols, vals, alpha, w_pad, sq_norms, loss=loss, idx=idx,
+        block_rows=idx.shape[0], interpret=interpret,
+    )
+    return a_new, w_new - w_pad

@@ -163,10 +163,16 @@ class HloAnalyzer:
             aend = self._matched_paren(raw, apos)
             argstr = raw[apos + 1: aend - 1]
             rest = raw[aend:]
+            # Operands print either bare ("%x") or with the shape inlined
+            # ("f32[64,128]{1,0} %Arg_0.1" — newer XLA); take the %name
+            # token from each comma fragment either way.  Shape commas
+            # ("[64,128]", "{1,0}") split into name-less fragments that
+            # contain no '%' and drop out naturally.
             args = [
-                a.strip().lstrip("%")
+                m_arg.group(1)
                 for a in re.split(r",(?![^\[\(]*[\]\)])", argstr)
-                if a.strip().startswith("%")
+                for m_arg in [re.search(r"%([\w\.\-]+)", a)]
+                if m_arg
             ]
             info = {
                 "op": op, "shape": shape, "args": args, "comp": current,
