@@ -126,8 +126,8 @@ def _bench_vmem_frontier(rows):
     cases = (
         # name, n_loc, d, k_max — Table-3 sizes at a realistic device
         # count; webspam's d=16.6M padded primal alone exceeds VMEM, so
-        # it stays rejected (that regime needs the feature-sharded
-        # solver, DESIGN.md §2)
+        # it stays rejected (that regime needs the 2D feature-sharded
+        # solver, DESIGN.md §10 / bench_feature.py)
         ("rcv1-full-p64", 677_399 // 64, 47_236, 80),
         ("news20-full-p32", 19_996 // 32, 1_355_191, 550),
         ("webspam-full-p64", 350_000 // 64, 16_609_143, 400),

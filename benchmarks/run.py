@@ -5,7 +5,8 @@ returns row dicts additionally persist them as out/BENCH_<tag>.json so
 the perf trajectory is recorded across PRs (currently: the DCD Pallas
 kernel section → out/BENCH_kernel.json, fused vs unfused epoch; the
 sparse ELL section → out/BENCH_sparse.json, dense-vs-ELL epoch + VMEM
-frontier).
+frontier; the 2D feature-sharded section → out/BENCH_feature.json,
+1D-vs-2D d-sweep + three-policy VMEM frontier).
 """
 
 from __future__ import annotations
@@ -28,6 +29,7 @@ def main() -> None:
     from benchmarks import (
         bench_accuracy,
         bench_convergence,
+        bench_feature,
         bench_kernel,
         bench_roofline,
         bench_scaling,
@@ -42,6 +44,7 @@ def main() -> None:
         ("Fig 2-6d (speedup)", bench_speedup, None),
         ("DCD Pallas kernel", bench_kernel, "kernel"),
         ("Sparse ELL path", bench_sparse, "sparse"),
+        ("2D feature-sharded solver", bench_feature, "feature"),
         ("Roofline (dry-run artifacts)", bench_roofline, None),
     ]
     print("name,us_per_call,derived")

@@ -8,7 +8,9 @@ Public API:
     baselines:    ``cocoa_solve``, ``asyscd_solve``
     analysis:     ``backward_error_report``, ``duality_gap``, ``primal``,
                   ``dual``
-    distributed:  ``sharded_passcode_solve`` (shard_map over the data axis)
+    distributed:  ``sharded_passcode_solve`` (shard_map over the data
+                  axis; a 2-D ``("data", "model")`` mesh additionally
+                  feature-shards w for webspam/kddb-scale d)
 """
 
 from repro.core.duals import Hinge, Logistic, SquaredHinge

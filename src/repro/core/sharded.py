@@ -20,30 +20,45 @@ Mapping of the paper's shared-memory model onto an SPMD mesh:
                     ``repro.core.passcode`` instead.
 
 α is sharded by rows (each device owns its block — disjoint coordinates,
-like §3.3's per-thread permutation blocks); X rows likewise.  w is
-replicated (d fits on-chip for all paper datasets; a feature-sharded
-variant for kddb-scale d lives in ``sharded_passcode_feature``).
+like §3.3's per-thread permutation blocks); X rows likewise.  On a 1-D
+``("data",)`` mesh w is replicated (d fits on-chip for rcv1/news20-scale
+paper datasets).  On a 2-D ``("data", "model")`` mesh — the
+webspam/kddb regime, where even the padded primal alone exceeds VMEM —
+w and the feature dimension additionally shard along ``model``
+(DESIGN.md §10): each device holds one ``FeatureShardedEll`` slice and
+a d/m-word primal shard, the per-coordinate dot product psums its
+partial over ``model`` (the mesh analogue of reading shared w under
+atomic adds), and each device scatter-adds only its own shard — no
+replicated primal exists anywhere.
 
 The per-device block of B locally-sequential updates — the hot loop —
-has four interchangeable engines, selected by the type of ``X_host``
-(dense array vs ``repro.data.sparse.EllMatrix``) × ``use_kernel``
-(DESIGN.md §6, §9):
+has six interchangeable engines, selected by the mesh (1-D vs 2-D) ×
+the type of ``X_host`` (dense array vs ``repro.data.sparse.EllMatrix``)
+× ``use_kernel`` (DESIGN.md §6, §9, §10):
 
   * ``_local_block_update`` — unfused ``fori_loop`` of dense jnp ops;
   * ``_local_block_update_ell`` — unfused ELL engine: O(k_max) gather /
     dot / dummy-slot scatter per update against a (d+1)-padded primal;
+  * ``_local_block_update_feature`` — unfused 2-D engine: O(k_loc)
+    local gather-dot, per-update psum of the partial wᵀx_i over
+    ``model``, O(k_loc) scatter into this device's primal shard;
   * ``use_kernel=True`` — the fused Pallas indexed-block kernels
     (``repro.kernels.dcd_block_update_pallas`` dense,
-    ``dcd_ell_block_update_pallas`` sparse): the device's whole row
-    shard is VMEM-resident, updates gather/scatter by row id inside one
-    kernel (interpret mode on CPU, compiled on TPU).  ``"auto"`` fuses
-    only on TPU when the shard fits VMEM — ``dcd_kernel_fits`` for the
-    dense n_loc·d̃ shard, ``dcd_ell_kernel_fits`` for the ~2·n_loc·k̃
-    ELL shard — falling back to pure jnp otherwise.
+    ``dcd_ell_block_update_pallas`` sparse,
+    ``dcd_feature_block_update_pallas`` 2-D — the latter batches the B
+    per-update psums into one (base, Gram) psum per block): the
+    device's whole row shard/slice is VMEM-resident, updates
+    gather/scatter by row id inside the kernel (interpret mode on CPU,
+    compiled on TPU).  ``"auto"`` fuses only on TPU when the shard fits
+    VMEM — ``dcd_kernel_fits`` for the dense n_loc·d̃ shard,
+    ``dcd_ell_kernel_fits`` for the ~2·n_loc·k̃ ELL shard,
+    ``dcd_feature_kernel_fits`` for the ~2·n_loc·k̃_loc + 2·d/m 2-D
+    slice — falling back to pure jnp otherwise.
 
-All four compute the identical update sequence; tests assert agreement
-to atol 1e-5 across hinge / squared-hinge / logistic and delay_rounds
-(``tests/test_sharded_kernel.py``, ``tests/test_sharded_ell.py``).
+All engines compute the identical update sequence; tests assert
+agreement to atol 1e-5 across hinge / squared-hinge / logistic and
+delay_rounds (``tests/test_sharded_kernel.py``,
+``tests/test_sharded_ell.py``, ``tests/test_sharded_feature.py``).
 
 Rows whose count is not divisible by the device count are no longer
 dropped: the tail pads to p-divisibility with zero rows (q set to 1 so
@@ -62,17 +77,23 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
-from repro.core.objective import duality_gap, w_of_alpha
-from repro.data.sparse import EllMatrix
+from repro.core.objective import duality_gap
+from repro.data.sparse import EllMatrix, dense_to_ell, ell_column_split
 from repro.dist.compat import shard_map
 from repro.dist.mesh import (
     _lane_pad,
     dcd_ell_kernel_fits,
+    dcd_feature_kernel_fits,
     dcd_kernel_fits,
     solver_mesh,
+    solver_mesh_2d,
 )
 from repro.dist.sharding import named, replicated
-from repro.kernels.ops import dcd_block_update_pallas, dcd_ell_block_update_pallas
+from repro.kernels.ops import (
+    dcd_block_update_pallas,
+    dcd_ell_block_update_pallas,
+    dcd_feature_block_update_pallas,
+)
 
 
 class ShardedResult(NamedTuple):
@@ -120,6 +141,32 @@ def _local_block_update_ell(cols_loc, vals_loc, sq_loc, alpha_loc, w_pad,
     return alpha_loc, w_new - w_pad  # (updated α shard, local Δw_pad)
 
 
+def _local_block_update_feature(cols_loc, vals_loc, sq_loc, alpha_loc,
+                                w_loc, idx_block, loss):
+    """B sequential DCD updates on this device's (row-block × feature-
+    shard) slice.  ``cols_loc``/``vals_loc`` hold *local* column ids
+    into the (d_loc+1)-slot primal shard ``w_loc`` (per-shard dummy slot
+    at d_loc); the full wᵀx_i is the psum over ``model`` of the O(k_loc)
+    partial gather-dot — the mesh analogue of reading the paper's shared
+    w — and the rank-1 update scatters only this shard.  ``sq_loc``
+    carries the FULL row norms (summed over shards), so δ is identical
+    on every feature shard and α stays replicated along ``model``."""
+
+    def body(t, carry):
+        alpha_loc, w_cur = carry
+        i = idx_block[t]
+        c = cols_loc[i]
+        v = vals_loc[i]
+        wx = jax.lax.psum(jnp.sum(w_cur[c] * v), "model")
+        delta = loss.delta(alpha_loc[i], wx, sq_loc[i])
+        return alpha_loc.at[i].add(delta), w_cur.at[c].add(delta * v)
+
+    alpha_loc, w_new = jax.lax.fori_loop(
+        0, idx_block.shape[0], body, (alpha_loc, w_loc)
+    )
+    return alpha_loc, w_new - w_loc  # (updated α shard, local Δw shard)
+
+
 def _resolve_kernel_mode(use_kernel, n_loc: int, d: int,
                          k_max: int | None = None):
     """Resolve ``use_kernel`` ∈ {False, True, "auto"} → (fused?, interpret?).
@@ -137,6 +184,19 @@ def _resolve_kernel_mode(use_kernel, n_loc: int, d: int,
             use_kernel = on_tpu and dcd_ell_kernel_fits(n_loc, k_max, d)
         else:
             use_kernel = on_tpu and dcd_kernel_fits(n_loc, d)
+    return bool(use_kernel), not on_tpu
+
+
+def _resolve_kernel_mode_feature(use_kernel, n_loc: int, k_loc: int,
+                                 d_loc: int, block_size: int):
+    """``_resolve_kernel_mode`` for the 2-D path: "auto" consults
+    ``dcd_feature_kernel_fits`` — the ~2·n_loc·k̃_loc + 2·d/m policy
+    that admits webspam/kddb-scale d where both 1-D policies reject."""
+    on_tpu = jax.default_backend() == "tpu"
+    if use_kernel == "auto":
+        use_kernel = on_tpu and dcd_feature_kernel_fits(
+            n_loc, k_loc, d_loc, block_size=block_size
+        )
     return bool(use_kernel), not on_tpu
 
 
@@ -164,6 +224,36 @@ def _masked_block_perms(key, p: int, n_loc: int, n_rows: int,
         return perm[order][jnp.arange(m) % v]
 
     return jax.vmap(one)(keys, valid)  # (p, m)
+
+
+def _scan_rounds(block_update, alpha_loc, w_loc, dw_prev, blocks_loc,
+                 delay_rounds: int):
+    """The round structure every engine shares, run inside a shard_map
+    body: per round the device's block update runs against the
+    (possibly stale) effective w, Δw is psummed over ``data`` — the
+    whole primal on a 1-D mesh, this device's feature shard on a 2-D
+    mesh — and either applied now (atomic) or deferred one round
+    (``delay_rounds`` staleness).  ``block_update(alpha_loc, w_eff,
+    idx_block)`` closes over the device's data shard."""
+
+    def one_round(carry, idx_block):
+        alpha_loc, w_loc, dw_prev = carry
+        if delay_rounds > 0:
+            # fold in last round's aggregate only now (stale view)
+            w_eff = w_loc + dw_prev
+        else:
+            w_eff = w_loc
+        alpha_loc, dw_local = block_update(alpha_loc, w_eff, idx_block)
+        dw_all = jax.lax.psum(dw_local, "data")
+        if delay_rounds > 0:
+            # defer applying this round's aggregate to next round
+            return (alpha_loc, w_loc + dw_prev, dw_all), ()
+        return (alpha_loc, w_loc + dw_all, dw_prev), ()
+
+    (alpha_loc, w_loc, dw_prev), _ = jax.lax.scan(
+        one_round, (alpha_loc, w_loc, dw_prev), blocks_loc
+    )
+    return alpha_loc, w_loc, dw_prev
 
 
 def make_sharded_epoch(mesh: Mesh, loss, block_size: int,
@@ -209,26 +299,11 @@ def make_sharded_epoch(mesh: Mesh, loss, block_size: int,
     def epoch(X, sq_norms, alpha, w, blocks_idx, carry_dw):
         # blocks_idx: (n_blocks, B) *local* row ids per device (sharded).
         def device_fn(X_loc, sq_loc, alpha_loc, w_rep, blocks_loc, dw_prev):
-            def one_round(carry, idx_block):
-                alpha_loc, w_loc, dw_prev = carry
-                if delay_rounds > 0:
-                    # fold in last round's aggregate only now (stale view)
-                    w_eff = w_loc + dw_prev
-                else:
-                    w_eff = w_loc
-                alpha_loc, dw_local = block_update(
-                    X_loc, sq_loc, alpha_loc, w_eff, idx_block
-                )
-                dw_all = jax.lax.psum(dw_local, axis)
-                if delay_rounds > 0:
-                    # defer applying this round's aggregate to next round
-                    return (alpha_loc, w_loc + dw_prev, dw_all), ()
-                return (alpha_loc, w_loc + dw_all, dw_prev), ()
-
-            (alpha_loc, w_loc, dw_prev), _ = jax.lax.scan(
-                one_round, (alpha_loc, w_rep, dw_prev), blocks_loc
+            return _scan_rounds(
+                lambda a, w_eff, idx: block_update(X_loc, sq_loc, a,
+                                                   w_eff, idx),
+                alpha_loc, w_rep, dw_prev, blocks_loc, delay_rounds,
             )
-            return alpha_loc, w_loc, dw_prev
 
         return shard_map(
             device_fn,
@@ -241,11 +316,102 @@ def make_sharded_epoch(mesh: Mesh, loss, block_size: int,
     return jax.jit(epoch)
 
 
+def make_sharded_epoch_2d(mesh: Mesh, loss, block_size: int,
+                          delay_rounds: int = 0, *,
+                          use_kernel: bool = False,
+                          interpret: bool | None = None):
+    """Build the jitted shard_map epoch function for a 2-D
+    ``("data", "model")`` mesh (DESIGN.md §10).
+
+    ``X`` is a ``(cols, vals)`` pair of (n, m, k) arrays — per-row,
+    per-feature-shard local ELL slices (``repro.data.sparse.
+    ell_column_split`` layout) sharded ``P("data", "model")`` — and
+    ``w`` the (m·d₁_loc,) concatenation of per-shard padded primal
+    slices sharded ``P("model")``.  α / sq_norms / blocks shard along
+    ``data`` only (replicated over ``model``: every feature shard of a
+    data block computes identical δs).  ``use_kernel`` swaps the
+    per-device engine for the fused Pallas pair (callers must then
+    lane-pad k_loc and d_loc+1 to multiples of 128)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    def block_update(cols_loc, vals_loc, sq_loc, alpha_loc, w_eff,
+                     idx_block):
+        if use_kernel:
+            return dcd_feature_block_update_pallas(
+                cols_loc, vals_loc, sq_loc, alpha_loc, w_eff, idx_block,
+                loss=loss, interpret=interpret,
+            )
+        return _local_block_update_feature(
+            cols_loc, vals_loc, sq_loc, alpha_loc, w_eff, idx_block, loss
+        )
+
+    def epoch(X, sq_norms, alpha, w, blocks_idx, carry_dw):
+        def device_fn(cols_loc, vals_loc, sq_loc, alpha_loc, w_loc,
+                      blocks_loc, dw_prev):
+            cols_loc = cols_loc[:, 0]  # (n_loc, 1, k) → (n_loc, k)
+            vals_loc = vals_loc[:, 0]
+            return _scan_rounds(
+                lambda a, w_eff, idx: block_update(cols_loc, vals_loc,
+                                                   sq_loc, a, w_eff, idx),
+                alpha_loc, w_loc, dw_prev, blocks_loc, delay_rounds,
+            )
+
+        cols, vals = X
+        return shard_map(
+            device_fn,
+            mesh=mesh,
+            in_specs=(P("data", "model"), P("data", "model"), P("data"),
+                      P("data"), P("model"), P("data"), P("model")),
+            out_specs=(P("data"), P("model"), P("model")),
+            check_vma=False,  # carries flip replicated→varying across psum
+        )(cols, vals, sq_norms, alpha, w, blocks_idx, carry_dw)
+
+    return jax.jit(epoch)
+
+
+def _drive_epochs(epoch_fn, X, sq_norms, alpha, w, carry_dw, *, p, n_loc,
+                  n, block_size, epochs, seed, record, gap_every,
+                  delay_rounds, blocks_sharding, gap_fn):
+    """The host-side epoch driver both solver paths share: draw the
+    per-device masked block permutations, dispatch the jitted epoch,
+    record duality gaps on-device every ``gap_every`` epochs (plus the
+    final one — host sync only after the solve), and flush the deferred
+    aggregate when delayed.  Returns (alpha, w, gaps)."""
+    key = jax.random.PRNGKey(seed)
+    n_blocks = max(n_loc // block_size, 1)
+    gap_every = max(int(gap_every), 1)
+    gaps = []
+    for e in range(epochs):
+        key, sub = jax.random.split(key)
+        # per-device local permutation over *valid* rows only → (p,
+        # n_blocks·B); identical to permutation(n_loc)[:n_blocks*B]
+        # when nothing is padded.  shard_map expects the leading axis
+        # sharded: (p*n_blocks, B) with device i owning rows
+        # [i*n_blocks, (i+1)*n_blocks)
+        local_perms = _masked_block_perms(sub, p, n_loc, n, n_blocks,
+                                          block_size)
+        blocks = jax.device_put(
+            local_perms.reshape(p * n_blocks, block_size), blocks_sharding
+        )
+        alpha, w, carry_dw = epoch_fn(X, sq_norms, alpha, w, blocks,
+                                      carry_dw)
+        if record and ((e + 1) % gap_every == 0 or e == epochs - 1):
+            # device scalar — converted to host floats only after the
+            # final epoch, so epochs dispatch back-to-back
+            gaps.append(gap_fn(alpha))
+    if delay_rounds > 0:
+        w = w + carry_dw  # flush in-flight aggregate
+    gaps_arr = jnp.stack(gaps) if gaps else jnp.zeros((0,), jnp.float32)
+    return alpha, w, gaps_arr
+
+
 def sharded_passcode_solve(
     X_host,
     loss,
     *,
     mesh: Mesh | None = None,
+    mesh_axes: tuple = ("data",),
     epochs: int = 10,
     block_size: int = 64,
     delay_rounds: int = 0,
@@ -259,17 +425,35 @@ def sharded_passcode_solve(
     O(d) to O(k_max)); rows are sharded across the mesh's ``data`` axis,
     padded to p-divisibility with masked zero rows (never dropped).
 
+    ``mesh_axes=("data", "model")`` (or passing a mesh that carries a
+    ``model`` axis) selects the 2-D feature-sharded engine for
+    webspam/kddb-scale d (DESIGN.md §10): w and the feature dimension
+    shard along ``model`` as per-feature-shard local ELL slices, partial
+    dot products psum over ``model``, and no replicated primal exists
+    anywhere.  Dense ``X_host`` converts to ELL first on that path.
+
     ``use_kernel``: False (pure-jnp block update), True (fused Pallas
     block engine — interpret mode off-TPU), or "auto" (fused only on TPU
-    when the shard fits VMEM — the dense or ELL policy as appropriate;
-    see ``_resolve_kernel_mode``).
+    when the shard fits VMEM — the dense, ELL, or feature-sharded policy
+    as appropriate; see ``_resolve_kernel_mode``).
 
     ``gap_every``: with ``record=True``, compute the duality gap every
     that many epochs (plus the final one).  Gap values stay on device
     until the solve finishes, so recording no longer host-syncs (and
     thereby serializes) every epoch."""
     if mesh is None:
-        mesh = solver_mesh("data")
+        mesh = (solver_mesh_2d() if "model" in mesh_axes
+                else solver_mesh("data"))
+    if "model" in mesh.axis_names:
+        if "data" not in mesh.axis_names:
+            # legacy 1-D ("model",) mesh → (data=1, model=m): serial in
+            # i within each round, features sharded
+            mesh = Mesh(mesh.devices.reshape(1, -1), ("data", "model"))
+        return _solve_feature_sharded(
+            X_host, loss, mesh=mesh, epochs=epochs, block_size=block_size,
+            delay_rounds=delay_rounds, seed=seed, record=record,
+            use_kernel=use_kernel, gap_every=gap_every,
+        )
     p = mesh.shape["data"]
     is_ell = isinstance(X_host, EllMatrix)
     if is_ell:
@@ -323,32 +507,84 @@ def sharded_passcode_solve(
     epoch_fn = make_sharded_epoch(mesh, loss, block_size, delay_rounds,
                                   use_kernel=use_k, interpret=interpret,
                                   ell=is_ell)
-    key = jax.random.PRNGKey(seed)
-    n_blocks = max(n_loc // block_size, 1)
-    gap_every = max(int(gap_every), 1)
-    gaps = []
-    for e in range(epochs):
-        key, sub = jax.random.split(key)
-        # per-device local permutation over *valid* rows only → (p,
-        # n_blocks, B); identical to permutation(n_loc)[:n_blocks*B]
-        # when nothing is padded
-        local_perms = _masked_block_perms(sub, p, n_loc, n, n_blocks,
-                                          block_size)
-        blocks = local_perms.reshape(p, n_blocks, block_size)
-        # shard_map expects the leading axis sharded: (p*n_blocks, B) with
-        # device i owning rows [i*n_blocks, (i+1)*n_blocks)
-        blocks = jax.device_put(
-            blocks.reshape(p * n_blocks, block_size), data_sh
-        )
-        alpha, w, carry_dw = epoch_fn(X, sq_norms, alpha, w, blocks, carry_dw)
-        if record and ((e + 1) % gap_every == 0 or e == epochs - 1):
-            # device scalar — converted to host floats only after the
-            # final epoch, so epochs dispatch back-to-back
-            gaps.append(duality_gap(alpha[:n], X_gap, loss))
-    if delay_rounds > 0:
-        w = w + carry_dw  # flush in-flight aggregate
-    gaps_arr = jnp.stack(gaps) if gaps else jnp.zeros((0,), jnp.float32)
+    alpha, w, gaps_arr = _drive_epochs(
+        epoch_fn, X, sq_norms, alpha, w, carry_dw, p=p, n_loc=n_loc, n=n,
+        block_size=block_size, epochs=epochs, seed=seed, record=record,
+        gap_every=gap_every, delay_rounds=delay_rounds,
+        blocks_sharding=data_sh,
+        gap_fn=lambda a: duality_gap(a[:n], X_gap, loss),
+    )
     return ShardedResult(alpha[:n], w[:d], gaps_arr, epochs)
+
+
+def _solve_feature_sharded(
+    X_host,
+    loss,
+    *,
+    mesh: Mesh,
+    epochs: int,
+    block_size: int,
+    delay_rounds: int,
+    seed: int,
+    record: bool,
+    use_kernel: bool | str,
+    gap_every: int,
+) -> ShardedResult:
+    """The 2-D (data × model) engine behind ``sharded_passcode_solve``
+    (DESIGN.md §10).  Rows/duals block-parallelize along ``data``
+    exactly like the 1-D path; w and the feature dimension shard along
+    ``model`` as per-feature-shard local ELL slices
+    (``ell_column_split``), streamed to devices without ever
+    materializing a dense (n, d) array."""
+    p, m = mesh.shape["data"], mesh.shape["model"]
+    is_ell = isinstance(X_host, EllMatrix)
+    ell = X_host if is_ell else dense_to_ell(X_host)
+    X_gap = X_host if is_ell else jnp.asarray(X_host)
+    n, d = ell.n_rows, ell.n_features
+    fse = ell_column_split(ell, m)
+    d_loc, k_loc = fse.d_loc, fse.k_loc
+    n_loc = -(-n // p)  # ceil: the n % p tail is padded, not dropped
+    n_pad = n_loc * p
+    use_k, interpret = _resolve_kernel_mode_feature(
+        use_kernel, n_loc, k_loc, d_loc, block_size
+    )
+    # lane-pad k_loc and the per-shard padded primal when fused; pad
+    # rows to n_pad with all-padding rows (local id d_loc, value 0)
+    k_run = _lane_pad(k_loc) if use_k else k_loc
+    d1_loc = _lane_pad(d_loc + 1) if use_k else d_loc + 1
+    cols = jnp.full((n_pad, m, k_run), d_loc, jnp.int32)
+    cols = cols.at[:n, :, :k_loc].set(jnp.asarray(fse.indices, jnp.int32))
+    vals = jnp.zeros((n_pad, m, k_run), jnp.float32)
+    vals = vals.at[:n, :, :k_loc].set(jnp.asarray(fse.values, jnp.float32))
+    sq_norms = jnp.ones((n_pad,), jnp.float32).at[:n].set(fse.row_sq_norms())
+    data_sh = named(mesh, "data")
+    model_sh = named(mesh, "model")
+    X = (
+        jax.device_put(cols, named(mesh, "data", "model", None)),
+        jax.device_put(vals, named(mesh, "data", "model", None)),
+    )
+    sq_norms = jax.device_put(sq_norms, data_sh)
+    alpha = jax.device_put(jnp.zeros((n_pad,), jnp.float32), data_sh)
+    # per-shard padded primal slices, concatenated: shard j owns
+    # w[j·d₁_loc : (j+1)·d₁_loc), dummy slot at local index d_loc
+    w = jax.device_put(jnp.zeros((m * d1_loc,), jnp.float32), model_sh)
+    carry_dw = jax.device_put(jnp.zeros((m * d1_loc,), jnp.float32),
+                              model_sh)
+
+    epoch_fn = make_sharded_epoch_2d(mesh, loss, block_size, delay_rounds,
+                                     use_kernel=use_k, interpret=interpret)
+    # identical block draws to the 1-D solver at equal p and seed, so
+    # the two paths run the same update sequence
+    alpha, w, gaps_arr = _drive_epochs(
+        epoch_fn, X, sq_norms, alpha, w, carry_dw, p=p, n_loc=n_loc, n=n,
+        block_size=block_size, epochs=epochs, seed=seed, record=record,
+        gap_every=gap_every, delay_rounds=delay_rounds,
+        blocks_sharding=data_sh,
+        gap_fn=lambda a: duality_gap(a[:n], X_gap, loss),
+    )
+    # stitch the true primal back out of the per-shard padded slices
+    w_full = w.reshape(m, d1_loc)[:, :d_loc].reshape(-1)[:d]
+    return ShardedResult(alpha[:n], w_full, gaps_arr, epochs)
 
 
 def sharded_passcode_feature(
@@ -359,45 +595,19 @@ def sharded_passcode_feature(
     epochs: int = 10,
     seed: int = 0,
 ):
-    """Feature-sharded (model-parallel) serial-equivalent DCD for huge d
-    (kddb-scale): w and the feature dimension of X are sharded along
-    ``model``; each coordinate's dot product is a psum over feature
-    shards.  Updates are serial in i ⇒ exactly Algorithm 1 output, with
-    the *communication* pattern of a model-parallel deployment."""
+    """Back-compat shim for the old feature-sharded demo — now a thin
+    wrapper over the unified 2-D engine
+    (``sharded_passcode_solve(mesh_axes=("data", "model"))``), which
+    replaced the dense, serial, unjitted original.  data=1 with one
+    n-sized block per epoch reproduces the original's full serial
+    permutation pass, so Algorithm 1 semantics are kept exactly.
+    Returns ``(alpha, w)`` like the original; prefer the unified solver
+    in new code."""
     if mesh is None:
-        mesh = solver_mesh("model")
-    n, d = X_host.shape
-    m = mesh.shape["model"]
-    d_pad = ((d + m - 1) // m) * m
-    X = jnp.zeros((n, d_pad), jnp.float32).at[:, :d].set(jnp.asarray(X_host))
-    sq_norms = jnp.sum(X * X, axis=1)
-    X = jax.device_put(X, named(mesh, None, "model"))
-    w = jax.device_put(jnp.zeros((d_pad,), jnp.float32), named(mesh, "model"))
-    alpha = jnp.zeros((n,), jnp.float32)
-
-    def epoch(X, sq_norms, alpha, w, perm):
-        def device_fn(X_loc, sq, alpha, w_loc, perm):
-            def body(k, carry):
-                alpha, w_loc = carry
-                i = perm[k]
-                wx = jax.lax.psum(jnp.dot(w_loc, X_loc[i]), "model")
-                delta = loss.delta(alpha[i], wx, sq[i])
-                return alpha.at[i].add(delta), w_loc + delta * X_loc[i]
-
-            return jax.lax.fori_loop(0, perm.shape[0], body, (alpha, w_loc))
-
-        return shard_map(
-            device_fn,
-            mesh=mesh,
-            in_specs=(P(None, "model"), P(), P(), P("model"), P()),
-            out_specs=(P(), P("model")),
-            check_vma=False,  # psum inside fori_loop carry
-        )(X, sq_norms, alpha, w, perm)
-
-    epoch_fn = jax.jit(epoch)
-    key = jax.random.PRNGKey(seed)
-    for _ in range(epochs):
-        key, sub = jax.random.split(key)
-        perm = jax.random.permutation(sub, n)
-        alpha, w = epoch_fn(X, sq_norms, alpha, w, perm)
-    return alpha, w[:d]
+        mesh = solver_mesh_2d(data=1, model=len(jax.devices()))
+    n = X_host.n_rows if isinstance(X_host, EllMatrix) else X_host.shape[0]
+    r = sharded_passcode_solve(
+        X_host, loss, mesh=mesh, epochs=epochs, block_size=n,
+        seed=seed, record=False,
+    )
+    return r.alpha, r.w_hat

@@ -103,3 +103,115 @@ def pad_primal(w: jnp.ndarray) -> jnp.ndarray:
 
 def unpad_primal(w_pad: jnp.ndarray) -> jnp.ndarray:
     return w_pad[:-1]
+
+
+# ------------------------------------------- column-partitioned ELL ----
+
+
+class FeatureShardedEll(NamedTuple):
+    """ELL matrix column-partitioned into ``n_shards`` feature shards.
+
+    Shard ``j`` owns the contiguous global column range
+    [j·d_loc, (j+1)·d_loc); every row stores its nonzeros falling in that
+    range as a *local* ELL slice, so a device holding only shard j's
+    primal slice can gather/scatter with purely local ids (DESIGN.md
+    §10).  This is the input layout of the 2D (data × model) solver.
+
+    Attributes:
+        indices: (n_rows, n_shards, k_loc) int32 *shard-local* column
+            ids (global id − j·d_loc); padding == d_loc, the shard's own
+            dummy slot.
+        values:  (n_rows, n_shards, k_loc) float32; padding == 0.
+        n_features: static int, true global feature dimension d.
+        d_loc: static int, features per shard = ceil(d / n_shards).
+    """
+
+    indices: jnp.ndarray
+    values: jnp.ndarray
+    n_features: int
+    d_loc: int
+
+    @property
+    def n_rows(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def n_shards(self) -> int:
+        return self.indices.shape[1]
+
+    @property
+    def k_loc(self) -> int:
+        return self.indices.shape[2]
+
+    def row_sq_norms(self) -> jnp.ndarray:
+        """‖x_i‖² over all shards — identical to the unsplit matrix's."""
+        return jnp.sum(self.values * self.values, axis=(1, 2))
+
+    def to_ell(self) -> EllMatrix:
+        """Merge back to a single ELL matrix with global column ids
+        (k_max = n_shards·k_loc; padding id restored to ``n_features``)."""
+        n, m, k = self.indices.shape
+        offset = (jnp.arange(m, dtype=jnp.int32) * self.d_loc)[None, :, None]
+        glob = jnp.where(
+            self.indices >= self.d_loc,
+            jnp.int32(self.n_features),
+            self.indices + offset,
+        )
+        return EllMatrix(
+            glob.reshape(n, m * k),
+            self.values.reshape(n, m * k),
+            self.n_features,
+        )
+
+
+def ell_column_split(mat: EllMatrix, n_shards: int,
+                     k_loc: int | None = None) -> FeatureShardedEll:
+    """Partition an ``EllMatrix`` by contiguous feature ranges into
+    ``n_shards`` per-row local ELL slices (host-side, numpy, one pass —
+    the data is never densified, which matters at exactly the huge-d
+    sizes this layout targets).
+
+    ``k_loc`` defaults to the max per-(row, shard) nonzero count (≥ 1);
+    forcing it larger is allowed (extra slots pad), smaller is an error.
+    """
+    idx = np.asarray(mat.indices)
+    val = np.asarray(mat.values)
+    n, k = idx.shape
+    d = mat.n_features
+    m = int(n_shards)
+    assert m >= 1
+    d_loc = -(-d // m)  # ceil; shard j owns [j*d_loc, (j+1)*d_loc)
+
+    real = idx < d  # padding entries carry id d (one past the end)
+    # shard key per entry; padding sorts to a bucket past every shard
+    shard = np.where(real, idx // d_loc, m).astype(np.int64)
+    order = np.argsort(shard, axis=1, kind="stable")
+    shard_s = np.take_along_axis(shard, order, axis=1)
+    idx_s = np.take_along_axis(idx, order, axis=1)
+    val_s = np.take_along_axis(val, order, axis=1)
+    # rank of each entry within its (row, shard) run
+    col = np.arange(k, dtype=np.int64)[None, :]
+    run_start = shard_s != np.concatenate(
+        [np.full((n, 1), -1, np.int64), shard_s[:, :-1]], axis=1
+    )
+    start_pos = np.maximum.accumulate(np.where(run_start, col, 0), axis=1)
+    rank = col - start_pos
+    keep = shard_s < m
+    need = int(rank[keep].max()) + 1 if keep.any() else 1
+    if k_loc is None:
+        k_loc = need
+    elif k_loc < need:
+        raise ValueError(f"k_loc={k_loc} < max per-shard nnz {need}")
+    k_loc = max(int(k_loc), 1)
+
+    out_idx = np.full((n, m, k_loc), d_loc, dtype=np.int32)
+    out_val = np.zeros((n, m, k_loc), dtype=np.float32)
+    rows, cols = np.nonzero(keep)
+    j = shard_s[rows, cols]
+    out_idx[rows, j, rank[rows, cols]] = (
+        idx_s[rows, cols] - j * d_loc
+    ).astype(np.int32)
+    out_val[rows, j, rank[rows, cols]] = val_s[rows, cols]
+    return FeatureShardedEll(
+        jnp.asarray(out_idx), jnp.asarray(out_val), d, d_loc
+    )

@@ -23,6 +23,7 @@ from repro.dist.mesh import (
     dp_size,
     make_production_mesh,
     solver_mesh,
+    solver_mesh_2d,
 )
 from repro.dist.sharding import (
     NO_RULES,
@@ -54,5 +55,6 @@ __all__ = [
     "replicated",
     "shard_map",
     "solver_mesh",
+    "solver_mesh_2d",
     "token_sharding",
 ]

@@ -31,6 +31,20 @@ def solver_mesh(axis: str = "data", n_devices: int | None = None):
     return jax.make_mesh((n,), (axis,))
 
 
+def solver_mesh_2d(data: int | None = None, model: int = 1,
+                   n_devices: int | None = None):
+    """2-D ``(data, model)`` mesh for the feature-sharded solver: rows /
+    dual coordinates block-parallelize along ``data`` (the paper's
+    thread→device mapping), w and the feature dimension shard along
+    ``model`` (the per-coordinate dot product psums over it — the mesh
+    analogue of the paper's atomic adds into shared w, DESIGN.md §10).
+    ``data`` defaults to all remaining devices."""
+    n = n_devices or len(jax.devices())
+    if data is None:
+        data = max(n // model, 1)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
 def data_axes(mesh) -> tuple:
     """Axes that form the data-parallel dimension."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
@@ -95,6 +109,40 @@ def dcd_ell_kernel_fits(n_loc: int, k_max: int, d: int, *,
     return dcd_ell_kernel_vmem_bytes(n_loc, k_max, d) <= (
         headroom * vmem_bytes
     )
+
+
+def dcd_feature_kernel_vmem_bytes(n_loc: int, k_loc: int, d_loc: int, *,
+                                  block_size: int = 256,
+                                  itemsize: int = 4) -> int:
+    """Resident working set of the fused *2D feature-sharded* block round
+    (DESIGN.md §10): the (n_loc, k̃_loc) local-column-id and value slices
+    (2·n_loc·k̃_loc words, k̃_loc lane-padded), the device's own primal
+    *shard* in/out (2·d₁_loc with d₁_loc = lane_pad(d_loc + 1) for the
+    per-shard dummy slot — this is the d/m term that makes huge d
+    feasible), α in/out + q (3·n_loc f32), the int32 index block, and
+    the per-block Gram/base exchange buffers (B² + O(B) f32).
+
+    The only d-dependent term is 2·d₁_loc ≈ 2·d/m: at m = 16 this admits
+    webspam/kddb-scale d ≈ 16.6M, where the dense policy's n_loc·d̃ and
+    the 1D ELL policy's 2·lane_pad(d+1) primal both exceed VMEM."""
+    kp = _lane_pad(k_loc)
+    d1 = _lane_pad(d_loc + 1)
+    b = block_size
+    return (itemsize * (2 * n_loc * kp + 2 * d1 + 3 * n_loc + b * b + 3 * b)
+            + 4 * n_loc + 4 * b)
+
+
+def dcd_feature_kernel_fits(n_loc: int, k_loc: int, d_loc: int, *,
+                            block_size: int = 256,
+                            vmem_bytes: int = VMEM_BYTES,
+                            headroom: float = 0.9) -> bool:
+    """True when a device's (row-block × feature-shard) slice can stay
+    VMEM-resident for the fused 2D kernel; otherwise
+    ``sharded_passcode_solve(use_kernel="auto")`` keeps the unfused jnp
+    feature-sharded block update."""
+    return dcd_feature_kernel_vmem_bytes(
+        n_loc, k_loc, d_loc, block_size=block_size
+    ) <= headroom * vmem_bytes
 
 
 def dcd_block_rows(d: int, *, vmem_bytes: int = VMEM_BYTES,

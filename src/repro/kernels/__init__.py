@@ -12,11 +12,15 @@ carries w across blocks, so a whole epoch is ONE pallas_call.
   dcd_ell.py   — the sparse (ELL) indexed kernel: O(k_max) gather /
                  dummy-slot scatter per update against a 2·n_loc·k̃-word
                  resident shard (DESIGN.md §9)
+  dcd_feature.py — the 2D (data × model) feature-sharded block kernels:
+                 per-shard partial (base, Gram) + δ-recursion/scatter
+                 against a d₁_loc-word primal *shard*, one psum per
+                 block instead of one per update (DESIGN.md §10)
   ops.py       — jitted wrappers with CPU interpret fallback, plus
                  ``dcd_block_update_pallas`` / ``dcd_ell_block_update_
-                 pallas`` — the per-device block engines
-                 ``repro.core.sharded`` fuses into its shard_map rounds
-                 (``use_kernel=True``)
+                 pallas`` / ``dcd_feature_block_update_pallas`` — the
+                 per-device block engines ``repro.core.sharded`` fuses
+                 into its shard_map rounds (``use_kernel=True``)
   ref.py       — pure-jnp oracle (identical update order)
 """
 
@@ -24,6 +28,7 @@ from repro.kernels.ops import (
     dcd_block_update_pallas,
     dcd_ell_block_update_pallas,
     dcd_epoch_pallas,
+    dcd_feature_block_update_pallas,
 )
 from repro.kernels.ref import dcd_epoch_ref
 
@@ -32,4 +37,5 @@ __all__ = [
     "dcd_ell_block_update_pallas",
     "dcd_epoch_pallas",
     "dcd_epoch_ref",
+    "dcd_feature_block_update_pallas",
 ]

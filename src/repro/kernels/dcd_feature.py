@@ -1,0 +1,220 @@
+"""Pallas TPU kernels: feature-sharded (2D data × model) block DCD.
+
+The 2D solver (DESIGN.md §10) shards w and the feature dimension along
+``model``: each device holds one ``FeatureShardedEll`` slice — (n_loc,
+k̃_loc) *local* column ids / values into its own d₁_loc-word primal
+shard — so no replicated primal exists anywhere.  The exact per-update
+rule needs the FULL wᵀx_i, i.e. a psum over ``model`` per update, and a
+collective cannot run inside a ``pallas_call``.  The fused path therefore
+restructures a block of B sequential updates around the identity
+
+    wᵀx_t at step t  =  (w₀ + Σ_{s<t} δ_s x_s)ᵀ x_t
+                     =  base_t + Σ_{s<t} δ_s · G[s, t]
+
+with base_t = w₀ᵀx_t and G the block's B×B Gram matrix — both additive
+over feature shards.  That turns B per-update psums of scalars into ONE
+psum of (B + B²) floats per block, bracketed by two VMEM-resident
+kernels:
+
+  * ``_gram_kernel`` — gathers the block's rows from the resident
+    (cols, vals) slice and computes the *partial* base (B,) and Gram
+    (B, B) for this shard: per row t it scatter-adds x_t into a
+    d₁_loc-word scratch carried as a loop value, takes the O(B·k̃_loc)
+    gather-dot column G[:, t], then subtracts x_t back out (exact in
+    IEEE: v + (−v) = 0 from a zero start), so the scratch never holds
+    more than one row;
+  * caller psums (base, G) over ``model`` — the only collective;
+  * ``_update_kernel`` — runs the B-step δ recursion with the same
+    ``loss.delta`` family as every other engine (``repro.core.duals``),
+    carrying the running α and a δ-history vector: wx_t = base_t +
+    δ·G[:, t] (future slots are still 0), then scatter-adds δ_t·vals
+    into this shard's primal only.  Repeated row ids (a padding-heavy
+    device cycling its valid prefix) are exact: G[s, t] = ‖x‖² feeds the
+    earlier δ back in, and α is read from the carried output.
+
+Both kernels keep the dummy-slot contract of ``repro.kernels.dcd_ell``:
+local padding ids equal d_loc, whose slot in the shard / scratch is
+pinned to 0 by construction.  In exact arithmetic the two-kernel block
+is identical to the per-update-psum jnp engine
+(``repro.core.sharded._local_block_update_feature``); tests assert
+agreement to atol 1e-5.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(
+    idx_ref,  # (B, 1)  int32 local row ids of this block
+    col_ref,  # (n, k)  shard's local column ids, VMEM-resident
+    val_ref,  # (n, k)  shard's values, VMEM-resident
+    w_ref,  # (1, d1) this shard's padded primal slice
+    base_out,  # (B, 1)  partial w₀ᵀx_t
+    gram_out,  # (B, B)  partial Gram x_s·x_t
+    *,
+    block_rows: int,
+):
+    # gather the block's rows once: (B, k) ids + values as loop values
+    def gather(t, carry):
+        cb, vb = carry
+        i = idx_ref[t, 0]
+        cb = cb.at[t].set(col_ref[pl.ds(i, 1), :][0])
+        vb = vb.at[t].set(val_ref[pl.ds(i, 1), :].astype(jnp.float32)[0])
+        return cb, vb
+
+    k = col_ref.shape[1]
+    cb, vb = jax.lax.fori_loop(
+        0, block_rows, gather,
+        (jnp.zeros((block_rows, k), jnp.int32),
+         jnp.zeros((block_rows, k), jnp.float32)),
+    )
+    w = w_ref[...].astype(jnp.float32)[0]
+    base_out[...] = jnp.sum(jnp.take(w, cb) * vb, axis=1).reshape(
+        block_rows, 1
+    )
+
+    def gcol(t, carry):
+        scratch, gram = carry
+        ct, vt = cb[t], vb[t]
+        scratch = scratch.at[ct].add(vt)  # padding ids land in slot d_loc
+        col = jnp.sum(jnp.take(scratch, cb) * vb, axis=1)  # x_s·x_t ∀s
+        gram = gram.at[:, t].set(col)
+        return scratch.at[ct].add(-vt), gram  # exact restore to zeros
+
+    d1 = w_ref.shape[1]
+    _, gram = jax.lax.fori_loop(
+        0, block_rows, gcol,
+        (jnp.zeros((d1,), jnp.float32),
+         jnp.zeros((block_rows, block_rows), jnp.float32)),
+    )
+    gram_out[...] = gram
+
+
+def _update_kernel(
+    idx_ref,  # (B, 1)  int32 local row ids
+    col_ref,  # (n, k)  shard's local column ids, VMEM-resident
+    val_ref,  # (n, k)  shard's values, VMEM-resident
+    alpha_ref,  # (n, 1)  duals — seeds the output
+    q_ref,  # (n, 1)  FULL row squared norms (summed over shards)
+    w_ref,  # (1, d1) this shard's padded primal slice — seeds the output
+    base_ref,  # (B, 1)  psummed w₀ᵀx_t
+    gram_ref,  # (B, B)  psummed Gram
+    alpha_out,  # (n, 1)
+    w_out,  # (1, d1)
+    *,
+    loss,
+    block_rows: int,
+):
+    alpha_out[...] = alpha_ref[...]
+    base = base_ref[...]
+    gram = gram_ref[...]
+
+    def body(t, carry):
+        w, deltas = carry  # w: (1, d1), deltas: (B,) δ history (0 ahead)
+        i = idx_ref[t, 0]
+        cols = col_ref[pl.ds(i, 1), :][0]
+        vals = val_ref[pl.ds(i, 1), :].astype(jnp.float32)[0]
+        gcol = jax.lax.dynamic_slice_in_dim(gram, t, 1, axis=1)[:, 0]
+        wx = base[t, 0] + jnp.sum(deltas * gcol)
+        a = alpha_out[pl.ds(i, 1), :]  # running α, not the seed
+        q = q_ref[pl.ds(i, 1), :]
+        delta = loss.delta(a, wx, q)
+        alpha_out[pl.ds(i, 1), :] = a + delta
+        w = w.at[0, cols].add(delta[0, 0] * vals)
+        return w, deltas.at[t].set(delta[0, 0])
+
+    w, _ = jax.lax.fori_loop(
+        0, block_rows, body,
+        (w_ref[...].astype(jnp.float32),
+         jnp.zeros((block_rows,), jnp.float32)),
+    )
+    w_out[...] = w
+
+
+def dcd_feature_gram_pallas_call(
+    cols,  # (n, k) int32 local ids, padding == d_loc
+    vals,  # (n, k) f32, padding == 0
+    w_loc,  # (d1,) this shard's padded primal slice
+    idx,  # (B,) int32 row ids of the block
+    *,
+    interpret: bool = False,
+):
+    """Partial (base, Gram) of one block against this feature shard."""
+    n, k = cols.shape
+    d1 = w_loc.shape[0]
+    b = idx.shape[0]
+    kernel = functools.partial(_gram_kernel, block_rows=b)
+    base, gram = pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((b, 1), lambda i: (0, 0)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+            pl.BlockSpec((1, d1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, 1), lambda i: (0, 0)),
+            pl.BlockSpec((b, b), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, b), jnp.float32),
+        ],
+        interpret=interpret,
+    )(idx.reshape(b, 1).astype(jnp.int32), cols, vals,
+      w_loc.reshape(1, d1).astype(jnp.float32))
+    return base.reshape(b), gram
+
+
+def dcd_feature_update_pallas_call(
+    cols,  # (n, k) int32 local ids, padding == d_loc
+    vals,  # (n, k) f32
+    alpha,  # (n,)
+    sq_norms,  # (n,) FULL row norms
+    w_loc,  # (d1,) this shard's padded primal slice
+    idx,  # (B,)
+    base,  # (B,)  psummed
+    gram,  # (B, B) psummed
+    *,
+    loss,
+    interpret: bool = False,
+):
+    """B sequential δ-recursion updates; scatters only this shard."""
+    n, k = cols.shape
+    d1 = w_loc.shape[0]
+    b = idx.shape[0]
+    kernel = functools.partial(_update_kernel, loss=loss, block_rows=b)
+    alpha_out, w_out = pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((b, 1), lambda i: (0, 0)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, d1), lambda i: (0, 0)),
+            pl.BlockSpec((b, 1), lambda i: (0, 0)),
+            pl.BlockSpec((b, b), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, d1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, d1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(idx.reshape(b, 1).astype(jnp.int32), cols, vals,
+      alpha.reshape(n, 1).astype(jnp.float32),
+      sq_norms.reshape(n, 1).astype(jnp.float32),
+      w_loc.reshape(1, d1).astype(jnp.float32),
+      base.reshape(b, 1).astype(jnp.float32), gram)
+    return alpha_out.reshape(n), w_out.reshape(d1)

@@ -11,6 +11,10 @@ import jax.numpy as jnp
 
 from repro.kernels.dcd_block import dcd_epoch_pallas_call
 from repro.kernels.dcd_ell import dcd_ell_epoch_pallas_call
+from repro.kernels.dcd_feature import (
+    dcd_feature_gram_pallas_call,
+    dcd_feature_update_pallas_call,
+)
 
 
 def _on_tpu() -> bool:
@@ -146,3 +150,31 @@ def dcd_ell_block_update_pallas(cols, vals, sq_norms, alpha, w_pad, idx, *,
         block_rows=idx.shape[0], interpret=interpret,
     )
     return a_new, w_new - w_pad
+
+
+def dcd_feature_block_update_pallas(cols, vals, sq_norms, alpha, w_loc, idx,
+                                    *, loss, axis: str = "model",
+                                    interpret: bool = False):
+    """One indexed block of B sequential DCD updates on a 2D
+    (data × model) feature shard — the fused equivalent of
+    ``repro.core.sharded._local_block_update_feature``.
+
+    Traced (not jitted) so it runs inside a ``shard_map`` body on a
+    ``(data, model)`` mesh: ``cols``/``vals`` are this device's (n_loc,
+    k̃_loc) local-id ELL slice, ``w_loc`` its (d₁_loc,) primal *shard*
+    (per-shard dummy slot at index d_loc), ``sq_norms`` the FULL row
+    norms, ``idx`` the (B,) local row ids of the block.  The per-update
+    psum of partial dot products is batched into one psum of the block's
+    partial (base, Gram) between two Pallas kernels (see
+    ``repro.kernels.dcd_feature``) — exactly equal to the per-update
+    rule in exact arithmetic.  Returns (updated α shard, local Δw
+    shard)."""
+    base_p, gram_p = dcd_feature_gram_pallas_call(
+        cols, vals, w_loc, idx, interpret=interpret,
+    )
+    base, gram = jax.lax.psum((base_p, gram_p), axis)
+    a_new, w_new = dcd_feature_update_pallas_call(
+        cols, vals, alpha, sq_norms, w_loc, idx, base, gram, loss=loss,
+        interpret=interpret,
+    )
+    return a_new, w_new - w_loc
