@@ -86,7 +86,7 @@ _SWEEP = textwrap.dedent("""
                             replicated(mesh1))
         c1 = jax.device_put(jnp.zeros((d + 1,), jnp.float32),
                             replicated(mesh1))
-        fn1 = make_sharded_epoch(mesh1, loss, B, ell=True)
+        fn1 = make_sharded_epoch(mesh1, loss, ell=True)
         t1 = timeit(lambda: fn1(X1, sq1, a1, w1, blocks1, c1))
         rows.append(dict(
             name=f"feature/sweep_1d_replicated/n={{N}},d={{d}},p=8",
@@ -112,7 +112,7 @@ _SWEEP = textwrap.dedent("""
                             named(mesh2, "model"))
         c2 = jax.device_put(jnp.zeros((m2 * d1_loc,), jnp.float32),
                             named(mesh2, "model"))
-        fn2 = make_sharded_epoch_2d(mesh2, loss, B)
+        fn2 = make_sharded_epoch_2d(mesh2, loss)
         t2 = timeit(lambda: fn2(X2, sq2, a2, w2, blocks2, c2))
         rows.append(dict(
             name=f"feature/sweep_2d_sharded/n={{N}},d={{d}},p=2,m=4",

@@ -68,7 +68,7 @@ def _bench_fused_vs_unfused_sharded(rows):
 
     times = {}
     for label, use_kernel in (("unfused_jnp", False), ("fused_pallas", True)):
-        epoch_fn = make_sharded_epoch(mesh, loss, block_size,
+        epoch_fn = make_sharded_epoch(mesh, loss,
                                       use_kernel=use_kernel)
         t = timeit(lambda: epoch_fn(X, sq, alpha, w, blocks, carry))
         times[label] = t

@@ -1,0 +1,208 @@
+"""On-device multi-epoch pipeline benchmark (DESIGN.md §11):
+
+1. **driver vs pipeline** — the same multi-epoch solve through the
+   legacy host loop (``make_sharded_epoch`` + per-epoch host permutation
+   draw + ``device_put`` + dispatch) and through the single-dispatch
+   pipeline (``make_sharded_pipeline``), 1D ELL and 2D feature-sharded.
+   Both jitted functions are built and warmed outside the timer, so the
+   delta is exactly the per-epoch dispatch + host-RNG + transfer
+   overhead the pipeline removes — recorded as
+   ``dispatch_overhead_us_per_epoch``.
+2. **overlap on/off** — the fused 2D block round eager vs
+   double-buffered (``_scan_rounds_overlap``).  Off-TPU this runs the
+   Pallas kernels in interpret mode, so it validates that the
+   overlapped schedule costs only the O(B·k̃) base correction extra —
+   the latency win of the in-flight (base, Gram) psum is a compiled-TPU
+   claim (the collectives of a 1-process CPU mesh complete inline).
+
+``main()`` returns its rows so benchmarks/run.py persists them as
+out/BENCH_pipeline.json and the repo-root BENCH_pipeline.json mirror;
+``--smoke`` shrinks every shape to a CI-budget sanity pass.
+"""
+
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core.duals import Hinge
+from repro.core.sharded import (
+    _drive_epochs,
+    _n_blocks,
+    make_sharded_epoch,
+    make_sharded_epoch_2d,
+    make_sharded_pipeline,
+    make_sharded_pipeline_2d,
+)
+from repro.data.sparse import EllMatrix, ell_column_split
+from repro.dist.mesh import solver_mesh, solver_mesh_2d
+from repro.dist.sharding import named, replicated
+
+
+def _make_ell(rng, n, d, k):
+    idx = np.stack([rng.choice(d, size=k, replace=False)
+                    for _ in range(n)]).astype(np.int32)
+    v = rng.standard_normal((n, k)).astype(np.float32)
+    v /= np.maximum(np.linalg.norm(v, axis=1, keepdims=True), 1.0)
+    return EllMatrix(jnp.asarray(idx), jnp.asarray(v), d)
+
+
+def _bench_1d(rows, *, smoke: bool):
+    n, d, k = (128, 256, 8) if smoke else (1024, 4096, 16)
+    epochs, block_size = (3, 32) if smoke else (8, 64)
+    loss = Hinge(C=1.0)
+    mesh = solver_mesh("data")
+    p = mesh.shape["data"]
+    n_loc = -(-n // p)
+    n_blocks = _n_blocks(n_loc, block_size)
+    ell = _make_ell(np.random.default_rng(3), n, d, k)
+    X = (jax.device_put(ell.indices, named(mesh, "data", None)),
+         jax.device_put(ell.values, named(mesh, "data", None)))
+    sq = jax.device_put(ell.row_sq_norms(), named(mesh, "data"))
+    alpha = jax.device_put(jnp.zeros((n,), jnp.float32),
+                           named(mesh, "data"))
+    w = jax.device_put(jnp.zeros((d + 1,), jnp.float32), replicated(mesh))
+    carry = jax.device_put(jnp.zeros((d + 1,), jnp.float32),
+                           replicated(mesh))
+
+    epoch_fn = make_sharded_epoch(mesh, loss, ell=True)
+    pipe_fn = make_sharded_pipeline(mesh, loss, epochs=epochs,
+                                    block_size=block_size,
+                                    n_blocks=n_blocks, n_rows=n,
+                                    ell=True, record=False)
+    key = jax.random.PRNGKey(0)
+
+    def run_driver():
+        return _drive_epochs(
+            epoch_fn, X, sq, alpha, w, carry, p=p, n_loc=n_loc, n=n,
+            n_blocks=n_blocks, block_size=block_size, epochs=epochs,
+            key=key, record=False, gap_every=1, delay_rounds=0,
+            blocks_sharding=named(mesh, "data"), gap_fn=None)
+
+    def run_pipeline():
+        return pipe_fn(X, sq, alpha, w, key, carry)
+
+    t_drv = timeit(run_driver)
+    t_pipe = timeit(run_pipeline)
+    a_d, w_d, _ = run_driver()
+    a_p, w_p, _, _ = run_pipeline()
+    err = float(jnp.abs(w_d - w_p).max())
+    overhead = (t_drv - t_pipe) / epochs * 1e6
+    rows.append({
+        "name": f"pipeline/1d_ell_driver/n={n},d={d},epochs={epochs}",
+        "us_per_call": t_drv * 1e6,
+        "derived": f"dispatches_per_solve={epochs}",
+    })
+    rows.append({
+        "name": f"pipeline/1d_ell_pipelined/n={n},d={d},epochs={epochs}",
+        "us_per_call": t_pipe * 1e6,
+        "derived": (f"dispatches_per_solve=1,"
+                    f"dispatch_overhead_us_per_epoch={overhead:.1f},"
+                    f"speedup_vs_driver={t_drv / t_pipe:.2f}x,"
+                    f"max_err_vs_driver={err:.2e}"),
+    })
+
+
+def _setup_2d(ell, mesh, *, lane: bool):
+    """Device-resident 2D operands in the solver's layout (unfused needs
+    no lane padding; the fused round does)."""
+    from repro.dist.mesh import lane_pad
+
+    p, m = mesh.shape["data"], mesh.shape["model"]
+    n = ell.n_rows
+    fse = ell_column_split(ell, m)
+    d_loc, k_loc = fse.d_loc, fse.k_loc
+    k_run = lane_pad(k_loc) if lane else k_loc
+    d1_loc = lane_pad(d_loc + 1) if lane else d_loc + 1
+    cols = jnp.full((n, m, k_run), d_loc, jnp.int32)
+    cols = cols.at[:, :, :k_loc].set(jnp.asarray(fse.indices, jnp.int32))
+    vals = jnp.zeros((n, m, k_run), jnp.float32)
+    vals = vals.at[:, :, :k_loc].set(jnp.asarray(fse.values, jnp.float32))
+    X = (jax.device_put(cols, named(mesh, "data", "model", None)),
+         jax.device_put(vals, named(mesh, "data", "model", None)))
+    sq = jax.device_put(fse.row_sq_norms(), named(mesh, "data"))
+    alpha = jax.device_put(jnp.zeros((n,), jnp.float32),
+                           named(mesh, "data"))
+    w = jax.device_put(jnp.zeros((m * d1_loc,), jnp.float32),
+                       named(mesh, "model"))
+    carry = jax.device_put(jnp.zeros((m * d1_loc,), jnp.float32),
+                           named(mesh, "model"))
+    return X, sq, alpha, w, carry
+
+
+def _bench_2d(rows, *, smoke: bool):
+    n, d, k = (64, 512, 8) if smoke else (256, 8192, 16)
+    epochs, block_size = (2, 16) if smoke else (4, 32)
+    loss = Hinge(C=1.0)
+    mesh = solver_mesh_2d(data=1, model=1)
+    p = mesh.shape["data"]
+    n_loc = -(-n // p)
+    n_blocks = _n_blocks(n_loc, block_size)
+    ell = _make_ell(np.random.default_rng(5), n, d, k)
+    key = jax.random.PRNGKey(0)
+    kw = dict(epochs=epochs, block_size=block_size, n_blocks=n_blocks,
+              n_rows=n, record=False)
+
+    # driver vs pipeline, unfused engine
+    X, sq, alpha, w, carry = _setup_2d(ell, mesh, lane=False)
+    epoch_fn = make_sharded_epoch_2d(mesh, loss)
+    pipe_fn = make_sharded_pipeline_2d(mesh, loss, **kw)
+    t_drv = timeit(lambda: _drive_epochs(
+        epoch_fn, X, sq, alpha, w, carry, p=p, n_loc=n_loc, n=n,
+        n_blocks=n_blocks, block_size=block_size, epochs=epochs, key=key,
+        record=False, gap_every=1, delay_rounds=0,
+        blocks_sharding=named(mesh, "data"), gap_fn=None))
+    t_pipe = timeit(lambda: pipe_fn(X, sq, alpha, w, key, carry))
+    overhead = (t_drv - t_pipe) / epochs * 1e6
+    rows.append({
+        "name": f"pipeline/2d_driver/n={n},d={d},epochs={epochs}",
+        "us_per_call": t_drv * 1e6,
+        "derived": f"dispatches_per_solve={epochs}",
+    })
+    rows.append({
+        "name": f"pipeline/2d_pipelined/n={n},d={d},epochs={epochs}",
+        "us_per_call": t_pipe * 1e6,
+        "derived": (f"dispatches_per_solve=1,"
+                    f"dispatch_overhead_us_per_epoch={overhead:.1f},"
+                    f"speedup_vs_driver={t_drv / t_pipe:.2f}x"),
+    })
+
+    # fused round: eager vs double-buffered (delay_rounds=1 both)
+    X, sq, alpha, w, carry = _setup_2d(ell, mesh, lane=True)
+    mode = "interpret" if jax.default_backend() != "tpu" else "compiled"
+    times = {}
+    for label, overlap in (("eager", False), ("overlap", True)):
+        fn = make_sharded_pipeline_2d(mesh, loss, delay_rounds=1,
+                                      use_kernel=True, overlap=overlap,
+                                      **kw)
+        times[label] = timeit(lambda: fn(X, sq, alpha, w, key, carry))
+        rows.append({
+            "name": f"pipeline/2d_fused_{label}/n={n},d={d},"
+                    f"epochs={epochs}",
+            "us_per_call": times[label] * 1e6,
+            "derived": f"mode={mode},delay_rounds=1",
+        })
+    rows.append({
+        "name": f"pipeline/2d_overlap_over_eager/n={n},d={d}",
+        "us_per_call": times["overlap"] * 1e6,
+        "derived": (f"ratio={times['overlap'] / times['eager']:.2f},"
+                    f"mode={mode}"),
+    })
+
+
+def main(smoke: bool = False) -> list:
+    rows: list = []
+    _bench_1d(rows, smoke=smoke)
+    _bench_2d(rows, smoke=smoke)
+    for r in rows:
+        emit(r["name"], r["us_per_call"], r["derived"])
+    return rows
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv)

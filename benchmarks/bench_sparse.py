@@ -32,7 +32,7 @@ from repro.core.duals import Hinge
 from repro.core.sharded import _masked_block_perms, make_sharded_epoch
 from repro.data.sparse import dense_to_ell
 from repro.dist.mesh import (
-    _lane_pad,
+    lane_pad,
     dcd_ell_kernel_fits,
     dcd_ell_kernel_vmem_bytes,
     dcd_kernel_fits,
@@ -78,7 +78,7 @@ def _bench_profile(rows, name, n, d, k):
     sq = jnp.sum(X * X, axis=1)
     w = jnp.zeros((d,), jnp.float32)
     carry = jnp.zeros((d,), jnp.float32)
-    fn = make_sharded_epoch(mesh, loss, block_size)
+    fn = make_sharded_epoch(mesh, loss)
     t_dense = timeit(lambda: fn(X, sq, alpha, w, blocks, carry))
     rows.append({
         "name": f"sparse/{name}/dense_jnp/n={n},d={d},k={k}",
@@ -92,7 +92,7 @@ def _bench_profile(rows, name, n, d, k):
     sq_e = ell.row_sq_norms()
     w_pad = jnp.zeros((d + 1,), jnp.float32)
     carry_e = jnp.zeros((d + 1,), jnp.float32)
-    fn_e = make_sharded_epoch(mesh, loss, block_size, ell=True)
+    fn_e = make_sharded_epoch(mesh, loss, ell=True)
     t_ell = timeit(lambda: fn_e((cols, vals), sq_e, alpha, w_pad, blocks,
                                 carry_e))
     rows.append({
@@ -102,13 +102,13 @@ def _bench_profile(rows, name, n, d, k):
     })
 
     # ELL fused engine (interpret mode off-TPU — semantics + host time)
-    kp = _lane_pad(k)
+    kp = lane_pad(k)
     cols_p = jnp.full((n, kp), d, jnp.int32).at[:, :k].set(cols)
     vals_p = jnp.zeros((n, kp), jnp.float32).at[:, :k].set(vals)
-    d1 = _lane_pad(d + 1)
+    d1 = lane_pad(d + 1)
     w1 = jnp.zeros((d1,), jnp.float32)
     carry1 = jnp.zeros((d1,), jnp.float32)
-    fn_k = make_sharded_epoch(mesh, loss, block_size, ell=True,
+    fn_k = make_sharded_epoch(mesh, loss, ell=True,
                               use_kernel=True)
     t_fused = timeit(lambda: fn_k((cols_p, vals_p), sq_e, alpha, w1,
                                   blocks, carry1))

@@ -15,7 +15,7 @@ from repro.core.duals import Hinge
 from repro.core.passcode import passcode_epoch
 from repro.core.asyscd import _asyscd_epoch
 from repro.core.sharded import make_sharded_epoch
-from repro.dist.mesh import _lane_pad, solver_mesh
+from repro.dist.mesh import lane_pad, solver_mesh
 
 
 def main() -> None:
@@ -65,11 +65,11 @@ def main() -> None:
         lambda k: jax.random.permutation(k, n_loc)[: n_blocks * block_size]
     )(keys)
     blocks = perms.reshape(p * n_blocks, block_size)
-    d_pad = _lane_pad(d)  # fused path wants 128-lane tiling
+    d_pad = lane_pad(d)  # fused path wants 128-lane tiling
     Xp = X if d_pad == d else \
         jnp.zeros((n, d_pad), X.dtype).at[:, :d].set(X)
     for label, use_kernel in (("unfused", False), ("fused", True)):
-        epoch_fn = make_sharded_epoch(mesh, loss, block_size,
+        epoch_fn = make_sharded_epoch(mesh, loss,
                                       use_kernel=use_kernel)
         Xr, dr = (Xp, d_pad) if use_kernel else (X, d)
         t = timeit(lambda: epoch_fn(Xr, sq, jnp.zeros(n), jnp.zeros(dr),

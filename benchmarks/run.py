@@ -1,12 +1,15 @@
 """Benchmark driver — one section per paper table/figure + roofline.
 
 Prints ``name,us_per_call,derived`` CSV rows.  Sections whose ``main()``
-returns row dicts additionally persist them as out/BENCH_<tag>.json so
-the perf trajectory is recorded across PRs (currently: the DCD Pallas
-kernel section → out/BENCH_kernel.json, fused vs unfused epoch; the
-sparse ELL section → out/BENCH_sparse.json, dense-vs-ELL epoch + VMEM
-frontier; the 2D feature-sharded section → out/BENCH_feature.json,
-1D-vs-2D d-sweep + three-policy VMEM frontier).
+returns row dicts additionally persist them as out/BENCH_<tag>.json AND
+mirror the file to the repo root (BENCH_<tag>.json) so the cross-PR
+perf trajectory is visible without digging into out/ (currently: the
+DCD Pallas kernel section → BENCH_kernel.json, fused vs unfused epoch;
+the sparse ELL section → BENCH_sparse.json, dense-vs-ELL epoch + VMEM
+frontier; the 2D feature-sharded section → BENCH_feature.json,
+1D-vs-2D d-sweep + three-policy VMEM frontier; the multi-epoch pipeline
+section → BENCH_pipeline.json, driver-vs-pipeline dispatch overhead +
+overlap round).
 """
 
 from __future__ import annotations
@@ -17,12 +20,22 @@ import sys
 import time
 
 
+# anchored to the repo root (not the process cwd) so the committed
+# artifacts are updated no matter where run.py is invoked from
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
 def _persist(tag: str, rows) -> None:
-    os.makedirs("out", exist_ok=True)
-    path = os.path.join("out", f"BENCH_{tag}.json")
-    with open(path, "w") as f:
-        json.dump({"rows": rows}, f, indent=2)
-    print(f"# wrote {path} ({len(rows)} rows)", file=sys.stderr)
+    out_dir = os.path.join(_ROOT, "out")
+    os.makedirs(out_dir, exist_ok=True)
+    # out/ is the working artifact; the repo-root mirror is the
+    # cross-PR perf record (committed alongside the code it measures)
+    for path in (os.path.join(out_dir, f"BENCH_{tag}.json"),
+                 os.path.join(_ROOT, f"BENCH_{tag}.json")):
+        with open(path, "w") as f:
+            json.dump({"rows": rows}, f, indent=2)
+        print(f"# wrote {os.path.relpath(path)} ({len(rows)} rows)",
+              file=sys.stderr)
 
 
 def main() -> None:
@@ -31,6 +44,7 @@ def main() -> None:
         bench_convergence,
         bench_feature,
         bench_kernel,
+        bench_pipeline,
         bench_roofline,
         bench_scaling,
         bench_sparse,
@@ -45,6 +59,7 @@ def main() -> None:
         ("DCD Pallas kernel", bench_kernel, "kernel"),
         ("Sparse ELL path", bench_sparse, "sparse"),
         ("2D feature-sharded solver", bench_feature, "feature"),
+        ("Multi-epoch pipeline", bench_pipeline, "pipeline"),
         ("Roofline (dry-run artifacts)", bench_roofline, None),
     ]
     print("name,us_per_call,derived")

@@ -94,10 +94,14 @@ class Logistic:
         return self.C * jnp.logaddexp(0.0, -z)
 
     def conj(self, alpha):
-        a = jnp.clip(alpha, _EPS, self.C - _EPS)
+        """Entropy terms via the exact x·log x → 0 boundary limit
+        (``xlogy``): iterates can sit at exactly 0 or C in float32 —
+        an eps-clip below the f32 ulp of C is a no-op there and
+        0 · log 0 would turn the duality gap into NaN."""
+        a = jnp.clip(alpha, 0.0, self.C)
         return (
-            a * jnp.log(a)
-            + (self.C - a) * jnp.log(self.C - a)
+            jax.scipy.special.xlogy(a, a)
+            + jax.scipy.special.xlogy(self.C - a, self.C - a)
             - self.C * jnp.log(self.C)
         )
 

@@ -55,16 +55,35 @@ the type of ``X_host`` (dense array vs ``repro.data.sparse.EllMatrix``)
     ``dcd_feature_kernel_fits`` for the ~2·n_loc·k̃_loc + 2·d/m 2-D
     slice — falling back to pure jnp otherwise.
 
+**Execution pipeline** (DESIGN.md §11): by default the whole multi-epoch
+solve is ONE jitted dispatch (``make_sharded_pipeline`` /
+``make_sharded_pipeline_2d``) — each device draws its own masked block
+permutations *inside* the shard_map body from per-device PRNG keys
+(bit-matching the host driver's ``_masked_block_perms``), every epoch
+and block round runs inside a single ``lax.scan``, and duality gaps
+accumulate into a preallocated on-device buffer honoring ``gap_every``.
+``pipeline=False`` keeps the legacy host loop (``_drive_epochs``: one
+dispatch + one ``device_put`` per epoch) as the reference.  On the 2-D
+fused path with ``delay_rounds ≥ 1``, ``overlap`` additionally
+double-buffers the block round (``_scan_rounds_overlap``): the
+``model``-axis (base, Gram) psum of block t is carried in flight across
+the round boundary and overlaps the gram kernel of block t+1, the base
+staleness being repaired exactly by ``dcd_feature_base_correction``.
+
 All engines compute the identical update sequence; tests assert
 agreement to atol 1e-5 across hinge / squared-hinge / logistic and
 delay_rounds (``tests/test_sharded_kernel.py``,
-``tests/test_sharded_ell.py``, ``tests/test_sharded_feature.py``).
+``tests/test_sharded_ell.py``, ``tests/test_sharded_feature.py``,
+``tests/test_sharded_pipeline.py``).
 
 Rows whose count is not divisible by the device count are no longer
 dropped: the tail pads to p-divisibility with zero rows (q set to 1 so
 δ stays finite) that are masked out of every block permutation, so they
 are never selected where a device owns at least one real row, and can
 never move w regardless (a zero row's rank-1 update is identically 0).
+Likewise a block count that does not divide the device-local row count
+rounds UP: the last block cycles through the valid prefix again rather
+than silently skipping up to B−1 rows per device per epoch.
 """
 
 from __future__ import annotations
@@ -81,10 +100,11 @@ from repro.core.objective import duality_gap
 from repro.data.sparse import EllMatrix, dense_to_ell, ell_column_split
 from repro.dist.compat import shard_map
 from repro.dist.mesh import (
-    _lane_pad,
     dcd_ell_kernel_fits,
     dcd_feature_kernel_fits,
     dcd_kernel_fits,
+    lane_pad,
+    pipeline_overlap,
     solver_mesh,
     solver_mesh_2d,
 )
@@ -92,7 +112,10 @@ from repro.dist.sharding import named, replicated
 from repro.kernels.ops import (
     dcd_block_update_pallas,
     dcd_ell_block_update_pallas,
+    dcd_feature_base_correction,
     dcd_feature_block_update_pallas,
+    dcd_feature_gram_pallas,
+    dcd_feature_update_pallas,
 )
 
 
@@ -200,30 +223,56 @@ def _resolve_kernel_mode_feature(use_kernel, n_loc: int, k_loc: int,
     return bool(use_kernel), not on_tpu
 
 
+def _n_blocks(n_loc: int, block_size: int) -> int:
+    """Blocks per device per epoch — rounded UP so an epoch is a full
+    pass.  The old ``n_loc // block_size`` floor silently skipped up to
+    B−1 rows per device per epoch whenever ``block_size ∤ n_loc``; the
+    masked-permutation machinery already cycles the valid prefix, so the
+    tail block simply revisits early rows instead."""
+    return max(-(-n_loc // block_size), 1)
+
+
+def _device_block_perm(sub, my, p: int, n_loc: int, n_rows: int,
+                       n_blocks: int, block_size: int):
+    """One device's masked block permutation for one epoch — the draw
+    that never selects padding rows, runnable *inside* the shard_map
+    body from the epoch subkey and this device's ``data``-axis index
+    ``my``.
+
+    Device ``my`` owns local rows [0, n_loc) = global [my·n_loc,
+    (my+1)·n_loc); only the first ``v = clip(n_rows − my·n_loc, 1,
+    n_loc)`` are real data.  The device draws a permutation of n_loc,
+    stable-sorts the invalid ids to the back (keeping the permuted
+    order of the valid ones) and cycles through the valid prefix — with
+    no padding this reduces exactly to ``permutation(n_loc)[:n_blocks·
+    B]``.  The clip to ≥1 covers a device that owns *only* padding
+    (possible when n_rows < (p−1)·n_loc): it repeatedly selects local
+    row 0, a zero row with q←1 whose update cannot move w.
+
+    Returns (n_blocks, B).  ``_masked_block_perms`` (the host driver's
+    all-device draw) is defined as the vmap of this function, so the
+    pipelined and host-driven solves run bit-identical update sequences
+    by construction (also asserted in ``tests/test_sharded_pipeline.
+    py``)."""
+    m = n_blocks * block_size
+    keys = jax.random.split(sub, p)
+    v = jnp.clip(n_rows - my * n_loc, 1, n_loc)
+    perm = jax.random.permutation(keys[my], n_loc)
+    order = jnp.argsort(perm >= v)  # stable: valid ids first, in order
+    sel = perm[order][jnp.arange(m) % v]
+    return sel.reshape(n_blocks, block_size)
+
+
 def _masked_block_perms(key, p: int, n_loc: int, n_rows: int,
                         n_blocks: int, block_size: int):
-    """Per-device block permutations that never select padding rows.
-
-    Device k owns local rows [0, n_loc) = global [k·n_loc, (k+1)·n_loc);
-    only the first ``valid_k = clip(n_rows − k·n_loc, 1, n_loc)`` are
-    real data.  Each device draws a permutation of n_loc, stable-sorts
-    the invalid ids to the back (keeping the permuted order of the valid
-    ones) and cycles through the valid prefix — with no padding this
-    reduces exactly to ``permutation(n_loc)[:n_blocks·B]``.  The clip to
-    ≥1 covers a device that owns *only* padding (possible when
-    n_rows < (p−1)·n_loc): it repeatedly selects local row 0, a zero row
-    with q←1 whose update cannot move w.
-    """
-    m = n_blocks * block_size
-    keys = jax.random.split(key, p)
-    valid = jnp.clip(n_rows - jnp.arange(p) * n_loc, 1, n_loc)
-
-    def one(k, v):
-        perm = jax.random.permutation(k, n_loc)
-        order = jnp.argsort(perm >= v)  # stable: valid ids first, in order
-        return perm[order][jnp.arange(m) % v]
-
-    return jax.vmap(one)(keys, valid)  # (p, m)
+    """All devices' masked block permutations for one epoch, drawn on
+    the host (the ``pipeline=False`` driver path) — row ``my`` IS
+    ``_device_block_perm(key, my, ...)``, structurally.  Returns
+    (p, n_blocks·B)."""
+    return jax.vmap(
+        lambda my: _device_block_perm(key, my, p, n_loc, n_rows,
+                                      n_blocks, block_size).reshape(-1)
+    )(jnp.arange(p))
 
 
 def _scan_rounds(block_update, alpha_loc, w_loc, dw_prev, blocks_loc,
@@ -256,22 +305,169 @@ def _scan_rounds(block_update, alpha_loc, w_loc, dw_prev, blocks_loc,
     return alpha_loc, w_loc, dw_prev
 
 
-def make_sharded_epoch(mesh: Mesh, loss, block_size: int,
-                       delay_rounds: int = 0, *, use_kernel: bool = False,
-                       interpret: bool | None = None, ell: bool = False):
-    """Build the jitted shard_map epoch function for a given mesh.
+def _overlap_round_fns(cols_loc, vals_loc, sq_loc, loss, interpret):
+    """The three split phases of the fused 2-D block round, bound to this
+    device's resident slice (``repro.kernels.ops`` entry points)."""
 
-    ``use_kernel`` swaps the per-device block engine for the fused Pallas
-    indexed-block kernel; callers must then lane-pad d to a multiple of
-    128 (``sharded_passcode_solve`` does).  ``ell`` selects the sparse
-    engines: ``X`` becomes a ``(cols, vals)`` pair of row-sharded ELL
-    arrays and ``w`` the (d₁,) padded primal with the dummy slot at
-    index d (lane-padded when fused).  ``interpret`` defaults to True
-    off-TPU.
+    def gram_fn(w_ref, idx):
+        return dcd_feature_gram_pallas(cols_loc, vals_loc, w_ref, idx,
+                                       interpret=interpret)
+
+    def corr_fn(dvec, idx):
+        return dcd_feature_base_correction(cols_loc, vals_loc, dvec, idx)
+
+    def update_fn(alpha_loc, w_ref, idx, base, gram):
+        return dcd_feature_update_pallas(cols_loc, vals_loc, sq_loc,
+                                         alpha_loc, w_ref, idx, base,
+                                         gram, loss=loss,
+                                         interpret=interpret)
+
+    return gram_fn, corr_fn, update_fn
+
+
+def _scan_rounds_overlap(gram_fn, corr_fn, update_fn, alpha_loc, w_loc,
+                         dw_prev, blocks_loc):
+    """``_scan_rounds`` for the fused 2-D engine with the block round
+    double-buffered (DESIGN.md §11): the ``model``-axis (base, Gram)
+    psum of block t is *carried in flight across the round boundary* and
+    overlaps the gram kernel of block t+1 instead of being consumed
+    between that block's own gram and update kernels.
+
+    Invariant: entering round t the carry holds the already-psummed
+    ``(base⁰_t, gram_t)`` of block t, whose base was computed against
+    W_t — the local primal shard *without* the round's in-flight
+    data-axis aggregate D_t (= round t−1's psum).  The Gram never
+    depends on w, and the base is repaired exactly:
+
+        base_t = base⁰_t + psum_model(D_t ᵀ x)   (= (W_t + D_t)ᵀx,
+                                                  the effective w)
+
+    so only the cheap O(B·k̃_loc) correction and its (B,) psum wait for
+    the aggregates, while the O(B²·k̃_loc) gram kernel of block t+1 and
+    its (B + B²)-word psum run against the already-known W_{t+1} =
+    W_t + D_t.  The bookkeeping is exactly the delayed branch of
+    ``_scan_rounds`` (requires ``delay_rounds ≥ 1``; the caller flushes
+    the final aggregate), and the update sequence is identical to the
+    eager engines in exact arithmetic — tests pin agreement at atol
+    1e-5.
+
+    The last round computes a gram for a wrapped dummy "next block"
+    whose result is discarded with the final carry — one wasted gram
+    kernel per epoch, the price of a uniform scan body.
     """
-    axis = "data"
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    # prologue: block 0's in-flight aggregate, referenced to W_0 = w_loc
+    inflight = gram_fn(w_loc, blocks_loc[0])
+    nxt = jnp.roll(blocks_loc, -1, axis=0)
+
+    def one_round(carry, blk):
+        idx, idx_next = blk
+        alpha_loc, w_loc, dw_prev, (base0, gram) = carry
+        w_next = w_loc + dw_prev  # W_{t+1}: known before D_{t+1} lands
+        # issue block t+1's gram/base⁰ + model psum — independent of the
+        # in-flight (base⁰_t, gram_t) psum and of this round's data psum,
+        # so both collectives can hide behind it
+        inflight_n = gram_fn(w_next, idx_next)
+        # repair block t's stale base, consuming the in-flight aggregate
+        base = base0 + corr_fn(dw_prev, idx)
+        alpha_loc, w_upd = update_fn(alpha_loc, w_next, idx, base, gram)
+        dw_all = jax.lax.psum(w_upd - w_next, "data")
+        return (alpha_loc, w_next, dw_all, inflight_n), ()
+
+    (alpha_loc, w_loc, dw_prev, _), _ = jax.lax.scan(
+        one_round, (alpha_loc, w_loc, dw_prev, inflight),
+        (blocks_loc, nxt),
+    )
+    return alpha_loc, w_loc, dw_prev
+
+
+# ------------------------------------------------ on-device gap path ----
+
+
+def _gap_slots(epochs: int, gap_every: int) -> int:
+    """How many duality gaps the solve records — every ``gap_every``-th
+    epoch plus the final one (the host driver's schedule exactly)."""
+    gap_every = max(int(gap_every), 1)
+    return sum(1 for e in range(epochs)
+               if (e + 1) % gap_every == 0 or e == epochs - 1)
+
+
+def _make_gap_1d(loss, X_loc, ell: bool):
+    """Per-device duality-gap contribution for the pipelined 1-D solve:
+    gap(α) = ‖w(α)‖² + Σ_i [ℓ(w(α)ᵀx_i) + ℓ*(−α_i)] computed from the
+    padded shards — padding rows are masked out of both sums and
+    contribute zero columns to w(α), so the value matches the host
+    driver's ``duality_gap(alpha[:n], X, loss)`` up to reduction order.
+    The whole computation — psums included — is ``cond``-gated on
+    ``rec``: the predicate is a function of the scanned epoch index
+    only, so it is uniform across devices and skipped epochs are
+    collective-free (no d-sized all-reduce of zeros)."""
+    if ell:
+        cols_loc, vals_loc = X_loc
+
+        def rmv(am, d_run):
+            return jnp.zeros((d_run,), jnp.float32).at[cols_loc].add(
+                am[:, None] * vals_loc)
+
+        def mv(wa):
+            return jnp.sum(wa[cols_loc] * vals_loc, axis=1)
+    else:
+        def rmv(am, d_run):
+            return X_loc.T @ am
+
+        def mv(wa):
+            return X_loc @ wa
+
+    def gap(rec, alpha_loc, mask, d_run):
+        am = jnp.where(mask, alpha_loc, 0.0)
+
+        def compute(am):
+            wa = jax.lax.psum(rmv(am, d_run), "data")  # w(α), replicated
+            z = mv(wa)
+            s = jnp.sum(jnp.where(
+                mask, loss.primal_loss(z) + loss.conj(am), 0.0))
+            return jnp.dot(wa, wa) + jax.lax.psum(s, "data")
+
+        return jax.lax.cond(rec, compute,
+                            lambda am: jnp.zeros((), jnp.float32), am)
+
+    return gap
+
+
+def _make_gap_2d(loss, cols_loc, vals_loc, d1_loc: int):
+    """``_make_gap_1d`` for the 2-D mesh: w(α) stays sharded along
+    ``model`` (each device scatters its local slice and psums over
+    ``data``), the per-row dot psums over ``model``, ‖w(α)‖² over
+    ``model`` — no replicated primal is ever formed, matching the
+    solve's own memory model."""
+
+    def gap(rec, alpha_loc, mask):
+        am = jnp.where(mask, alpha_loc, 0.0)
+
+        def rmv(a):
+            return jnp.zeros((d1_loc,), jnp.float32).at[cols_loc].add(
+                a[:, None] * vals_loc)
+
+        def compute(am):
+            wa = jax.lax.psum(rmv(am), "data")  # this shard's w(α) slice
+            z = jax.lax.psum(jnp.sum(wa[cols_loc] * vals_loc, axis=1),
+                             "model")
+            s = jnp.sum(jnp.where(
+                mask, loss.primal_loss(z) + loss.conj(am), 0.0))
+            return (jax.lax.psum(jnp.dot(wa, wa), "model")
+                    + jax.lax.psum(s, "data"))
+
+        return jax.lax.cond(rec, compute,
+                            lambda am: jnp.zeros((), jnp.float32), am)
+
+    return gap
+
+
+# ------------------------------------------------------ epoch builders ----
+
+
+def _block_update_1d(loss, use_kernel: bool, interpret: bool, ell: bool):
+    """The per-device block engine for a 1-D mesh, shared by the
+    per-epoch and pipelined builders."""
 
     def block_update(X_loc, sq_loc, alpha_loc, w_eff, idx_block):
         if ell:
@@ -294,6 +490,46 @@ def make_sharded_epoch(mesh: Mesh, loss, block_size: int,
             X_loc, sq_loc, alpha_loc, w_eff, idx_block, loss
         )
 
+    return block_update
+
+
+def _block_update_2d(loss, use_kernel: bool, interpret: bool):
+    """The per-device block engine for a 2-D mesh (eager composition;
+    the overlapped round drives the split phases directly)."""
+
+    def block_update(cols_loc, vals_loc, sq_loc, alpha_loc, w_eff,
+                     idx_block):
+        if use_kernel:
+            return dcd_feature_block_update_pallas(
+                cols_loc, vals_loc, sq_loc, alpha_loc, w_eff, idx_block,
+                loss=loss, interpret=interpret,
+            )
+        return _local_block_update_feature(
+            cols_loc, vals_loc, sq_loc, alpha_loc, w_eff, idx_block, loss
+        )
+
+    return block_update
+
+
+def make_sharded_epoch(mesh: Mesh, loss, *, delay_rounds: int = 0,
+                       use_kernel: bool = False,
+                       interpret: bool | None = None, ell: bool = False):
+    """Build the jitted shard_map epoch function for a given mesh — one
+    dispatch per epoch, blocks drawn by the host (the ``pipeline=False``
+    reference path; see ``make_sharded_pipeline`` for the default).
+
+    ``use_kernel`` swaps the per-device block engine for the fused Pallas
+    indexed-block kernel; callers must then lane-pad d to a multiple of
+    128 (``sharded_passcode_solve`` does).  ``ell`` selects the sparse
+    engines: ``X`` becomes a ``(cols, vals)`` pair of row-sharded ELL
+    arrays and ``w`` the (d₁,) padded primal with the dummy slot at
+    index d (lane-padded when fused).  ``interpret`` defaults to True
+    off-TPU.
+    """
+    axis = "data"
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    block_update = _block_update_1d(loss, use_kernel, interpret, ell)
     x_spec = (P(axis), P(axis)) if ell else P(axis)
 
     def epoch(X, sq_norms, alpha, w, blocks_idx, carry_dw):
@@ -316,12 +552,13 @@ def make_sharded_epoch(mesh: Mesh, loss, block_size: int,
     return jax.jit(epoch)
 
 
-def make_sharded_epoch_2d(mesh: Mesh, loss, block_size: int,
-                          delay_rounds: int = 0, *,
+def make_sharded_epoch_2d(mesh: Mesh, loss, *, delay_rounds: int = 0,
                           use_kernel: bool = False,
-                          interpret: bool | None = None):
+                          interpret: bool | None = None,
+                          overlap: bool | str = False):
     """Build the jitted shard_map epoch function for a 2-D
-    ``("data", "model")`` mesh (DESIGN.md §10).
+    ``("data", "model")`` mesh (DESIGN.md §10) — the ``pipeline=False``
+    reference path.
 
     ``X`` is a ``(cols, vals)`` pair of (n, m, k) arrays — per-row,
     per-feature-shard local ELL slices (``repro.data.sparse.
@@ -331,26 +568,27 @@ def make_sharded_epoch_2d(mesh: Mesh, loss, block_size: int,
     ``data`` only (replicated over ``model``: every feature shard of a
     data block computes identical δs).  ``use_kernel`` swaps the
     per-device engine for the fused Pallas pair (callers must then
-    lane-pad k_loc and d_loc+1 to multiples of 128)."""
+    lane-pad k_loc and d_loc+1 to multiples of 128).  ``overlap``
+    double-buffers the fused block round (``_scan_rounds_overlap``;
+    needs ``use_kernel`` and ``delay_rounds ≥ 1``)."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-
-    def block_update(cols_loc, vals_loc, sq_loc, alpha_loc, w_eff,
-                     idx_block):
-        if use_kernel:
-            return dcd_feature_block_update_pallas(
-                cols_loc, vals_loc, sq_loc, alpha_loc, w_eff, idx_block,
-                loss=loss, interpret=interpret,
-            )
-        return _local_block_update_feature(
-            cols_loc, vals_loc, sq_loc, alpha_loc, w_eff, idx_block, loss
-        )
+    overlap = pipeline_overlap(overlap, two_d=True, fused=use_kernel,
+                               delay_rounds=delay_rounds)
+    block_update = _block_update_2d(loss, use_kernel, interpret)
 
     def epoch(X, sq_norms, alpha, w, blocks_idx, carry_dw):
         def device_fn(cols_loc, vals_loc, sq_loc, alpha_loc, w_loc,
                       blocks_loc, dw_prev):
             cols_loc = cols_loc[:, 0]  # (n_loc, 1, k) → (n_loc, k)
             vals_loc = vals_loc[:, 0]
+            if overlap:
+                gram_fn, corr_fn, update_fn = _overlap_round_fns(
+                    cols_loc, vals_loc, sq_loc, loss, interpret)
+                return _scan_rounds_overlap(
+                    gram_fn, corr_fn, update_fn, alpha_loc, w_loc,
+                    dw_prev, blocks_loc,
+                )
             return _scan_rounds(
                 lambda a, w_eff, idx: block_update(cols_loc, vals_loc,
                                                    sq_loc, a, w_eff, idx),
@@ -370,16 +608,189 @@ def make_sharded_epoch_2d(mesh: Mesh, loss, block_size: int,
     return jax.jit(epoch)
 
 
+# --------------------------------------------------- pipeline builders ----
+
+
+def _epoch_scan(rounds, gap, key, alpha_loc, w_loc, dw_prev, draw_perm, *,
+                epochs: int, n_gaps: int, gap_every: int, record: bool):
+    """The epoch loop every pipelined device body runs: split the PRNG
+    chain exactly like the host driver, draw this device's masked block
+    permutation, run the round scan, and ``cond``-record the duality
+    gap into the preallocated buffer.  Shared by the 1-D and 2-D
+    builders so the PRNG chain and the gap schedule cannot diverge
+    between them."""
+
+    def epoch_body(carry, e):
+        alpha_loc, w_loc, dw_prev, key, gaps, slot = carry
+        key, sub = jax.random.split(key)
+        blocks_loc = draw_perm(sub)
+        alpha_loc, w_loc, dw_prev = rounds(alpha_loc, w_loc, dw_prev,
+                                           blocks_loc)
+        if record:
+            rec = ((e + 1) % gap_every == 0) | (e == epochs - 1)
+            g = gap(rec, alpha_loc)
+            gaps = jnp.where(rec, gaps.at[slot].set(g), gaps)
+            slot = slot + rec.astype(jnp.int32)
+        return (alpha_loc, w_loc, dw_prev, key, gaps, slot), ()
+
+    carry = (alpha_loc, w_loc, dw_prev, key,
+             jnp.zeros((n_gaps,), jnp.float32), jnp.int32(0))
+    (alpha_loc, w_loc, dw_prev, _, gaps, _), _ = jax.lax.scan(
+        epoch_body, carry, jnp.arange(epochs))
+    return alpha_loc, w_loc, dw_prev, gaps
+
+
+def make_sharded_pipeline(mesh: Mesh, loss, *, epochs: int,
+                          block_size: int, n_blocks: int, n_rows: int,
+                          delay_rounds: int = 0, use_kernel: bool = False,
+                          interpret: bool | None = None, ell: bool = False,
+                          record: bool = True, gap_every: int = 1):
+    """Build the single-dispatch multi-epoch solver for a 1-D
+    ``("data",)`` mesh (DESIGN.md §11): per-epoch PRNG block draws,
+    every block round, and duality-gap recording all run inside one
+    jitted ``lax.scan`` over epochs — no per-epoch host dispatch, no
+    per-epoch ``device_put`` of permutations, no host sync before the
+    solve returns.
+
+    Each device splits the carried PRNG key exactly like the host driver
+    (``key, sub = split(key)`` per epoch) and draws its own masked block
+    permutation from ``sub`` and its ``data``-axis index
+    (``_device_block_perm`` — bit-matching ``_masked_block_perms``), so
+    ``pipeline=True/False`` run identical update sequences.  Gaps land
+    in a preallocated (n_gaps,) on-device buffer honoring ``gap_every``
+    — the whole gap computation, collectives included, is
+    ``cond``-gated to recorded epochs (the predicate is uniform across
+    devices), so skipped epochs are collective-free.
+
+    Returns ``fn(X, sq_norms, alpha, w, key, carry_dw) → (alpha, w,
+    carry_dw, gaps)``; with ``delay_rounds > 0`` the caller flushes the
+    final in-flight aggregate (``w + carry_dw``) exactly like the host
+    driver."""
+    axis = "data"
+    p = mesh.shape["data"]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    gap_every = max(int(gap_every), 1)
+    n_gaps = _gap_slots(epochs, gap_every) if record else 0
+    block_update = _block_update_1d(loss, use_kernel, interpret, ell)
+    x_spec = (P(axis), P(axis)) if ell else P(axis)
+
+    def solve(X, sq_norms, alpha, w, key, carry_dw):
+        def device_fn(X_loc, sq_loc, alpha_loc, w_rep, key, dw_prev):
+            my = jax.lax.axis_index(axis)
+            n_loc = alpha_loc.shape[0]
+            d_run = w_rep.shape[0]
+            mask = jnp.arange(n_loc) < (n_rows - my * n_loc)
+            if record:
+                gap_fn = _make_gap_1d(loss, X_loc, ell)
+                gap = lambda rec, a: gap_fn(rec, a, mask, d_run)
+            else:
+                gap = None
+            rounds = functools.partial(
+                _scan_rounds,
+                lambda a, w_eff, idx: block_update(X_loc, sq_loc, a,
+                                                   w_eff, idx),
+                delay_rounds=delay_rounds)
+            draw = lambda sub: _device_block_perm(sub, my, p, n_loc,
+                                                  n_rows, n_blocks,
+                                                  block_size)
+            return _epoch_scan(rounds, gap, key, alpha_loc, w_rep,
+                               dw_prev, draw, epochs=epochs,
+                               n_gaps=n_gaps, gap_every=gap_every,
+                               record=record)
+
+        return shard_map(
+            device_fn,
+            mesh=mesh,
+            in_specs=(x_spec, P(axis), P(axis), P(), P(), P()),
+            out_specs=(P(axis), P(), P(), P()),
+            check_vma=False,  # carries flip replicated→varying across psum
+        )(X, sq_norms, alpha, w, key, carry_dw)
+
+    return jax.jit(solve)
+
+
+def make_sharded_pipeline_2d(mesh: Mesh, loss, *, epochs: int,
+                             block_size: int, n_blocks: int, n_rows: int,
+                             delay_rounds: int = 0,
+                             use_kernel: bool = False,
+                             interpret: bool | None = None,
+                             record: bool = True, gap_every: int = 1,
+                             overlap: bool | str = False):
+    """``make_sharded_pipeline`` for the 2-D ``("data", "model")`` mesh:
+    the whole multi-epoch feature-sharded solve in one dispatch, with
+    the same in-body per-device block draws (keyed on the ``data``-axis
+    index only, so every feature shard of a data block runs the same
+    sequence) and a ``model``-aware on-device gap (``_make_gap_2d`` —
+    w(α) never leaves its shards).  ``overlap`` double-buffers the
+    fused block round (``_scan_rounds_overlap``; needs ``use_kernel``
+    and ``delay_rounds ≥ 1``)."""
+    p = mesh.shape["data"]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    overlap = pipeline_overlap(overlap, two_d=True, fused=use_kernel,
+                               delay_rounds=delay_rounds)
+    gap_every = max(int(gap_every), 1)
+    n_gaps = _gap_slots(epochs, gap_every) if record else 0
+    block_update = _block_update_2d(loss, use_kernel, interpret)
+
+    def solve(X, sq_norms, alpha, w, key, carry_dw):
+        def device_fn(cols4, vals4, sq_loc, alpha_loc, w_loc, key,
+                      dw_prev):
+            cols_loc = cols4[:, 0]  # (n_loc, 1, k) → (n_loc, k)
+            vals_loc = vals4[:, 0]
+            my = jax.lax.axis_index("data")
+            n_loc = alpha_loc.shape[0]
+            mask = jnp.arange(n_loc) < (n_rows - my * n_loc)
+            if record:
+                gap_fn = _make_gap_2d(loss, cols_loc, vals_loc,
+                                      w_loc.shape[0])
+                gap = lambda rec, a: gap_fn(rec, a, mask)
+            else:
+                gap = None
+            if overlap:
+                gram_fn, corr_fn, update_fn = _overlap_round_fns(
+                    cols_loc, vals_loc, sq_loc, loss, interpret)
+                rounds = functools.partial(_scan_rounds_overlap, gram_fn,
+                                           corr_fn, update_fn)
+            else:
+                rounds = functools.partial(
+                    _scan_rounds,
+                    lambda a, w_eff, idx: block_update(
+                        cols_loc, vals_loc, sq_loc, a, w_eff, idx),
+                    delay_rounds=delay_rounds)
+            draw = lambda sub: _device_block_perm(sub, my, p, n_loc,
+                                                  n_rows, n_blocks,
+                                                  block_size)
+            return _epoch_scan(rounds, gap, key, alpha_loc, w_loc,
+                               dw_prev, draw, epochs=epochs,
+                               n_gaps=n_gaps, gap_every=gap_every,
+                               record=record)
+
+        cols, vals = X
+        return shard_map(
+            device_fn,
+            mesh=mesh,
+            in_specs=(P("data", "model"), P("data", "model"), P("data"),
+                      P("data"), P("model"), P(), P("model")),
+            out_specs=(P("data"), P("model"), P("model"), P()),
+            check_vma=False,  # carries flip replicated→varying across psum
+        )(cols, vals, sq_norms, alpha, w, key, carry_dw)
+
+    return jax.jit(solve)
+
+
 def _drive_epochs(epoch_fn, X, sq_norms, alpha, w, carry_dw, *, p, n_loc,
-                  n, block_size, epochs, seed, record, gap_every,
+                  n, n_blocks, block_size, epochs, key, record, gap_every,
                   delay_rounds, blocks_sharding, gap_fn):
-    """The host-side epoch driver both solver paths share: draw the
-    per-device masked block permutations, dispatch the jitted epoch,
-    record duality gaps on-device every ``gap_every`` epochs (plus the
-    final one — host sync only after the solve), and flush the deferred
-    aggregate when delayed.  Returns (alpha, w, gaps)."""
-    key = jax.random.PRNGKey(seed)
-    n_blocks = max(n_loc // block_size, 1)
+    """The host-side per-epoch driver (the ``pipeline=False`` reference
+    path): draw the per-device masked block permutations, dispatch the
+    jitted epoch, record duality gaps on-device every ``gap_every``
+    epochs (plus the final one — host sync only after the solve), and
+    flush the deferred aggregate when delayed.  ``key`` is the same
+    PRNG key the pipelined solve consumes — one key, one chain, so the
+    documented bit-match between the two paths is structural, not a
+    call-site convention.  Returns (alpha, w, gaps)."""
     gap_every = max(int(gap_every), 1)
     gaps = []
     for e in range(epochs):
@@ -419,6 +830,8 @@ def sharded_passcode_solve(
     record: bool = True,
     use_kernel: bool | str = False,
     gap_every: int = 1,
+    pipeline: bool = True,
+    overlap: bool | str = "auto",
 ) -> ShardedResult:
     """Distributed PASSCoDe-Atomic.  ``X_host``: dense (n, d) array or an
     ``EllMatrix`` (the sparse fast path — per-update work drops from
@@ -440,7 +853,20 @@ def sharded_passcode_solve(
     ``gap_every``: with ``record=True``, compute the duality gap every
     that many epochs (plus the final one).  Gap values stay on device
     until the solve finishes, so recording no longer host-syncs (and
-    thereby serializes) every epoch."""
+    thereby serializes) every epoch.
+
+    ``pipeline``: True (default) folds the whole multi-epoch solve into
+    one jitted dispatch — block permutations drawn on-device inside the
+    shard_map body, gaps accumulated into an on-device buffer (DESIGN.md
+    §11).  False keeps the legacy host loop (one dispatch + one
+    ``device_put`` per epoch); both run bit-matching update sequences.
+
+    ``overlap``: on the 2-D fused path with ``delay_rounds ≥ 1``,
+    double-buffer the block round so the ``model``-axis (base, Gram)
+    psum of block t overlaps the gram kernel of block t+1
+    (``_scan_rounds_overlap``).  "auto" (default) enables it exactly
+    there; True elsewhere raises (``repro.dist.mesh.pipeline_overlap``).
+    """
     if mesh is None:
         mesh = (solver_mesh_2d() if "model" in mesh_axes
                 else solver_mesh("data"))
@@ -452,7 +878,8 @@ def sharded_passcode_solve(
         return _solve_feature_sharded(
             X_host, loss, mesh=mesh, epochs=epochs, block_size=block_size,
             delay_rounds=delay_rounds, seed=seed, record=record,
-            use_kernel=use_kernel, gap_every=gap_every,
+            use_kernel=use_kernel, gap_every=gap_every, pipeline=pipeline,
+            overlap=overlap,
         )
     p = mesh.shape["data"]
     is_ell = isinstance(X_host, EllMatrix)
@@ -464,13 +891,17 @@ def sharded_passcode_solve(
     n_loc = -(-n // p)  # ceil: the n % p tail is padded, not dropped
     n_pad = n_loc * p
     use_k, interpret = _resolve_kernel_mode(use_kernel, n_loc, d, k_max)
+    # a 1-D mesh has no model-axis psum: "auto" resolves to no overlap,
+    # an explicit True is an error
+    pipeline_overlap(overlap, two_d=False, fused=use_k,
+                     delay_rounds=delay_rounds)
     data_sh = named(mesh, "data")
     rep_sh = replicated(mesh)
     if is_ell:
         X_gap = X_host  # duality gap always reads the unpadded data
         # lane-pad k_max to the 128-lane tile when fused; pad rows to
         # n_pad with all-padding rows (index d, value 0)
-        k_run = _lane_pad(k_max) if use_k else k_max
+        k_run = lane_pad(k_max) if use_k else k_max
         cols = jnp.full((n_pad, k_run), d, jnp.int32)
         cols = cols.at[:n, :k_max].set(jnp.asarray(X_host.indices, jnp.int32))
         vals = jnp.zeros((n_pad, k_run), jnp.float32)
@@ -478,7 +909,7 @@ def sharded_passcode_solve(
             jnp.asarray(X_host.values, jnp.float32))
         # padded primal with the dummy slot at index d (lane-padded for
         # clean tiling when fused); padding scatter-adds land there
-        d_run = _lane_pad(d + 1) if use_k else d + 1
+        d_run = lane_pad(d + 1) if use_k else d + 1
         sq_norms = jnp.ones((n_pad,), jnp.float32)
         sq_norms = sq_norms.at[:n].set(X_host.row_sq_norms())
         X = (
@@ -492,7 +923,7 @@ def sharded_passcode_solve(
         # zero columns (inert in every dot product; sliced off the
         # returned w); row padding is all-zero rows with q set to 1 so
         # their (never-selected) update stays finite
-        d_run = _lane_pad(d) if use_k else d
+        d_run = lane_pad(d) if use_k else d
         if d_run != d or n_pad != n:
             X = jnp.zeros((n_pad, d_run), X.dtype).at[:n, :d].set(X)
         sq_norms = jnp.sum(X * X, axis=1)
@@ -503,17 +934,31 @@ def sharded_passcode_solve(
     alpha = jax.device_put(jnp.zeros((n_pad,), jnp.float32), data_sh)
     w = jax.device_put(jnp.zeros((d_run,), jnp.float32), rep_sh)
     carry_dw = jax.device_put(jnp.zeros((d_run,), jnp.float32), rep_sh)
+    n_blocks = _n_blocks(n_loc, block_size)
+    key = jax.random.PRNGKey(seed)  # one chain for both paths
 
-    epoch_fn = make_sharded_epoch(mesh, loss, block_size, delay_rounds,
-                                  use_kernel=use_k, interpret=interpret,
-                                  ell=is_ell)
-    alpha, w, gaps_arr = _drive_epochs(
-        epoch_fn, X, sq_norms, alpha, w, carry_dw, p=p, n_loc=n_loc, n=n,
-        block_size=block_size, epochs=epochs, seed=seed, record=record,
-        gap_every=gap_every, delay_rounds=delay_rounds,
-        blocks_sharding=data_sh,
-        gap_fn=lambda a: duality_gap(a[:n], X_gap, loss),
-    )
+    if pipeline:
+        solve_fn = make_sharded_pipeline(
+            mesh, loss, epochs=epochs, block_size=block_size,
+            n_blocks=n_blocks, n_rows=n, delay_rounds=delay_rounds,
+            use_kernel=use_k, interpret=interpret, ell=is_ell,
+            record=record, gap_every=gap_every)
+        alpha, w, carry_dw, gaps_arr = solve_fn(
+            X, sq_norms, alpha, w, key, carry_dw)
+        if delay_rounds > 0:
+            w = w + carry_dw  # flush in-flight aggregate
+    else:
+        epoch_fn = make_sharded_epoch(mesh, loss,
+                                      delay_rounds=delay_rounds,
+                                      use_kernel=use_k,
+                                      interpret=interpret, ell=is_ell)
+        alpha, w, gaps_arr = _drive_epochs(
+            epoch_fn, X, sq_norms, alpha, w, carry_dw, p=p, n_loc=n_loc,
+            n=n, n_blocks=n_blocks, block_size=block_size, epochs=epochs,
+            key=key, record=record, gap_every=gap_every,
+            delay_rounds=delay_rounds, blocks_sharding=data_sh,
+            gap_fn=lambda a: duality_gap(a[:n], X_gap, loss),
+        )
     return ShardedResult(alpha[:n], w[:d], gaps_arr, epochs)
 
 
@@ -529,6 +974,8 @@ def _solve_feature_sharded(
     record: bool,
     use_kernel: bool | str,
     gap_every: int,
+    pipeline: bool,
+    overlap: bool | str,
 ) -> ShardedResult:
     """The 2-D (data × model) engine behind ``sharded_passcode_solve``
     (DESIGN.md §10).  Rows/duals block-parallelize along ``data``
@@ -548,10 +995,12 @@ def _solve_feature_sharded(
     use_k, interpret = _resolve_kernel_mode_feature(
         use_kernel, n_loc, k_loc, d_loc, block_size
     )
+    overlap_on = pipeline_overlap(overlap, two_d=True, fused=use_k,
+                                  delay_rounds=delay_rounds)
     # lane-pad k_loc and the per-shard padded primal when fused; pad
     # rows to n_pad with all-padding rows (local id d_loc, value 0)
-    k_run = _lane_pad(k_loc) if use_k else k_loc
-    d1_loc = _lane_pad(d_loc + 1) if use_k else d_loc + 1
+    k_run = lane_pad(k_loc) if use_k else k_loc
+    d1_loc = lane_pad(d_loc + 1) if use_k else d_loc + 1
     cols = jnp.full((n_pad, m, k_run), d_loc, jnp.int32)
     cols = cols.at[:n, :, :k_loc].set(jnp.asarray(fse.indices, jnp.int32))
     vals = jnp.zeros((n_pad, m, k_run), jnp.float32)
@@ -570,18 +1019,34 @@ def _solve_feature_sharded(
     w = jax.device_put(jnp.zeros((m * d1_loc,), jnp.float32), model_sh)
     carry_dw = jax.device_put(jnp.zeros((m * d1_loc,), jnp.float32),
                               model_sh)
+    n_blocks = _n_blocks(n_loc, block_size)
+    key = jax.random.PRNGKey(seed)  # one chain for both paths
 
-    epoch_fn = make_sharded_epoch_2d(mesh, loss, block_size, delay_rounds,
-                                     use_kernel=use_k, interpret=interpret)
-    # identical block draws to the 1-D solver at equal p and seed, so
-    # the two paths run the same update sequence
-    alpha, w, gaps_arr = _drive_epochs(
-        epoch_fn, X, sq_norms, alpha, w, carry_dw, p=p, n_loc=n_loc, n=n,
-        block_size=block_size, epochs=epochs, seed=seed, record=record,
-        gap_every=gap_every, delay_rounds=delay_rounds,
-        blocks_sharding=data_sh,
-        gap_fn=lambda a: duality_gap(a[:n], X_gap, loss),
-    )
+    if pipeline:
+        solve_fn = make_sharded_pipeline_2d(
+            mesh, loss, epochs=epochs, block_size=block_size,
+            n_blocks=n_blocks, n_rows=n, delay_rounds=delay_rounds,
+            use_kernel=use_k, interpret=interpret, record=record,
+            gap_every=gap_every, overlap=overlap_on)
+        # identical block draws to the 1-D solver at equal p and seed,
+        # so the two paths run the same update sequence
+        alpha, w, carry_dw, gaps_arr = solve_fn(
+            X, sq_norms, alpha, w, key, carry_dw)
+        if delay_rounds > 0:
+            w = w + carry_dw  # flush in-flight aggregate
+    else:
+        epoch_fn = make_sharded_epoch_2d(mesh, loss,
+                                         delay_rounds=delay_rounds,
+                                         use_kernel=use_k,
+                                         interpret=interpret,
+                                         overlap=overlap_on)
+        alpha, w, gaps_arr = _drive_epochs(
+            epoch_fn, X, sq_norms, alpha, w, carry_dw, p=p, n_loc=n_loc,
+            n=n, n_blocks=n_blocks, block_size=block_size, epochs=epochs,
+            key=key, record=record, gap_every=gap_every,
+            delay_rounds=delay_rounds, blocks_sharding=data_sh,
+            gap_fn=lambda a: duality_gap(a[:n], X_gap, loss),
+        )
     # stitch the true primal back out of the per-shard padded slices
     w_full = w.reshape(m, d1_loc)[:, :d_loc].reshape(-1)[:d]
     return ShardedResult(alpha[:n], w_full, gaps_arr, epochs)
@@ -596,7 +1061,7 @@ def sharded_passcode_feature(
     seed: int = 0,
 ):
     """Back-compat shim for the old feature-sharded demo — now a thin
-    wrapper over the unified 2-D engine
+    wrapper over the unified 2D engine
     (``sharded_passcode_solve(mesh_axes=("data", "model"))``), which
     replaced the dense, serial, unjitted original.  data=1 with one
     n-sized block per epoch reproduces the original's full serial

@@ -51,17 +51,24 @@ class EllMatrix(NamedTuple):
 
 
 def dense_to_ell(dense, k_max: int | None = None) -> EllMatrix:
-    """Convert a dense (n, d) array to ELL (host-side, numpy)."""
+    """Convert a dense (n, d) array to ELL (host-side, numpy).
+
+    ``k_max`` defaults to the max per-row nonzero count (≥ 1); forcing it
+    larger is allowed (extra slots pad), smaller is an error — truncating
+    a row would silently corrupt X, like ``ell_column_split`` it raises.
+    """
     dense = np.asarray(dense)
     n, d = dense.shape
     nnz_per_row = (dense != 0).sum(axis=1)
+    need = max(int(nnz_per_row.max()) if n else 0, 1)
     if k_max is None:
-        k_max = max(int(nnz_per_row.max()), 1)
+        k_max = need
+    elif k_max < need:
+        raise ValueError(f"k_max={k_max} < max per-row nnz {need}")
     indices = np.full((n, k_max), d, dtype=np.int32)
     values = np.zeros((n, k_max), dtype=np.float32)
     for i in range(n):
         (cols,) = np.nonzero(dense[i])
-        cols = cols[:k_max]
         indices[i, : len(cols)] = cols
         values[i, : len(cols)] = dense[i, cols]
     return EllMatrix(jnp.asarray(indices), jnp.asarray(values), d)

@@ -63,15 +63,21 @@ def dp_size(mesh) -> int:
 VMEM_BYTES = 16 * 2**20  # per-TensorCore VMEM (v4/v5-class parts)
 
 
-def _lane_pad(d: int, lanes: int = 128) -> int:
+def lane_pad(d: int, lanes: int = 128) -> int:
+    """Round ``d`` up to the TPU lane tile (128 f32 lanes) — the padding
+    every fused kernel path applies to its minor dimension."""
     return ((d + lanes - 1) // lanes) * lanes
+
+
+# back-compat alias (pre-PR-5 modules imported the underscored name)
+_lane_pad = lane_pad
 
 
 def dcd_kernel_vmem_bytes(n_loc: int, d: int, *, itemsize: int = 4) -> int:
     """Resident working set of the fused indexed-block DCD round: the
     whole (n_loc, d̃) local shard plus w in/out (2·d̃), α in/out + q
     (3·n_loc f32) and the int32 index block (n_loc upper bound)."""
-    dp = _lane_pad(d)
+    dp = lane_pad(d)
     return itemsize * (n_loc * dp + 2 * dp + 3 * n_loc) + 4 * n_loc
 
 
@@ -94,8 +100,8 @@ def dcd_ell_kernel_vmem_bytes(n_loc: int, k_max: int, d: int, *,
     Independent of d except through the 2·d₁ primal term — this is what
     admits the large-d problems (rcv1 d≈47k, news20 d≈1.3M at paper
     scale) whose dense n_loc·d̃ shard ``dcd_kernel_fits`` rejects."""
-    kp = _lane_pad(k_max)
-    d1 = _lane_pad(d + 1)
+    kp = lane_pad(k_max)
+    d1 = lane_pad(d + 1)
     return itemsize * (2 * n_loc * kp + 2 * d1 + 3 * n_loc) + 4 * n_loc
 
 
@@ -125,8 +131,8 @@ def dcd_feature_kernel_vmem_bytes(n_loc: int, k_loc: int, d_loc: int, *,
     The only d-dependent term is 2·d₁_loc ≈ 2·d/m: at m = 16 this admits
     webspam/kddb-scale d ≈ 16.6M, where the dense policy's n_loc·d̃ and
     the 1D ELL policy's 2·lane_pad(d+1) primal both exceed VMEM."""
-    kp = _lane_pad(k_loc)
-    d1 = _lane_pad(d_loc + 1)
+    kp = lane_pad(k_loc)
+    d1 = lane_pad(d_loc + 1)
     b = block_size
     return (itemsize * (2 * n_loc * kp + 2 * d1 + 3 * n_loc + b * b + 3 * b)
             + 4 * n_loc + 4 * b)
@@ -145,11 +151,48 @@ def dcd_feature_kernel_fits(n_loc: int, k_loc: int, d_loc: int, *,
     ) <= headroom * vmem_bytes
 
 
+def pipeline_overlap(overlap, *, two_d: bool, fused: bool,
+                     delay_rounds: int) -> bool:
+    """Resolve the solver's ``overlap`` knob ∈ {False, True, "auto"} —
+    whether the 2-D block round double-buffers its ``model``-axis
+    (base, Gram) psum behind the next block's gram kernel (DESIGN.md
+    §11).  Like the VMEM admission rules above, when a round pipelines
+    is *distribution* policy.
+
+    The overlapped round needs (a) the fused 2-D engine, whose split
+    gram/update phases expose an aggregate that can stay in flight — the
+    unfused engine psums per update and the 1-D meshes have no
+    ``model``-axis psum at all — and (b) ``delay_rounds ≥ 1``, the
+    staleness bookkeeping (carried in-flight Δw) the overlapped schedule
+    piggybacks on.  ``"auto"`` enables it exactly there; forcing ``True``
+    elsewhere raises rather than silently changing semantics."""
+    if overlap == "auto":
+        return bool(two_d and fused and delay_rounds >= 1)
+    overlap = bool(overlap)
+    if not overlap:
+        return False
+    if not two_d:
+        raise ValueError(
+            "overlap=True needs a 2-D ('data', 'model') mesh — a 1-D "
+            "mesh has no model-axis psum to double-buffer")
+    if not fused:
+        raise ValueError(
+            "overlap=True needs the fused kernel path (use_kernel=True "
+            "or an admitting 'auto') — only the split gram/update "
+            "phases expose a (base, Gram) aggregate to keep in flight")
+    if delay_rounds < 1:
+        raise ValueError(
+            "overlap=True needs delay_rounds >= 1 — the overlapped "
+            "round carries its aggregates with the delayed-round "
+            "bookkeeping")
+    return True
+
+
 def dcd_block_rows(d: int, *, vmem_bytes: int = VMEM_BYTES,
                    headroom: float = 0.9, max_rows: int = 512) -> int:
     """Largest power-of-two row tile for the *contiguous* epoch kernel
     whose (B, d̃) tile + w + per-row vectors fit the VMEM budget."""
-    dp = _lane_pad(d)
+    dp = lane_pad(d)
     b = max_rows
     while b > 8 and 4 * (b * dp + 2 * dp + 3 * b) > headroom * vmem_bytes:
         b //= 2

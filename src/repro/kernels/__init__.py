@@ -20,7 +20,11 @@ carries w across blocks, so a whole epoch is ONE pallas_call.
                  ``dcd_block_update_pallas`` / ``dcd_ell_block_update_
                  pallas`` / ``dcd_feature_block_update_pallas`` — the
                  per-device block engines ``repro.core.sharded`` fuses
-                 into its shard_map rounds (``use_kernel=True``)
+                 into its shard_map rounds (``use_kernel=True``) — and
+                 the split-phase 2D entry points (``dcd_feature_gram_
+                 pallas`` / ``dcd_feature_base_correction`` /
+                 ``dcd_feature_update_pallas``) the double-buffered
+                 round pipeline drives separately (DESIGN.md §11)
   ref.py       — pure-jnp oracle (identical update order)
 """
 
@@ -28,7 +32,10 @@ from repro.kernels.ops import (
     dcd_block_update_pallas,
     dcd_ell_block_update_pallas,
     dcd_epoch_pallas,
+    dcd_feature_base_correction,
     dcd_feature_block_update_pallas,
+    dcd_feature_gram_pallas,
+    dcd_feature_update_pallas,
 )
 from repro.kernels.ref import dcd_epoch_ref
 
@@ -37,5 +44,8 @@ __all__ = [
     "dcd_ell_block_update_pallas",
     "dcd_epoch_pallas",
     "dcd_epoch_ref",
+    "dcd_feature_base_correction",
     "dcd_feature_block_update_pallas",
+    "dcd_feature_gram_pallas",
+    "dcd_feature_update_pallas",
 ]

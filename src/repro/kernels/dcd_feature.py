@@ -38,6 +38,14 @@ pinned to 0 by construction.  In exact arithmetic the two-kernel block
 is identical to the per-update-psum jnp engine
 (``repro.core.sharded._local_block_update_feature``); tests assert
 agreement to atol 1e-5.
+
+The two phases are driven through ``repro.kernels.ops`` either eagerly
+(``dcd_feature_block_update_pallas``: gram → psum → update per block)
+or double-buffered (DESIGN.md §11): the round pipeline keeps the
+psummed (base, Gram) of block t in flight across the round boundary —
+the gram kernel accepts any *reference* primal shard, and a stale base
+is repaired exactly by ``dcd_feature_base_correction`` before the
+update kernel consumes it.
 """
 
 from __future__ import annotations

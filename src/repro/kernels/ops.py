@@ -152,12 +152,63 @@ def dcd_ell_block_update_pallas(cols, vals, sq_norms, alpha, w_pad, idx, *,
     return a_new, w_new - w_pad
 
 
+# ------------------- split-phase 2D (data × model) block entry points ----
+# The fused feature-sharded block round is two Pallas kernels bracketing
+# ONE ``model``-axis psum (repro.kernels.dcd_feature).  The phases are
+# exposed separately so the round pipeline (repro.core.sharded.
+# _scan_rounds_overlap, DESIGN.md §11) can keep a block's psummed
+# (base, Gram) aggregate in flight while the *next* block's gram kernel
+# runs, instead of consuming it immediately.
+
+
+def dcd_feature_gram_pallas(cols, vals, w_ref, idx, *, axis: str = "model",
+                            interpret: bool = False):
+    """Phase 1: the block's (base, Gram), psummed over ``axis``.
+
+    ``base`` is w_refᵀx_t against whatever reference primal shard the
+    caller holds — the overlapped round passes a shard that is one
+    data-round *stale* and restores exactness later via
+    ``dcd_feature_base_correction``; the eager round passes the current
+    effective shard.  Returns the (B,) base and (B, B) Gram with the
+    ``model``-axis partials already reduced — the only collective of the
+    fused block."""
+    base_p, gram_p = dcd_feature_gram_pallas_call(
+        cols, vals, w_ref, idx, interpret=interpret,
+    )
+    return jax.lax.psum((base_p, gram_p), axis)
+
+
+def dcd_feature_base_correction(cols, vals, dvec, idx, *,
+                                axis: str = "model"):
+    """Correct a stale base by the aggregate it was computed without:
+    ``Δbase_t = Δwᵀx_t`` for the block's rows, psummed over ``axis``.
+
+    ``dvec`` is this feature shard's slice of the missing aggregate (the
+    delayed data-round psum Δw).  An O(B·k̃_loc) gather-dot plus a (B,)
+    psum — the only part of the block's read path that must wait for the
+    in-flight aggregates, which is what lets the O(B²·k̃_loc) gram kernel
+    and the (B + B²)-word psum run ahead, off the critical path."""
+    part = jnp.sum(dvec[cols[idx]] * vals[idx], axis=1)
+    return jax.lax.psum(part, axis)
+
+
+def dcd_feature_update_pallas(cols, vals, sq_norms, alpha, w_loc, idx, base,
+                              gram, *, loss, interpret: bool = False):
+    """Phase 2: the B-step δ recursion against a *reduced* (base, Gram);
+    no collectives.  Returns (updated α shard, updated primal shard)."""
+    return dcd_feature_update_pallas_call(
+        cols, vals, alpha, sq_norms, w_loc, idx, base, gram, loss=loss,
+        interpret=interpret,
+    )
+
+
 def dcd_feature_block_update_pallas(cols, vals, sq_norms, alpha, w_loc, idx,
                                     *, loss, axis: str = "model",
                                     interpret: bool = False):
     """One indexed block of B sequential DCD updates on a 2D
     (data × model) feature shard — the fused equivalent of
-    ``repro.core.sharded._local_block_update_feature``.
+    ``repro.core.sharded._local_block_update_feature``; the eager
+    (non-overlapped) composition of the split phases above.
 
     Traced (not jitted) so it runs inside a ``shard_map`` body on a
     ``(data, model)`` mesh: ``cols``/``vals`` are this device's (n_loc,
@@ -169,12 +220,11 @@ def dcd_feature_block_update_pallas(cols, vals, sq_norms, alpha, w_loc, idx,
     ``repro.kernels.dcd_feature``) — exactly equal to the per-update
     rule in exact arithmetic.  Returns (updated α shard, local Δw
     shard)."""
-    base_p, gram_p = dcd_feature_gram_pallas_call(
-        cols, vals, w_loc, idx, interpret=interpret,
+    base, gram = dcd_feature_gram_pallas(
+        cols, vals, w_loc, idx, axis=axis, interpret=interpret,
     )
-    base, gram = jax.lax.psum((base_p, gram_p), axis)
-    a_new, w_new = dcd_feature_update_pallas_call(
-        cols, vals, alpha, sq_norms, w_loc, idx, base, gram, loss=loss,
+    a_new, w_new = dcd_feature_update_pallas(
+        cols, vals, sq_norms, alpha, w_loc, idx, base, gram, loss=loss,
         interpret=interpret,
     )
     return a_new, w_new - w_loc

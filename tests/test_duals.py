@@ -86,3 +86,19 @@ def test_delta_fixpoint_at_optimum(loss):
         d2 = float(loss.delta(jnp.asarray(alpha + d1), jnp.asarray(wx1),
                               jnp.asarray(q)))
         assert abs(d2) < 5e-3, (type(loss).__name__, d1, d2)
+
+
+@pytest.mark.parametrize("C", [0.25, 1.0, 2.0])
+def test_logistic_conj_finite_at_box_boundary(C):
+    """Regression: iterates can sit at *exactly* 0 or C in float32 (the
+    Newton safeguard's 1e-12 margin underflows below the f32 ulp of C),
+    and ℓ*(−α) there must be the exact x·log x → 0 limit — a NaN here
+    silently poisons every recorded duality gap."""
+    loss = Logistic(C=C)
+    a = jnp.asarray([0.0, C, 0.5 * C], jnp.float32)
+    vals = np.asarray(loss.conj(a))
+    assert np.isfinite(vals).all(), vals
+    # exact boundary values: ℓ*(0) = ℓ*(−C) = −C·log C + C·log C = 0
+    np.testing.assert_allclose(vals[:2], 0.0, atol=1e-6)
+    # interior unchanged: α = C/2 ⇒ C·log(1/2) relative to −C·log C
+    np.testing.assert_allclose(vals[2], C * np.log(0.5), rtol=1e-5)

@@ -60,3 +60,27 @@ def test_shard_map_compat_resolves():
         mesh=mesh, in_specs=P("data"), out_specs=P(), check_vma=False,
     )(jax.numpy.arange(float(n)))
     assert float(out) == n * (n - 1) / 2
+
+
+def test_lane_pad_public_and_overlap_policy():
+    """PR 5: ``lane_pad`` is public API (core/benchmarks used to import
+    the underscored spelling across modules) and the pipeline-overlap
+    policy resolves/validates the solver's ``overlap`` knob."""
+    import pytest
+
+    from repro.dist.mesh import _lane_pad, lane_pad, pipeline_overlap
+
+    assert lane_pad(1) == 128 and lane_pad(128) == 128
+    assert lane_pad(129) == 256 and lane_pad(0) == 0
+    assert _lane_pad is lane_pad  # back-compat alias
+    # "auto": on exactly for (2-D, fused, delayed)
+    assert pipeline_overlap("auto", two_d=True, fused=True, delay_rounds=1)
+    for kw in (dict(two_d=False, fused=True, delay_rounds=1),
+               dict(two_d=True, fused=False, delay_rounds=1),
+               dict(two_d=True, fused=True, delay_rounds=0)):
+        assert not pipeline_overlap("auto", **kw)
+        with pytest.raises(ValueError):
+            pipeline_overlap(True, **kw)
+    assert pipeline_overlap(True, two_d=True, fused=True, delay_rounds=1)
+    assert not pipeline_overlap(False, two_d=True, fused=True,
+                                delay_rounds=1)

@@ -1,0 +1,270 @@
+"""On-device multi-epoch pipeline of the sharded PASSCoDe solver
+(DESIGN.md §11): the single-dispatch solve (``pipeline=True``, the
+default) must run the *bit-identical* update sequence of the legacy
+per-epoch host driver — per-device block permutations drawn inside the
+shard_map body must match the host draw exactly, alpha/w must agree to
+atol 1e-5 for every loss × delay_rounds on both 1-D and 2-D meshes, and
+the on-device duality-gap buffer must reproduce the driver's values and
+``gap_every`` schedule.  The double-buffered fused 2-D round
+(``overlap``) must agree with the unfused per-update-psum reference.
+
+Also the regression tests for this PR's silent-data-loss fixes:
+``dense_to_ell`` must raise on a lossy ``k_max`` instead of truncating
+rows, and an epoch must visit every valid row when ``block_size`` does
+not divide the device-local row count (the old floor'd block count
+silently skipped up to B−1 rows per device per epoch).
+
+Multi-device behaviour (n % p tail, 4×2 mesh, fused overlap) runs in an
+8-host-device subprocess, same pattern as the other sharded test files.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sharded_passcode_solve
+from repro.core.duals import Hinge, Logistic, SquaredHinge
+from repro.core.sharded import (
+    _device_block_perm,
+    _gap_slots,
+    _masked_block_perms,
+    _n_blocks,
+)
+from repro.data.sparse import dense_to_ell
+
+
+@pytest.fixture(scope="module")
+def tiny_ell(tiny):
+    return tiny.X_train
+
+
+@pytest.fixture(scope="module")
+def mesh_2d():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def _assert_same(r_a, r_b, *, gaps_tol=None):
+    np.testing.assert_allclose(np.asarray(r_a.alpha), np.asarray(r_b.alpha),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(r_a.w_hat), np.asarray(r_b.w_hat),
+                               rtol=1e-5, atol=1e-5)
+    if gaps_tol is not None:
+        assert r_a.gaps.shape == r_b.gaps.shape
+        np.testing.assert_allclose(np.asarray(r_a.gaps),
+                                   np.asarray(r_b.gaps), rtol=gaps_tol,
+                                   atol=gaps_tol)
+
+
+@pytest.mark.parametrize("delay_rounds", [0, 1])
+@pytest.mark.parametrize(
+    "loss", [Hinge(C=1.0), SquaredHinge(C=1.0), Logistic(C=1.0)],
+    ids=["hinge", "sq", "logistic"],
+)
+def test_pipeline_matches_driver_1d(tiny_ell, loss, delay_rounds):
+    """Single-dispatch solve == per-epoch host driver, 1-D ELL path."""
+    kw = dict(epochs=2, block_size=32, delay_rounds=delay_rounds)
+    r_drv = sharded_passcode_solve(tiny_ell, loss, pipeline=False, **kw)
+    r_pipe = sharded_passcode_solve(tiny_ell, loss, pipeline=True, **kw)
+    _assert_same(r_pipe, r_drv, gaps_tol=1e-3)
+
+
+@pytest.mark.parametrize("delay_rounds", [0, 1])
+@pytest.mark.parametrize(
+    "loss", [Hinge(C=1.0), SquaredHinge(C=1.0), Logistic(C=1.0)],
+    ids=["hinge", "sq", "logistic"],
+)
+def test_pipeline_matches_driver_2d(tiny_ell, mesh_2d, loss, delay_rounds):
+    """Single-dispatch solve == per-epoch host driver, 2-D mesh."""
+    kw = dict(mesh=mesh_2d, epochs=2, block_size=32,
+              delay_rounds=delay_rounds)
+    r_drv = sharded_passcode_solve(tiny_ell, loss, pipeline=False, **kw)
+    r_pipe = sharded_passcode_solve(tiny_ell, loss, pipeline=True, **kw)
+    _assert_same(r_pipe, r_drv, gaps_tol=1e-3)
+
+
+def test_pipeline_matches_driver_dense(tiny_dense, hinge):
+    """The dense 1-D engine pipelines too (X.T@α / X@w gap path)."""
+    kw = dict(epochs=2, block_size=32)
+    r_drv = sharded_passcode_solve(tiny_dense, hinge, pipeline=False, **kw)
+    r_pipe = sharded_passcode_solve(tiny_dense, hinge, pipeline=True, **kw)
+    _assert_same(r_pipe, r_drv, gaps_tol=1e-3)
+
+
+def test_overlap_agrees_with_unfused(tiny_ell, hinge, mesh_2d):
+    """The double-buffered fused round — stale base⁰ + Gram carried in
+    flight, base repaired by ``dcd_feature_base_correction`` — is the
+    same update sequence as the eager per-update-psum engine."""
+    kw = dict(mesh=mesh_2d, epochs=2, block_size=32, delay_rounds=1,
+              record=False)
+    r_ref = sharded_passcode_solve(tiny_ell, hinge, pipeline=False, **kw)
+    r_ov = sharded_passcode_solve(tiny_ell, hinge, use_kernel=True,
+                                  overlap=True, **kw)
+    r_ov_drv = sharded_passcode_solve(tiny_ell, hinge, use_kernel=True,
+                                      overlap=True, pipeline=False, **kw)
+    _assert_same(r_ov, r_ref)
+    _assert_same(r_ov_drv, r_ref)
+
+
+def test_overlap_knob_validation(tiny_ell, hinge, mesh_2d):
+    """overlap=True outside its domain raises instead of silently
+    changing semantics; the "auto" default never does."""
+    with pytest.raises(ValueError):  # 1-D mesh: no model psum
+        sharded_passcode_solve(tiny_ell, hinge, epochs=1, overlap=True,
+                               delay_rounds=1, use_kernel=True)
+    with pytest.raises(ValueError):  # unfused: no split phases
+        sharded_passcode_solve(tiny_ell, hinge, mesh=mesh_2d, epochs=1,
+                               overlap=True, delay_rounds=1)
+    with pytest.raises(ValueError):  # eager rounds: no carried aggregate
+        sharded_passcode_solve(tiny_ell, hinge, mesh=mesh_2d, epochs=1,
+                               overlap=True, use_kernel=True)
+    r = sharded_passcode_solve(tiny_ell, hinge, mesh=mesh_2d, epochs=1,
+                               block_size=64, record=False)  # auto: fine
+    assert r.w_hat.shape[0] == tiny_ell.n_features
+
+
+def test_device_perm_bit_matches_host_draw():
+    """The in-body draw is bit-identical to the host driver's
+    ``_masked_block_perms`` — including devices whose shard is partly or
+    entirely padding — so pipeline=True/False run the same sequence."""
+    for p, n_loc, n_rows, n_blocks, B in ((4, 26, 102, 4, 8),
+                                          (1, 256, 256, 8, 32),
+                                          (4, 8, 9, 2, 4)):  # dev 2+: pad
+        key = jax.random.PRNGKey(7)
+        ref = _masked_block_perms(key, p, n_loc, n_rows, n_blocks, B)
+        got = jax.vmap(
+            lambda my: _device_block_perm(key, my, p, n_loc, n_rows,
+                                          n_blocks, B)
+        )(jnp.arange(p))
+        np.testing.assert_array_equal(np.asarray(got.reshape(p, -1)),
+                                      np.asarray(ref))
+
+
+def test_gap_buffer_honors_gap_every(tiny_ell, hinge):
+    """Gaps accumulate into the preallocated on-device buffer on the
+    driver's exact schedule: every ``gap_every``-th epoch + the final."""
+    assert _gap_slots(5, 2) == 3 and _gap_slots(4, 2) == 2
+    assert _gap_slots(3, 10) == 1 and _gap_slots(0, 1) == 0
+    kw = dict(epochs=5, block_size=32, gap_every=2)
+    r_drv = sharded_passcode_solve(tiny_ell, hinge, pipeline=False, **kw)
+    r_pipe = sharded_passcode_solve(tiny_ell, hinge, pipeline=True, **kw)
+    assert r_pipe.gaps.shape == (3,)  # epochs 2, 4 and the final 5
+    np.testing.assert_allclose(np.asarray(r_pipe.gaps),
+                               np.asarray(r_drv.gaps), rtol=1e-3)
+    r_off = sharded_passcode_solve(tiny_ell, hinge, epochs=2,
+                                   block_size=32, record=False)
+    assert r_off.gaps.shape == (0,)
+
+
+# ------------------------------------------- silent-data-loss fixes ----
+
+
+def test_dense_to_ell_raises_on_lossy_k_max():
+    """Regression: a too-small ``k_max`` used to silently truncate rows
+    (``cols[:k_max]``) — corrupted X, no error.  Now it raises like
+    ``ell_column_split`` always did."""
+    rng = np.random.default_rng(0)
+    dense = np.where(rng.random((8, 32)) > 0.6, 1.0, 0.0).astype(np.float32)
+    need = int((dense != 0).sum(axis=1).max())
+    with pytest.raises(ValueError):
+        dense_to_ell(dense, k_max=need - 1)
+    for k in (need, need + 3):  # exact and padded both round-trip
+        ell = dense_to_ell(dense, k_max=k)
+        assert ell.k_max == k
+        np.testing.assert_array_equal(np.asarray(ell.to_dense()), dense)
+
+
+def test_epoch_visits_every_row():
+    """Regression: with ``block_size ∤ n_loc`` the floor'd block count
+    skipped up to B−1 rows per device per epoch — an "epoch" was not a
+    full pass.  Orthogonal rows make coverage visible: wᵀx_i stays 0 for
+    unvisited rows, so after one epoch α_i > 0 iff row i was selected."""
+    assert _n_blocks(10, 4) == 3 and _n_blocks(8, 4) == 2
+    assert _n_blocks(3, 64) == 1
+    X = 0.5 * np.eye(10, dtype=np.float32)
+    for pipeline in (True, False):
+        r = sharded_passcode_solve(X, Hinge(C=1.0), epochs=1,
+                                   block_size=4, record=False,
+                                   pipeline=pipeline)
+        assert (np.asarray(r.alpha) > 0).all(), (pipeline,
+                                                 np.asarray(r.alpha))
+    # the ceil'd draw cycles valid rows instead of dropping them
+    perms = _masked_block_perms(jax.random.PRNGKey(0), 1, 10, 10,
+                                _n_blocks(10, 4), 4)
+    assert set(np.asarray(perms).ravel()) == set(range(10))
+
+
+# ------------------------------------------------- multi-device case ----
+
+
+_SUBPROCESS = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, {src!r})
+    import jax, numpy as np
+    from repro.core import sharded_passcode_solve
+    from repro.core.duals import Hinge
+    from repro.data.sparse import dense_to_ell
+    from repro.data.synthetic import make_dataset
+
+    assert len(jax.devices()) == 8
+    # 102 % 4 != 0 (row tail) and 26 % 8 != 0 (block tail): both masked
+    # paths are hot in the pipelined in-body draws
+    X = np.asarray(make_dataset("tiny").dense_train())[:102]
+    ell = dense_to_ell(X)
+    loss = Hinge(C=1.0)
+    mesh1 = jax.make_mesh((4,), ("data",), devices=jax.devices()[:4])
+    mesh2 = jax.make_mesh((4, 2), ("data", "model"))
+    A = lambda r: (np.asarray(r.alpha), np.asarray(r.w_hat),
+                   np.asarray(r.gaps))
+    kw = dict(epochs=3, block_size=8)
+
+    # 1D: pipeline == driver, tail rows trained
+    a0, w0, g0 = A(sharded_passcode_solve(ell, loss, mesh=mesh1,
+                                          pipeline=False, **kw))
+    a1, w1, g1 = A(sharded_passcode_solve(ell, loss, mesh=mesh1,
+                                          pipeline=True, **kw))
+    d1 = max(np.abs(a0 - a1).max(), np.abs(w0 - w1).max())
+    assert d1 < 1e-5, d1
+    dg = np.abs(g0 - g1).max()
+    assert dg < 1e-2 * (1 + np.abs(g0).max()), (g0, g1)
+    assert np.abs(a1[96:]).sum() > 0  # tail trained, not dropped
+
+    # 2D: pipeline == driver == 1D sequence
+    a2, w2, g2 = A(sharded_passcode_solve(ell, loss, mesh=mesh2,
+                                          pipeline=False, **kw))
+    a3, w3, g3 = A(sharded_passcode_solve(ell, loss, mesh=mesh2,
+                                          pipeline=True, **kw))
+    d2 = max(np.abs(a2 - a3).max(), np.abs(w2 - w3).max(),
+             np.abs(a1 - a3).max(), np.abs(w1 - w3).max())
+    assert d2 < 1e-5, d2
+
+    # fused overlap (delayed): same sequence as the unfused reference
+    kwd = dict(epochs=3, block_size=8, delay_rounds=1, record=False)
+    a4, w4, _ = A(sharded_passcode_solve(ell, loss, mesh=mesh2,
+                                         pipeline=False, **kwd))
+    a5, w5, _ = A(sharded_passcode_solve(ell, loss, mesh=mesh2,
+                                         use_kernel=True, overlap=True,
+                                         **kwd))
+    d3 = max(np.abs(a4 - a5).max(), np.abs(w4 - w5).max())
+    assert d3 < 1e-5, d3
+    print("SUBPROCESS_OK", d1, d2, d3)
+""")
+
+
+def test_multi_device_pipeline_subprocess():
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    code = _SUBPROCESS.format(src=src)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SUBPROCESS_OK" in out.stdout
