@@ -90,7 +90,7 @@ def _bench_1d(rows, *, smoke: bool):
     t_drv = timeit(run_driver)
     t_pipe = timeit(run_pipeline)
     a_d, w_d, _ = run_driver()
-    a_p, w_p, _, _ = run_pipeline()
+    a_p, w_p = run_pipeline()[:2]
     err = float(jnp.abs(w_d - w_p).max())
     overhead = (t_drv - t_pipe) / epochs * 1e6
     rows.append({

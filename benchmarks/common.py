@@ -26,6 +26,20 @@ def get_dataset(name: str):
     return _DATASETS[name]
 
 
+def env_info() -> dict:
+    """The execution environment every benchmark row is stamped with:
+    numbers measured in Pallas interpret mode on CPU are *semantics*
+    numbers, not perf claims, and the persisted artifacts must say so
+    (DESIGN.md honesty note)."""
+    backend = jax.default_backend()
+    return {
+        "backend": backend,
+        "mode": "compiled" if backend == "tpu" else "interpret",
+        "device_count": jax.device_count(),
+        "jax_version": jax.__version__,
+    }
+
+
 def timeit(fn, *args, warmup: int = 1, iters: int = 3):
     """Median wall time in seconds; blocks on jax outputs."""
     for _ in range(warmup):

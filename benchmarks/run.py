@@ -9,7 +9,8 @@ the sparse ELL section → BENCH_sparse.json, dense-vs-ELL epoch + VMEM
 frontier; the 2D feature-sharded section → BENCH_feature.json,
 1D-vs-2D d-sweep + three-policy VMEM frontier; the multi-epoch pipeline
 section → BENCH_pipeline.json, driver-vs-pipeline dispatch overhead +
-overlap round).
+overlap round; the adaptive self-tuning section → BENCH_adaptive.json,
+wall-clock-to-ε of shrinking/adaptive vs the static schedules).
 """
 
 from __future__ import annotations
@@ -26,6 +27,15 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _persist(tag: str, rows) -> None:
+    from benchmarks.common import env_info
+
+    env = env_info()
+    # every row carries the backend / interpret-vs-compiled stamp so a
+    # CPU-interpret semantics number can never be misread as a TPU perf
+    # claim once the JSON is detached from the machine that wrote it
+    for r in rows:
+        r.setdefault("backend", env["backend"])
+        r.setdefault("mode", env["mode"])
     out_dir = os.path.join(_ROOT, "out")
     os.makedirs(out_dir, exist_ok=True)
     # out/ is the working artifact; the repo-root mirror is the
@@ -33,7 +43,7 @@ def _persist(tag: str, rows) -> None:
     for path in (os.path.join(out_dir, f"BENCH_{tag}.json"),
                  os.path.join(_ROOT, f"BENCH_{tag}.json")):
         with open(path, "w") as f:
-            json.dump({"rows": rows}, f, indent=2)
+            json.dump({"env": env, "rows": rows}, f, indent=2)
         print(f"# wrote {os.path.relpath(path)} ({len(rows)} rows)",
               file=sys.stderr)
 
@@ -41,6 +51,7 @@ def _persist(tag: str, rows) -> None:
 def main() -> None:
     from benchmarks import (
         bench_accuracy,
+        bench_adaptive,
         bench_convergence,
         bench_feature,
         bench_kernel,
@@ -60,6 +71,7 @@ def main() -> None:
         ("Sparse ELL path", bench_sparse, "sparse"),
         ("2D feature-sharded solver", bench_feature, "feature"),
         ("Multi-epoch pipeline", bench_pipeline, "pipeline"),
+        ("Adaptive self-tuning solver", bench_adaptive, "adaptive"),
         ("Roofline (dry-run artifacts)", bench_roofline, None),
     ]
     print("name,us_per_call,derived")

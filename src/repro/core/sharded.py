@@ -97,14 +97,22 @@ from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro.core.objective import duality_gap
-from repro.data.sparse import EllMatrix, dense_to_ell, ell_column_split
+from repro.core.shrinking import active_mask_from_w
+from repro.data.sparse import (
+    EllMatrix,
+    active_row_remap,
+    dense_to_ell,
+    ell_column_split,
+)
 from repro.dist.compat import shard_map
 from repro.dist.mesh import (
+    adaptive_delay_policy,
     dcd_ell_kernel_fits,
     dcd_feature_kernel_fits,
     dcd_kernel_fits,
     lane_pad,
     pipeline_overlap,
+    resolve_self_tuning,
     solver_mesh,
     solver_mesh_2d,
 )
@@ -124,16 +132,28 @@ class ShardedResult(NamedTuple):
     w_hat: jnp.ndarray
     gaps: jnp.ndarray
     rounds: int
+    # live per-record metrics of the pipelined solve (None on the
+    # pipeline=False driver path), aligned with ``gaps``:
+    eps: jnp.ndarray | None = None  # ‖w(α) − ŵ‖, the perturbed-
+    #   regularizer distance of core/backward_error.py (paper §4.2)
+    active: jnp.ndarray | None = None  # active-set fraction (shrinking)
+    delay: jnp.ndarray | None = None  # effective delay flag (adaptive)
 
 
-def _local_block_update(X_loc, sq_loc, alpha_loc, w, idx_block, loss):
-    """B sequential DCD updates on this device's shard, locally-fresh w."""
+def _local_block_update(X_loc, sq_loc, alpha_loc, w, idx_block, loss,
+                        act=None):
+    """B sequential DCD updates on this device's shard, locally-fresh w.
+    ``act`` (optional (n_loc,) bool) freezes shrunk coordinates to
+    zero-delta updates — the same gate as the serial reference's masked
+    epoch."""
 
     def body(t, carry):
         alpha_loc, w_loc = carry
         i = idx_block[t]
         x = X_loc[i]
         delta = loss.delta(alpha_loc[i], jnp.dot(w_loc, x), sq_loc[i])
+        if act is not None:
+            delta = jnp.where(act[i], delta, 0.0)
         return alpha_loc.at[i].add(delta), w_loc + delta * x
 
     alpha_loc, w_new = jax.lax.fori_loop(
@@ -143,11 +163,12 @@ def _local_block_update(X_loc, sq_loc, alpha_loc, w, idx_block, loss):
 
 
 def _local_block_update_ell(cols_loc, vals_loc, sq_loc, alpha_loc, w_pad,
-                            idx_block, loss):
+                            idx_block, loss, act=None):
     """B sequential DCD updates on this device's ELL shard: O(k_max)
     gather-dot and dummy-slot scatter per update.  ``w_pad`` carries the
     padded primal (slot d — and any lane padding above it — always 0,
-    since padding ids scatter δ·0 there)."""
+    since padding ids scatter δ·0 there).  ``act`` freezes shrunk
+    coordinates to zero-delta updates."""
 
     def body(t, carry):
         alpha_loc, w_loc = carry
@@ -156,6 +177,8 @@ def _local_block_update_ell(cols_loc, vals_loc, sq_loc, alpha_loc, w_pad,
         v = vals_loc[i]
         wx = jnp.sum(w_loc[c] * v)
         delta = loss.delta(alpha_loc[i], wx, sq_loc[i])
+        if act is not None:
+            delta = jnp.where(act[i], delta, 0.0)
         return alpha_loc.at[i].add(delta), w_loc.at[c].add(delta * v)
 
     alpha_loc, w_new = jax.lax.fori_loop(
@@ -165,7 +188,7 @@ def _local_block_update_ell(cols_loc, vals_loc, sq_loc, alpha_loc, w_pad,
 
 
 def _local_block_update_feature(cols_loc, vals_loc, sq_loc, alpha_loc,
-                                w_loc, idx_block, loss):
+                                w_loc, idx_block, loss, act=None):
     """B sequential DCD updates on this device's (row-block × feature-
     shard) slice.  ``cols_loc``/``vals_loc`` hold *local* column ids
     into the (d_loc+1)-slot primal shard ``w_loc`` (per-shard dummy slot
@@ -173,7 +196,10 @@ def _local_block_update_feature(cols_loc, vals_loc, sq_loc, alpha_loc,
     partial gather-dot — the mesh analogue of reading the paper's shared
     w — and the rank-1 update scatters only this shard.  ``sq_loc``
     carries the FULL row norms (summed over shards), so δ is identical
-    on every feature shard and α stays replicated along ``model``."""
+    on every feature shard and α stays replicated along ``model``.
+    ``act`` freezes shrunk coordinates to zero-delta updates (the mask
+    is replicated along ``model`` like α, so every shard gates
+    identically)."""
 
     def body(t, carry):
         alpha_loc, w_cur = carry
@@ -182,6 +208,8 @@ def _local_block_update_feature(cols_loc, vals_loc, sq_loc, alpha_loc,
         v = vals_loc[i]
         wx = jax.lax.psum(jnp.sum(w_cur[c] * v), "model")
         delta = loss.delta(alpha_loc[i], wx, sq_loc[i])
+        if act is not None:
+            delta = jnp.where(act[i], delta, 0.0)
         return alpha_loc.at[i].add(delta), w_cur.at[c].add(delta * v)
 
     alpha_loc, w_new = jax.lax.fori_loop(
@@ -275,6 +303,53 @@ def _masked_block_perms(key, p: int, n_loc: int, n_rows: int,
     )(jnp.arange(p))
 
 
+def _device_block_perm_masked(sub, my, p: int, n_loc: int, n_blocks: int,
+                              block_size: int, act, rp):
+    """``_device_block_perm`` drawing over an arbitrary *active* row set
+    instead of the valid prefix — the repacked epoch's draw (DESIGN.md
+    §12).
+
+    ``act`` is this device's (n_loc,) bool active mask (already ANDed
+    with row validity).  ``active_row_remap`` compacts the active rows
+    to the front (stable, fixed shape); the draw then permutes
+    ``[0, count)`` through the same key chain, maps back through the
+    remap ids, and lays the result over the n_blocks·B slots.  Rounds
+    past ``ceil(count/B)`` blocks are skipped by the dyn round scan, so
+    a mostly-frozen shard's epoch gets *shorter*, not just cheaper per
+    update.
+
+    Tail slots (≥ count) depend on the runtime repack flag ``rp``:
+
+      * ``rp`` False — cycle the drawn sequence, exactly like
+        ``_device_block_perm`` cycles the valid prefix.  With ``act``
+        equal to the valid-prefix mask the whole draw then reduces
+        *bit-exactly* to the plain one (the remap ids are the identity
+        because validity is a prefix), which is why the shrinking
+        pipeline can route every epoch through this draw and still
+        bit-match the plain solver whenever repack is not in effect.
+      * ``rp`` True — point at an *inactive* row instead (act-gated to
+        an exact zero-delta no-op), so each active row is updated
+        exactly once per repacked epoch.  Cycling here would re-update
+        the support-vector rows — the mutually correlated ones — a
+        second time per round across all p devices simultaneously, and
+        that synchronized overshoot measurably diverges at p ≥ 4.  A
+        fully-active shard (no inactive row to point at) falls back to
+        cycling, which is the plain schedule again."""
+    m = n_blocks * block_size
+    keys = jax.random.split(sub, p)
+    ids, cnt = active_row_remap(act)
+    v = jnp.maximum(cnt, 1)  # all-frozen shard: one (gated) no-op row
+    perm = jax.random.permutation(keys[my], n_loc)
+    order = jnp.argsort(perm >= v)  # stable: sub-perm of [0, v) first
+    pos = jnp.arange(m)
+    cyc = perm[order][pos % v]  # slot j < v: j-th drawn row, distinct
+    n_inact = n_loc - cnt  # remap ids [cnt:] — the act-gated no-ops
+    noop = cnt + (pos % jnp.maximum(n_inact, 1))
+    fill = jnp.where(rp & (n_inact > 0), noop, cyc)
+    sel = ids[jnp.where(pos < v, cyc, fill)]
+    return sel.reshape(n_blocks, block_size)
+
+
 def _scan_rounds(block_update, alpha_loc, w_loc, dw_prev, blocks_loc,
                  delay_rounds: int):
     """The round structure every engine shares, run inside a shard_map
@@ -305,6 +380,60 @@ def _scan_rounds(block_update, alpha_loc, w_loc, dw_prev, blocks_loc,
     return alpha_loc, w_loc, dw_prev
 
 
+def _scan_rounds_dyn(block_update, alpha_loc, w_loc, dw_prev, dw_own,
+                     blocks_loc, act, n_run, delay_flag):
+    """The self-tuning round scan (DESIGN.md §12): ``_scan_rounds`` with
+    (a) the active mask ``act`` gating every δ, (b) rounds past
+    ``n_run`` — the repacked block count, uniform across devices via
+    pmax — ``cond``-skipped, collectives included, and (c) the delayed
+    mode promoted to a *runtime* flag with real stale reads, so the
+    gap-trend controller can trade staleness for convergence mid-solve.
+
+    Unlike the static delayed branch of ``_scan_rounds`` (whose carry
+    discipline is exact bookkeeping that lets the psum overlap the next
+    round on TPU), the dyn delayed mode implements the §2 τ table
+    literally: while ``delay_flag`` is set, a round's psum stays in
+    flight for one round and the *next* round's update reads a w that
+    has this device's own last-round updates (``dw_own`` — shared-memory
+    visibility, exactly PASSCoDe's model) but not its peers', so
+    τ ≈ 2·B·(p−1).  At p = 1 ``dw_own == dw_prev`` and the delayed
+    schedule is bit-identical to the synchronous one — the serial
+    identity every equivalence test leans on.  A delayed→synchronous
+    switch folds the in-flight aggregate on its first round; the caller
+    always flushes ``w + dw_prev`` at the end (dw_prev is 0 when the
+    solve ended synchronous)."""
+    delay_on = jnp.asarray(delay_flag, jnp.int32) > 0
+
+    def one_round(carry, xs):
+        idx_block, r = xs
+
+        def run(c):
+            alpha_loc, w_loc, dw_prev, dw_own = c
+            # delayed: peers' last-round aggregate is still in flight —
+            # read own last-round updates only (stale by one psum)
+            w_eff = w_loc + jnp.where(delay_on, dw_own, dw_prev)
+            alpha_n, dw_local = block_update(alpha_loc, w_eff, idx_block,
+                                             act)
+            dw_all = jax.lax.psum(dw_local, "data")
+            # last round's aggregate lands now; this round's is applied
+            # eagerly (sync) or kept in flight (delayed)
+            w_new = w_loc + dw_prev + jnp.where(
+                delay_on, jnp.zeros_like(dw_all), dw_all)
+            dw_new = jnp.where(delay_on, dw_all, jnp.zeros_like(dw_all))
+            dwo_new = jnp.where(delay_on, dw_local,
+                                jnp.zeros_like(dw_local))
+            return alpha_n, w_new, dw_new, dwo_new
+
+        carry = jax.lax.cond(r < n_run, run, lambda c: c, carry)
+        return carry, ()
+
+    (alpha_loc, w_loc, dw_prev, dw_own), _ = jax.lax.scan(
+        one_round, (alpha_loc, w_loc, dw_prev, dw_own),
+        (blocks_loc, jnp.arange(blocks_loc.shape[0])),
+    )
+    return alpha_loc, w_loc, dw_prev, dw_own
+
+
 def _overlap_round_fns(cols_loc, vals_loc, sq_loc, loss, interpret):
     """The three split phases of the fused 2-D block round, bound to this
     device's resident slice (``repro.kernels.ops`` entry points)."""
@@ -316,17 +445,17 @@ def _overlap_round_fns(cols_loc, vals_loc, sq_loc, loss, interpret):
     def corr_fn(dvec, idx):
         return dcd_feature_base_correction(cols_loc, vals_loc, dvec, idx)
 
-    def update_fn(alpha_loc, w_ref, idx, base, gram):
+    def update_fn(alpha_loc, w_ref, idx, base, gram, act=None):
         return dcd_feature_update_pallas(cols_loc, vals_loc, sq_loc,
                                          alpha_loc, w_ref, idx, base,
                                          gram, loss=loss,
-                                         interpret=interpret)
+                                         interpret=interpret, active=act)
 
     return gram_fn, corr_fn, update_fn
 
 
 def _scan_rounds_overlap(gram_fn, corr_fn, update_fn, alpha_loc, w_loc,
-                         dw_prev, blocks_loc):
+                         dw_prev, blocks_loc, inflight, next0, act=None):
     """``_scan_rounds`` for the fused 2-D engine with the block round
     double-buffered (DESIGN.md §11): the ``model``-axis (base, Gram)
     psum of block t is *carried in flight across the round boundary* and
@@ -351,13 +480,22 @@ def _scan_rounds_overlap(gram_fn, corr_fn, update_fn, alpha_loc, w_loc,
     eager engines in exact arithmetic — tests pin agreement at atol
     1e-5.
 
-    The last round computes a gram for a wrapped dummy "next block"
-    whose result is discarded with the final carry — one wasted gram
-    kernel per epoch, the price of a uniform scan body.
+    The in-flight aggregate is now explicit state: the caller passes
+    the psummed (base⁰, Gram) of ``blocks_loc[0]`` (referenced to the
+    entering ``w_loc``) and the first block ``next0`` of the *following*
+    round sequence, and gets the aggregate issued for ``next0`` back in
+    the return.  The pipelined epoch scan threads it across epoch
+    boundaries — each epoch peeks the next epoch's first block through
+    the deterministic PRNG chain — so the prologue gram that used to be
+    recomputed (and one gram wasted on a wrapped dummy block) every
+    epoch is paid once per *solve* instead (the carry out of the final
+    epoch is the only discard).  The per-epoch driver path passes
+    ``next0 = blocks_loc[0]``, reproducing the old wrapped schedule
+    exactly.  ``act`` gates shrunk coordinates in the update kernel
+    (the gram needs no mask — a frozen row's δ = 0 contributes nothing
+    through the recursion or the scatter).
     """
-    # prologue: block 0's in-flight aggregate, referenced to W_0 = w_loc
-    inflight = gram_fn(w_loc, blocks_loc[0])
-    nxt = jnp.roll(blocks_loc, -1, axis=0)
+    nxt = jnp.concatenate([blocks_loc[1:], next0[None]], axis=0)
 
     def one_round(carry, blk):
         idx, idx_next = blk
@@ -369,15 +507,16 @@ def _scan_rounds_overlap(gram_fn, corr_fn, update_fn, alpha_loc, w_loc,
         inflight_n = gram_fn(w_next, idx_next)
         # repair block t's stale base, consuming the in-flight aggregate
         base = base0 + corr_fn(dw_prev, idx)
-        alpha_loc, w_upd = update_fn(alpha_loc, w_next, idx, base, gram)
+        alpha_loc, w_upd = update_fn(alpha_loc, w_next, idx, base, gram,
+                                     act)
         dw_all = jax.lax.psum(w_upd - w_next, "data")
         return (alpha_loc, w_next, dw_all, inflight_n), ()
 
-    (alpha_loc, w_loc, dw_prev, _), _ = jax.lax.scan(
+    (alpha_loc, w_loc, dw_prev, inflight), _ = jax.lax.scan(
         one_round, (alpha_loc, w_loc, dw_prev, inflight),
         (blocks_loc, nxt),
     )
-    return alpha_loc, w_loc, dw_prev
+    return alpha_loc, w_loc, dw_prev, inflight
 
 
 # ------------------------------------------------ on-device gap path ----
@@ -397,6 +536,11 @@ def _make_gap_1d(loss, X_loc, ell: bool):
     padded shards — padding rows are masked out of both sums and
     contribute zero columns to w(α), so the value matches the host
     driver's ``duality_gap(alpha[:n], X, loss)`` up to reduction order.
+    Alongside the gap it returns the live backward-error metric
+    ‖w(α) − ŵ‖ against the maintained primal view ``w_view`` — the
+    perturbed-regularizer distance of ``core/backward_error.py`` (paper
+    §4.2, ε = w̄ − ŵ): w(α) is already formed for the gap, so the
+    metric is one extra d-length difference, no extra collectives.
     The whole computation — psums included — is ``cond``-gated on
     ``rec``: the predicate is a function of the scanned epoch index
     only, so it is uniform across devices and skipped epochs are
@@ -417,18 +561,24 @@ def _make_gap_1d(loss, X_loc, ell: bool):
         def mv(wa):
             return X_loc @ wa
 
-    def gap(rec, alpha_loc, mask, d_run):
+    def gap(rec, alpha_loc, mask, d_run, w_view):
         am = jnp.where(mask, alpha_loc, 0.0)
 
-        def compute(am):
+        def compute(args):
+            am, w_view = args
             wa = jax.lax.psum(rmv(am, d_run), "data")  # w(α), replicated
             z = mv(wa)
             s = jnp.sum(jnp.where(
                 mask, loss.primal_loss(z) + loss.conj(am), 0.0))
-            return jnp.dot(wa, wa) + jax.lax.psum(s, "data")
+            g = jnp.dot(wa, wa) + jax.lax.psum(s, "data")
+            e = wa - w_view  # dummy/pad slots are 0 in both
+            return g, jnp.sqrt(jnp.dot(e, e))
 
-        return jax.lax.cond(rec, compute,
-                            lambda am: jnp.zeros((), jnp.float32), am)
+        return jax.lax.cond(
+            rec, compute,
+            lambda a: (jnp.zeros((), jnp.float32),
+                       jnp.zeros((), jnp.float32)),
+            (am, w_view))
 
     return gap
 
@@ -438,28 +588,71 @@ def _make_gap_2d(loss, cols_loc, vals_loc, d1_loc: int):
     ``model`` (each device scatters its local slice and psums over
     ``data``), the per-row dot psums over ``model``, ‖w(α)‖² over
     ``model`` — no replicated primal is ever formed, matching the
-    solve's own memory model."""
+    solve's own memory model.  The backward-error metric ‖w(α) − ŵ‖
+    likewise reduces shard-local squared distances over ``model``."""
 
-    def gap(rec, alpha_loc, mask):
+    def gap(rec, alpha_loc, mask, w_view):
         am = jnp.where(mask, alpha_loc, 0.0)
 
         def rmv(a):
             return jnp.zeros((d1_loc,), jnp.float32).at[cols_loc].add(
                 a[:, None] * vals_loc)
 
-        def compute(am):
+        def compute(args):
+            am, w_view = args
             wa = jax.lax.psum(rmv(am), "data")  # this shard's w(α) slice
             z = jax.lax.psum(jnp.sum(wa[cols_loc] * vals_loc, axis=1),
                              "model")
             s = jnp.sum(jnp.where(
                 mask, loss.primal_loss(z) + loss.conj(am), 0.0))
-            return (jax.lax.psum(jnp.dot(wa, wa), "model")
-                    + jax.lax.psum(s, "data"))
+            g = (jax.lax.psum(jnp.dot(wa, wa), "model")
+                 + jax.lax.psum(s, "data"))
+            e = wa - w_view  # dummy slots are 0 in both
+            return g, jnp.sqrt(jax.lax.psum(jnp.dot(e, e), "model"))
 
-        return jax.lax.cond(rec, compute,
-                            lambda am: jnp.zeros((), jnp.float32), am)
+        return jax.lax.cond(
+            rec, compute,
+            lambda a: (jnp.zeros((), jnp.float32),
+                       jnp.zeros((), jnp.float32)),
+            (am, w_view))
 
     return gap
+
+
+def _make_shrink_1d(loss, X_loc, ell: bool, shrink_tol: float, valid):
+    """Per-device active-mask recompute for the pipelined 1-D solve:
+    fresh projected gradients from the carried (α, effective w) —
+    wᵀx_i via the shard's own matvec — through the serial reference's
+    ``active_mask`` rule, ANDed with row validity so padding rows never
+    count as active."""
+    if ell:
+        cols_loc, vals_loc = X_loc
+
+        def mv(wv):
+            return jnp.sum(wv[cols_loc] * vals_loc, axis=1)
+    else:
+        def mv(wv):
+            return X_loc @ wv
+
+    def mask_fn(alpha_loc, w_view):
+        return active_mask_from_w(loss, alpha_loc, mv(w_view),
+                                  shrink_tol) & valid
+
+    return mask_fn
+
+
+def _make_shrink_2d(loss, cols_loc, vals_loc, shrink_tol: float, valid):
+    """``_make_shrink_1d`` for the 2-D mesh: the full wᵀx_i psums the
+    shard-local partial dots over ``model`` (the same collective shape
+    as the solve's own per-update read), so the mask — like α — comes
+    out replicated along ``model``."""
+
+    def mask_fn(alpha_loc, w_view):
+        wx = jax.lax.psum(
+            jnp.sum(w_view[cols_loc] * vals_loc, axis=1), "model")
+        return active_mask_from_w(loss, alpha_loc, wx, shrink_tol) & valid
+
+    return mask_fn
 
 
 # ------------------------------------------------------ epoch builders ----
@@ -467,27 +660,30 @@ def _make_gap_2d(loss, cols_loc, vals_loc, d1_loc: int):
 
 def _block_update_1d(loss, use_kernel: bool, interpret: bool, ell: bool):
     """The per-device block engine for a 1-D mesh, shared by the
-    per-epoch and pipelined builders."""
+    per-epoch and pipelined builders.  ``act`` (optional (n_loc,) mask)
+    freezes shrunk coordinates — forwarded to the fused kernels as the
+    f32 active operand, to the jnp engines as the bool gate."""
 
-    def block_update(X_loc, sq_loc, alpha_loc, w_eff, idx_block):
+    def block_update(X_loc, sq_loc, alpha_loc, w_eff, idx_block,
+                     act=None):
         if ell:
             cols_loc, vals_loc = X_loc
             if use_kernel:
                 return dcd_ell_block_update_pallas(
                     cols_loc, vals_loc, sq_loc, alpha_loc, w_eff,
-                    idx_block, loss=loss, interpret=interpret,
+                    idx_block, loss=loss, interpret=interpret, active=act,
                 )
             return _local_block_update_ell(
                 cols_loc, vals_loc, sq_loc, alpha_loc, w_eff, idx_block,
-                loss,
+                loss, act=act,
             )
         if use_kernel:
             return dcd_block_update_pallas(
                 X_loc, sq_loc, alpha_loc, w_eff, idx_block, loss=loss,
-                interpret=interpret,
+                interpret=interpret, active=act,
             )
         return _local_block_update(
-            X_loc, sq_loc, alpha_loc, w_eff, idx_block, loss
+            X_loc, sq_loc, alpha_loc, w_eff, idx_block, loss, act=act
         )
 
     return block_update
@@ -495,17 +691,19 @@ def _block_update_1d(loss, use_kernel: bool, interpret: bool, ell: bool):
 
 def _block_update_2d(loss, use_kernel: bool, interpret: bool):
     """The per-device block engine for a 2-D mesh (eager composition;
-    the overlapped round drives the split phases directly)."""
+    the overlapped round drives the split phases directly).  ``act``
+    freezes shrunk coordinates like the 1-D engine."""
 
     def block_update(cols_loc, vals_loc, sq_loc, alpha_loc, w_eff,
-                     idx_block):
+                     idx_block, act=None):
         if use_kernel:
             return dcd_feature_block_update_pallas(
                 cols_loc, vals_loc, sq_loc, alpha_loc, w_eff, idx_block,
-                loss=loss, interpret=interpret,
+                loss=loss, interpret=interpret, active=act,
             )
         return _local_block_update_feature(
-            cols_loc, vals_loc, sq_loc, alpha_loc, w_eff, idx_block, loss
+            cols_loc, vals_loc, sq_loc, alpha_loc, w_eff, idx_block,
+            loss, act=act,
         )
 
     return block_update
@@ -585,10 +783,15 @@ def make_sharded_epoch_2d(mesh: Mesh, loss, *, delay_rounds: int = 0,
             if overlap:
                 gram_fn, corr_fn, update_fn = _overlap_round_fns(
                     cols_loc, vals_loc, sq_loc, loss, interpret)
-                return _scan_rounds_overlap(
+                # per-epoch driver: prologue gram each dispatch, wrapped
+                # next0 — the pre-carry schedule (the pipelined path
+                # threads the aggregate across epochs instead)
+                inflight = gram_fn(w_loc, blocks_loc[0])
+                alpha_loc, w_loc, dw_prev, _ = _scan_rounds_overlap(
                     gram_fn, corr_fn, update_fn, alpha_loc, w_loc,
-                    dw_prev, blocks_loc,
+                    dw_prev, blocks_loc, inflight, blocks_loc[0],
                 )
+                return alpha_loc, w_loc, dw_prev
             return _scan_rounds(
                 lambda a, w_eff, idx: block_update(cols_loc, vals_loc,
                                                    sq_loc, a, w_eff, idx),
@@ -612,39 +815,210 @@ def make_sharded_epoch_2d(mesh: Mesh, loss, *, delay_rounds: int = 0,
 
 
 def _epoch_scan(rounds, gap, key, alpha_loc, w_loc, dw_prev, draw_perm, *,
-                epochs: int, n_gaps: int, gap_every: int, record: bool):
+                epochs: int, n_gaps: int, gap_every: int, record: bool,
+                n_blocks: int, valid=None, shrink=None,
+                adaptive: bool = False, adaptive_ratio: float = 0.95,
+                delay0: int = 0, inflight0=None):
     """The epoch loop every pipelined device body runs: split the PRNG
     chain exactly like the host driver, draw this device's masked block
     permutation, run the round scan, and ``cond``-record the duality
-    gap into the preallocated buffer.  Shared by the 1-D and 2-D
-    builders so the PRNG chain and the gap schedule cannot diverge
-    between them."""
+    gap (plus the live backward-error, active-fraction and delay-flag
+    metrics) into preallocated buffers.  Shared by the 1-D and 2-D
+    builders so the PRNG chain and the metric schedule cannot diverge
+    between them.
+
+    The self-tuning extensions (DESIGN.md §12) are all optional and
+    compile away when unused:
+
+      ``shrink = (mask_fn, every, repack_threshold|None, n_rows, B)``
+        carries an active mask in the scan state, recomputed on-device
+        every ``every`` epochs from the carried (α, effective w) and
+        passed into the round scan so frozen coordinates take exact
+        zero-delta updates.  The final epoch always runs unshrunk over
+        the full valid set (LIBLINEAR's final full pass), so the solve
+        never returns with a wrongly-frozen coordinate.  With a repack
+        threshold, epochs whose *global* active fraction drops below it
+        redraw their blocks over the compacted active set
+        (``_device_block_perm_masked``) and ``cond``-skip the rounds
+        past ceil(max-device-count/B) — shorter epochs, not just
+        cheaper updates.  The fraction is psummed and the run count
+        pmaxed, so both are uniform across devices and the skipped
+        rounds' collectives stay collective-free.
+
+      ``adaptive`` carries the effective delay flag and the last
+        recorded gap: at every record the gap-trend controller
+        (``repro.dist.mesh.adaptive_delay_policy``) decides whether the
+        *next* epochs may stay delayed (gap still improving) or must go
+        synchronous (stalling) — staleness is traded for convergence
+        mid-solve, inside the scan.  The back-off is a one-way latch
+        (seed with ``delay_rounds=1`` to start async): once dropped,
+        asynchrony stays dropped.  ``adaptive_ratio`` is the
+        controller's improvement threshold: the default 0.95 only backs
+        off on a hard stall, while stricter values (e.g. 0.5 — "keep
+        async only while the gap halves per record") anneal the solve
+        async→synchronous as it nears the optimum, where stale reads
+        cost proportionally the most.  With shrinking on, the same stall
+        signal trips a *sticky* repack guard: repacked epochs
+        concentrate the active set into fewer psum intervals (effective
+        τ × 1/frac), so once the gap stalls the solve falls back to
+        full-length epochs for good.
+
+      ``inflight0`` (the overlapped 2-D round) threads the in-flight
+        (base, Gram) aggregate across epoch boundaries: each epoch
+        peeks the *next* epoch's first block through the deterministic
+        PRNG chain (``_, sub_next = split(key)`` is exactly what the
+        next iteration's draw will consume) and hands the round scan
+        its follow-on target, so the per-epoch prologue gram of the old
+        schedule is paid once per solve.
+
+    Returns ``(alpha, w, dw, gaps, eps, active, delay)`` — the last
+    three aligned with ``gaps`` (zeros where a mode is off)."""
+    shrink_on = shrink is not None
+    if shrink_on:
+        mask_fn, shrink_every, repack_thresh, n_rows, blk = shrink
+        shrink_every = max(int(shrink_every), 1)
+    overlap = inflight0 is not None
+    dyn = (shrink_on or adaptive) and not overlap
 
     def epoch_body(carry, e):
-        alpha_loc, w_loc, dw_prev, key, gaps, slot = carry
-        key, sub = jax.random.split(key)
-        blocks_loc = draw_perm(sub)
-        alpha_loc, w_loc, dw_prev = rounds(alpha_loc, w_loc, dw_prev,
-                                           blocks_loc)
-        if record:
-            rec = ((e + 1) % gap_every == 0) | (e == epochs - 1)
-            g = gap(rec, alpha_loc)
-            gaps = jnp.where(rec, gaps.at[slot].set(g), gaps)
-            slot = slot + rec.astype(jnp.int32)
-        return (alpha_loc, w_loc, dw_prev, key, gaps, slot), ()
+        c = dict(carry)
+        key, sub = jax.random.split(c["key"])
+        c["key"] = key
+        final = e == epochs - 1
+        if shrink_on:
+            w_view = c["w"] + c["dw"]
 
-    carry = (alpha_loc, w_loc, dw_prev, key,
-             jnp.zeros((n_gaps,), jnp.float32), jnp.int32(0))
-    (alpha_loc, w_loc, dw_prev, _, gaps, _), _ = jax.lax.scan(
-        epoch_body, carry, jnp.arange(epochs))
-    return alpha_loc, w_loc, dw_prev, gaps
+            def recompute(st):
+                act, frac, nrun, rp = st
+                m = mask_fn(c["alpha"], w_view)
+                cnt = jnp.sum(m.astype(jnp.int32))
+                frac = (jax.lax.psum(cnt, "data").astype(jnp.float32)
+                        / n_rows)
+                if repack_thresh is not None:
+                    rp = frac < repack_thresh
+                    # ceil of the largest per-device active count —
+                    # pmaxed so every device runs the same round count
+                    nrun = jnp.clip(
+                        -(-jax.lax.pmax(cnt, "data") // blk),
+                        1, n_blocks).astype(jnp.int32)
+                return m, frac, nrun, rp
+
+            c["act"], c["frac"], c["nrun"], c["rp"] = jax.lax.cond(
+                e % shrink_every == 0, recompute, lambda st: st,
+                (c["act"], c["frac"], c["nrun"], c["rp"]))
+            # final epoch: full unshrunk pass (recovers any wrongly-
+            # frozen coordinate, LIBLINEAR semantics)
+            act_run = jnp.where(final, valid, c["act"])
+            use_rp = c["rp"] & jnp.logical_not(final)
+            if adaptive:
+                # the controller's stall signal also guards repack:
+                # concentrating the active set into fewer rounds raises
+                # the effective staleness τ by ~1/frac, and on problems
+                # near the Liu–Wright boundary that alone can diverge —
+                # once the gap stalls, repacking stays off (sticky; the
+                # cheap rounds are not worth a stalled solve)
+                use_rp = use_rp & (c["rpok"] > 0)
+            act_draw = jnp.where(use_rp, c["act"], valid)
+            n_run_e = jnp.where(use_rp, c["nrun"], jnp.int32(n_blocks))
+            blocks_loc = draw_perm(sub, act_draw, use_rp)
+        else:
+            act_run = None
+            n_run_e = jnp.int32(n_blocks)
+            blocks_loc = draw_perm(sub)
+        delay_flag = c["delay"] if adaptive else jnp.int32(delay0)
+        if overlap:
+            # peek the next epoch's first block: the next iteration
+            # splits the carried key exactly like this
+            _, sub_next = jax.random.split(key)
+            next0 = (draw_perm(sub_next, valid, False) if shrink_on
+                     else draw_perm(sub_next))[0]
+            (c["alpha"], c["w"], c["dw"], c["inflight"]) = rounds(
+                c["alpha"], c["w"], c["dw"], blocks_loc, c["inflight"],
+                next0, act_run)
+        elif dyn:
+            c["alpha"], c["w"], c["dw"], c["dwo"] = rounds(
+                c["alpha"], c["w"], c["dw"], c["dwo"], blocks_loc,
+                act_run, n_run_e, delay_flag)
+        else:
+            c["alpha"], c["w"], c["dw"] = rounds(
+                c["alpha"], c["w"], c["dw"], blocks_loc)
+        if record:
+            rec = ((e + 1) % gap_every == 0) | final
+            g, eps = gap(rec, c["alpha"], c["w"] + c["dw"])
+            slot = c["slot"]
+            c["gaps"] = jnp.where(rec, c["gaps"].at[slot].set(g),
+                                  c["gaps"])
+            c["epsb"] = jnp.where(rec, c["epsb"].at[slot].set(eps),
+                                  c["epsb"])
+            fr = c["frac"] if shrink_on else jnp.float32(1.0)
+            c["actb"] = jnp.where(rec, c["actb"].at[slot].set(fr),
+                                  c["actb"])
+            c["delayb"] = jnp.where(
+                rec,
+                c["delayb"].at[slot].set(delay_flag.astype(jnp.float32)),
+                c["delayb"])
+            if adaptive:
+                # gap-trend controller: improving ⇒ stay async,
+                # stalling ⇒ go synchronous (both vs the last record)
+                new_flag = adaptive_delay_policy(
+                    c["gapprev"], g, improve_ratio=adaptive_ratio)
+                # one-way latch: the controller only ever *backs off*
+                # asynchrony (seed with delay_rounds=1 to start async).
+                # Re-raising oscillates — a synchronous epoch converges
+                # fast, which reads as "async affordable", whose stale
+                # epoch converges slowly, which reads as "back off" —
+                # and each flip re-pays the staleness tax exactly where
+                # it is most expensive (near the optimum)
+                c["delay"] = jnp.where(
+                    rec, jnp.minimum(delay_flag, new_flag), delay_flag)
+                if shrink_on:
+                    # the repack guard keys on a *hard* stall (the 0.95
+                    # default), not the annealing threshold: a gap that
+                    # merely stops halving is normal near the optimum,
+                    # while a gap that stops moving under repack is the
+                    # τ-concentration signature the guard exists for
+                    stall = adaptive_delay_policy(c["gapprev"], g)
+                    c["rpok"] = jnp.where(rec, c["rpok"] * stall,
+                                          c["rpok"])
+                c["gapprev"] = jnp.where(rec, g, c["gapprev"])
+            c["slot"] = slot + rec.astype(jnp.int32)
+        return c, ()
+
+    carry = {"alpha": alpha_loc, "w": w_loc, "dw": dw_prev, "key": key,
+             "gaps": jnp.zeros((n_gaps,), jnp.float32),
+             "epsb": jnp.zeros((n_gaps,), jnp.float32),
+             "actb": jnp.zeros((n_gaps,), jnp.float32),
+             "delayb": jnp.zeros((n_gaps,), jnp.float32),
+             "slot": jnp.int32(0)}
+    if dyn:
+        # the dyn delayed mode's own-updates view (real stale reads)
+        carry["dwo"] = jnp.zeros_like(w_loc)
+    if shrink_on:
+        carry["act"] = valid
+        carry["frac"] = jnp.float32(1.0)
+        carry["nrun"] = jnp.int32(n_blocks)
+        carry["rp"] = jnp.zeros((), bool)
+    if adaptive:
+        carry["delay"] = jnp.int32(delay0)
+        carry["gapprev"] = jnp.float32(jnp.inf)
+        if shrink_on:
+            carry["rpok"] = jnp.int32(1)  # sticky repack guard
+    if overlap:
+        carry["inflight"] = inflight0
+    out, _ = jax.lax.scan(epoch_body, carry, jnp.arange(epochs))
+    return (out["alpha"], out["w"], out["dw"], out["gaps"], out["epsb"],
+            out["actb"], out["delayb"])
 
 
 def make_sharded_pipeline(mesh: Mesh, loss, *, epochs: int,
                           block_size: int, n_blocks: int, n_rows: int,
                           delay_rounds: int = 0, use_kernel: bool = False,
                           interpret: bool | None = None, ell: bool = False,
-                          record: bool = True, gap_every: int = 1):
+                          record: bool = True, gap_every: int = 1,
+                          shrink_every: int = 0, shrink_tol: float = 1e-3,
+                          repack_threshold: float | None = None,
+                          adaptive: bool = False,
+                          adaptive_ratio: float = 0.95):
     """Build the single-dispatch multi-epoch solver for a 1-D
     ``("data",)`` mesh (DESIGN.md §11): per-epoch PRNG block draws,
     every block round, and duality-gap recording all run inside one
@@ -662,16 +1036,30 @@ def make_sharded_pipeline(mesh: Mesh, loss, *, epochs: int,
     ``cond``-gated to recorded epochs (the predicate is uniform across
     devices), so skipped epochs are collective-free.
 
+    Self-tuning knobs (DESIGN.md §12): ``shrink_every ≥ 1`` recomputes
+    an on-device active mask from the carried (α, effective w) every
+    that many epochs and freezes shrunk coordinates to zero-delta
+    updates (final epoch always unshrunk — LIBLINEAR's recovery pass);
+    ``repack_threshold`` additionally redraws blocks over the compacted
+    active set and skips the now-empty tail rounds once the global
+    active fraction drops below it; ``adaptive`` lets the gap-trend
+    controller back the delayed-psum flag off (one-way latch) at every
+    record (``delay_rounds`` seeds the flag, ``adaptive_ratio`` the
+    improvement threshold).  Validate combinations with
+    ``repro.dist.mesh.resolve_self_tuning`` before calling.
+
     Returns ``fn(X, sq_norms, alpha, w, key, carry_dw) → (alpha, w,
-    carry_dw, gaps)``; with ``delay_rounds > 0`` the caller flushes the
-    final in-flight aggregate (``w + carry_dw``) exactly like the host
-    driver."""
+    carry_dw, gaps, eps, active, delay)``; with ``delay_rounds > 0`` (or
+    any self-tuning mode) the caller flushes the final in-flight
+    aggregate (``w + carry_dw``) exactly like the host driver."""
     axis = "data"
     p = mesh.shape["data"]
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     gap_every = max(int(gap_every), 1)
     n_gaps = _gap_slots(epochs, gap_every) if record else 0
+    shrink_on = shrink_every > 0
+    dyn = shrink_on or adaptive
     block_update = _block_update_1d(loss, use_kernel, interpret, ell)
     x_spec = (P(axis), P(axis)) if ell else P(axis)
 
@@ -680,30 +1068,48 @@ def make_sharded_pipeline(mesh: Mesh, loss, *, epochs: int,
             my = jax.lax.axis_index(axis)
             n_loc = alpha_loc.shape[0]
             d_run = w_rep.shape[0]
-            mask = jnp.arange(n_loc) < (n_rows - my * n_loc)
+            valid = jnp.arange(n_loc) < (n_rows - my * n_loc)
             if record:
                 gap_fn = _make_gap_1d(loss, X_loc, ell)
-                gap = lambda rec, a: gap_fn(rec, a, mask, d_run)
+                gap = lambda rec, a, wv: gap_fn(rec, a, valid, d_run, wv)
             else:
                 gap = None
-            rounds = functools.partial(
-                _scan_rounds,
-                lambda a, w_eff, idx: block_update(X_loc, sq_loc, a,
-                                                   w_eff, idx),
-                delay_rounds=delay_rounds)
-            draw = lambda sub: _device_block_perm(sub, my, p, n_loc,
-                                                  n_rows, n_blocks,
-                                                  block_size)
+            bu = lambda a, w_eff, idx, act=None: block_update(
+                X_loc, sq_loc, a, w_eff, idx, act)
+            if dyn:
+                rounds = functools.partial(_scan_rounds_dyn, bu)
+            else:
+                rounds = functools.partial(_scan_rounds, bu,
+                                           delay_rounds=delay_rounds)
+
+            def draw(sub, act=None, rp=False):
+                if act is None:
+                    return _device_block_perm(sub, my, p, n_loc, n_rows,
+                                              n_blocks, block_size)
+                return _device_block_perm_masked(sub, my, p, n_loc,
+                                                 n_blocks, block_size,
+                                                 act, rp)
+
+            shrink = None
+            if shrink_on:
+                shrink = (_make_shrink_1d(loss, X_loc, ell, shrink_tol,
+                                          valid),
+                          shrink_every, repack_threshold, n_rows,
+                          block_size)
             return _epoch_scan(rounds, gap, key, alpha_loc, w_rep,
                                dw_prev, draw, epochs=epochs,
                                n_gaps=n_gaps, gap_every=gap_every,
-                               record=record)
+                               record=record, n_blocks=n_blocks,
+                               valid=valid, shrink=shrink,
+                               adaptive=adaptive,
+                               adaptive_ratio=adaptive_ratio,
+                               delay0=delay_rounds)
 
         return shard_map(
             device_fn,
             mesh=mesh,
             in_specs=(x_spec, P(axis), P(axis), P(), P(), P()),
-            out_specs=(P(axis), P(), P(), P()),
+            out_specs=(P(axis), P(), P(), P(), P(), P(), P()),
             check_vma=False,  # carries flip replicated→varying across psum
         )(X, sq_norms, alpha, w, key, carry_dw)
 
@@ -716,7 +1122,12 @@ def make_sharded_pipeline_2d(mesh: Mesh, loss, *, epochs: int,
                              use_kernel: bool = False,
                              interpret: bool | None = None,
                              record: bool = True, gap_every: int = 1,
-                             overlap: bool | str = False):
+                             overlap: bool | str = False,
+                             shrink_every: int = 0,
+                             shrink_tol: float = 1e-3,
+                             repack_threshold: float | None = None,
+                             adaptive: bool = False,
+                             adaptive_ratio: float = 0.95):
     """``make_sharded_pipeline`` for the 2-D ``("data", "model")`` mesh:
     the whole multi-epoch feature-sharded solve in one dispatch, with
     the same in-body per-device block draws (keyed on the ``data``-axis
@@ -724,7 +1135,12 @@ def make_sharded_pipeline_2d(mesh: Mesh, loss, *, epochs: int,
     sequence) and a ``model``-aware on-device gap (``_make_gap_2d`` —
     w(α) never leaves its shards).  ``overlap`` double-buffers the
     fused block round (``_scan_rounds_overlap``; needs ``use_kernel``
-    and ``delay_rounds ≥ 1``)."""
+    and ``delay_rounds ≥ 1``) — with the in-flight (base, Gram)
+    aggregate now carried *across epoch boundaries* through the epoch
+    scan, so only one prologue gram is paid per solve.  The self-tuning
+    knobs mirror the 1-D builder (shrinking composes with ``overlap``;
+    repack and the adaptive controller need the dyn round scan and are
+    rejected alongside it by ``resolve_self_tuning``)."""
     p = mesh.shape["data"]
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -732,6 +1148,8 @@ def make_sharded_pipeline_2d(mesh: Mesh, loss, *, epochs: int,
                                delay_rounds=delay_rounds)
     gap_every = max(int(gap_every), 1)
     n_gaps = _gap_slots(epochs, gap_every) if record else 0
+    shrink_on = shrink_every > 0
+    dyn = (shrink_on or adaptive) and not overlap
     block_update = _block_update_2d(loss, use_kernel, interpret)
 
     def solve(X, sq_norms, alpha, w, key, carry_dw):
@@ -741,31 +1159,57 @@ def make_sharded_pipeline_2d(mesh: Mesh, loss, *, epochs: int,
             vals_loc = vals4[:, 0]
             my = jax.lax.axis_index("data")
             n_loc = alpha_loc.shape[0]
-            mask = jnp.arange(n_loc) < (n_rows - my * n_loc)
+            valid = jnp.arange(n_loc) < (n_rows - my * n_loc)
             if record:
                 gap_fn = _make_gap_2d(loss, cols_loc, vals_loc,
                                       w_loc.shape[0])
-                gap = lambda rec, a: gap_fn(rec, a, mask)
+                gap = lambda rec, a, wv: gap_fn(rec, a, valid, wv)
             else:
                 gap = None
+
+            def draw(sub, act=None, rp=False):
+                if act is None:
+                    return _device_block_perm(sub, my, p, n_loc, n_rows,
+                                              n_blocks, block_size)
+                return _device_block_perm_masked(sub, my, p, n_loc,
+                                                 n_blocks, block_size,
+                                                 act, rp)
+
+            inflight0 = None
             if overlap:
                 gram_fn, corr_fn, update_fn = _overlap_round_fns(
                     cols_loc, vals_loc, sq_loc, loss, interpret)
                 rounds = functools.partial(_scan_rounds_overlap, gram_fn,
                                            corr_fn, update_fn)
+                # prologue: the FIRST epoch's first block, referenced to
+                # the entering primal shard — the one gram the carried
+                # schedule still pays up front (once per solve)
+                _, sub0 = jax.random.split(key)
+                b0 = (draw(sub0, valid) if shrink_on else draw(sub0))[0]
+                inflight0 = gram_fn(w_loc, b0)
             else:
-                rounds = functools.partial(
-                    _scan_rounds,
-                    lambda a, w_eff, idx: block_update(
-                        cols_loc, vals_loc, sq_loc, a, w_eff, idx),
-                    delay_rounds=delay_rounds)
-            draw = lambda sub: _device_block_perm(sub, my, p, n_loc,
-                                                  n_rows, n_blocks,
-                                                  block_size)
+                bu = lambda a, w_eff, idx, act=None: block_update(
+                    cols_loc, vals_loc, sq_loc, a, w_eff, idx, act)
+                if dyn:
+                    rounds = functools.partial(_scan_rounds_dyn, bu)
+                else:
+                    rounds = functools.partial(_scan_rounds, bu,
+                                               delay_rounds=delay_rounds)
+            shrink = None
+            if shrink_on:
+                shrink = (_make_shrink_2d(loss, cols_loc, vals_loc,
+                                          shrink_tol, valid),
+                          shrink_every, repack_threshold, n_rows,
+                          block_size)
             return _epoch_scan(rounds, gap, key, alpha_loc, w_loc,
                                dw_prev, draw, epochs=epochs,
                                n_gaps=n_gaps, gap_every=gap_every,
-                               record=record)
+                               record=record, n_blocks=n_blocks,
+                               valid=valid, shrink=shrink,
+                               adaptive=adaptive,
+                               adaptive_ratio=adaptive_ratio,
+                               delay0=delay_rounds,
+                               inflight0=inflight0)
 
         cols, vals = X
         return shard_map(
@@ -773,7 +1217,8 @@ def make_sharded_pipeline_2d(mesh: Mesh, loss, *, epochs: int,
             mesh=mesh,
             in_specs=(P("data", "model"), P("data", "model"), P("data"),
                       P("data"), P("model"), P(), P("model")),
-            out_specs=(P("data"), P("model"), P("model"), P()),
+            out_specs=(P("data"), P("model"), P("model"), P(), P(), P(),
+                      P()),
             check_vma=False,  # carries flip replicated→varying across psum
         )(cols, vals, sq_norms, alpha, w, key, carry_dw)
 
@@ -832,6 +1277,12 @@ def sharded_passcode_solve(
     gap_every: int = 1,
     pipeline: bool = True,
     overlap: bool | str = "auto",
+    shrink_every: int = 0,
+    shrink_tol: float = 1e-3,
+    repack: bool | str = "auto",
+    repack_threshold: float = 0.5,
+    adaptive: bool = False,
+    adaptive_ratio: float = 0.95,
 ) -> ShardedResult:
     """Distributed PASSCoDe-Atomic.  ``X_host``: dense (n, d) array or an
     ``EllMatrix`` (the sparse fast path — per-update work drops from
@@ -866,6 +1317,31 @@ def sharded_passcode_solve(
     psum of block t overlaps the gram kernel of block t+1
     (``_scan_rounds_overlap``).  "auto" (default) enables it exactly
     there; True elsewhere raises (``repro.dist.mesh.pipeline_overlap``).
+
+    Self-tuning knobs (DESIGN.md §12; pipelined path only — validated
+    by ``repro.dist.mesh.resolve_self_tuning``):
+
+    ``shrink_every ≥ 1`` turns on on-device active-set shrinking: every
+    that many epochs each device recomputes the LIBLINEAR projected-
+    gradient mask from its carried (α, effective w) and frozen
+    coordinates take exact zero-delta updates; the final epoch always
+    runs unshrunk (the recovery pass), so results match the unshrunk
+    solve on converged problems.  ``shrink_tol`` is the projected-
+    gradient threshold.  ``repack`` ∈ {"auto", True, False}: once the
+    global active fraction drops below ``repack_threshold``, redraw each
+    epoch's blocks over the compacted active set and skip the now-empty
+    tail rounds — epochs get *shorter*, the wall-clock win on
+    mostly-converged rcv1/news20-style profiles.  ``adaptive`` runs the
+    gap-trend controller (``adaptive_delay_policy``): each recorded gap
+    decides whether following epochs keep the delayed (async) round
+    schedule or drop to synchronous — a one-way latch seeded by
+    ``delay_rounds`` (seed 1 to start async); ``adaptive_ratio`` is its
+    improvement threshold (0.95 backs off only on a hard stall, 0.5
+    anneals async→sync once the gap stops halving per record).  The
+    pipelined result then carries the live per-record metrics: ``eps``
+    (the backward-error ‖w(α) − ŵ‖ of ``core/backward_error.py``),
+    ``active`` (global active fraction) and ``delay`` (effective flag),
+    all aligned with ``gaps``.
     """
     if mesh is None:
         mesh = (solver_mesh_2d() if "model" in mesh_axes
@@ -879,7 +1355,10 @@ def sharded_passcode_solve(
             X_host, loss, mesh=mesh, epochs=epochs, block_size=block_size,
             delay_rounds=delay_rounds, seed=seed, record=record,
             use_kernel=use_kernel, gap_every=gap_every, pipeline=pipeline,
-            overlap=overlap,
+            overlap=overlap, shrink_every=shrink_every,
+            shrink_tol=shrink_tol, repack=repack,
+            repack_threshold=repack_threshold, adaptive=adaptive,
+            adaptive_ratio=adaptive_ratio,
         )
     p = mesh.shape["data"]
     is_ell = isinstance(X_host, EllMatrix)
@@ -895,6 +1374,9 @@ def sharded_passcode_solve(
     # an explicit True is an error
     pipeline_overlap(overlap, two_d=False, fused=use_k,
                      delay_rounds=delay_rounds)
+    st = resolve_self_tuning(shrink_every, repack, adaptive,
+                             overlap_knob=overlap, overlap_on=False,
+                             pipeline=pipeline, record=record)
     data_sh = named(mesh, "data")
     rep_sh = replicated(mesh)
     if is_ell:
@@ -942,23 +1424,27 @@ def sharded_passcode_solve(
             mesh, loss, epochs=epochs, block_size=block_size,
             n_blocks=n_blocks, n_rows=n, delay_rounds=delay_rounds,
             use_kernel=use_k, interpret=interpret, ell=is_ell,
-            record=record, gap_every=gap_every)
-        alpha, w, carry_dw, gaps_arr = solve_fn(
-            X, sq_norms, alpha, w, key, carry_dw)
-        if delay_rounds > 0:
-            w = w + carry_dw  # flush in-flight aggregate
-    else:
-        epoch_fn = make_sharded_epoch(mesh, loss,
-                                      delay_rounds=delay_rounds,
-                                      use_kernel=use_k,
-                                      interpret=interpret, ell=is_ell)
-        alpha, w, gaps_arr = _drive_epochs(
-            epoch_fn, X, sq_norms, alpha, w, carry_dw, p=p, n_loc=n_loc,
-            n=n, n_blocks=n_blocks, block_size=block_size, epochs=epochs,
-            key=key, record=record, gap_every=gap_every,
-            delay_rounds=delay_rounds, blocks_sharding=data_sh,
-            gap_fn=lambda a: duality_gap(a[:n], X_gap, loss),
-        )
+            record=record, gap_every=gap_every,
+            shrink_every=st.shrink_every, shrink_tol=shrink_tol,
+            repack_threshold=(repack_threshold if st.repack else None),
+            adaptive=st.adaptive, adaptive_ratio=adaptive_ratio)
+        alpha, w, carry_dw, gaps_arr, eps_arr, act_arr, delay_arr = (
+            solve_fn(X, sq_norms, alpha, w, key, carry_dw))
+        if delay_rounds > 0 or st.shrink_every or st.adaptive:
+            w = w + carry_dw  # flush in-flight aggregate (0 when sync)
+        return ShardedResult(alpha[:n], w[:d], gaps_arr, epochs,
+                             eps_arr, act_arr, delay_arr)
+    epoch_fn = make_sharded_epoch(mesh, loss,
+                                  delay_rounds=delay_rounds,
+                                  use_kernel=use_k,
+                                  interpret=interpret, ell=is_ell)
+    alpha, w, gaps_arr = _drive_epochs(
+        epoch_fn, X, sq_norms, alpha, w, carry_dw, p=p, n_loc=n_loc,
+        n=n, n_blocks=n_blocks, block_size=block_size, epochs=epochs,
+        key=key, record=record, gap_every=gap_every,
+        delay_rounds=delay_rounds, blocks_sharding=data_sh,
+        gap_fn=lambda a: duality_gap(a[:n], X_gap, loss),
+    )
     return ShardedResult(alpha[:n], w[:d], gaps_arr, epochs)
 
 
@@ -976,6 +1462,12 @@ def _solve_feature_sharded(
     gap_every: int,
     pipeline: bool,
     overlap: bool | str,
+    shrink_every: int = 0,
+    shrink_tol: float = 1e-3,
+    repack: bool | str = "auto",
+    repack_threshold: float = 0.5,
+    adaptive: bool = False,
+    adaptive_ratio: float = 0.95,
 ) -> ShardedResult:
     """The 2-D (data × model) engine behind ``sharded_passcode_solve``
     (DESIGN.md §10).  Rows/duals block-parallelize along ``data``
@@ -997,6 +1489,9 @@ def _solve_feature_sharded(
     )
     overlap_on = pipeline_overlap(overlap, two_d=True, fused=use_k,
                                   delay_rounds=delay_rounds)
+    st = resolve_self_tuning(shrink_every, repack, adaptive,
+                             overlap_knob=overlap, overlap_on=overlap_on,
+                             pipeline=pipeline, record=record)
     # lane-pad k_loc and the per-shard padded primal when fused; pad
     # rows to n_pad with all-padding rows (local id d_loc, value 0)
     k_run = lane_pad(k_loc) if use_k else k_loc
@@ -1027,26 +1522,31 @@ def _solve_feature_sharded(
             mesh, loss, epochs=epochs, block_size=block_size,
             n_blocks=n_blocks, n_rows=n, delay_rounds=delay_rounds,
             use_kernel=use_k, interpret=interpret, record=record,
-            gap_every=gap_every, overlap=overlap_on)
+            gap_every=gap_every, overlap=st.overlap,
+            shrink_every=st.shrink_every, shrink_tol=shrink_tol,
+            repack_threshold=(repack_threshold if st.repack else None),
+            adaptive=st.adaptive, adaptive_ratio=adaptive_ratio)
         # identical block draws to the 1-D solver at equal p and seed,
         # so the two paths run the same update sequence
-        alpha, w, carry_dw, gaps_arr = solve_fn(
-            X, sq_norms, alpha, w, key, carry_dw)
-        if delay_rounds > 0:
-            w = w + carry_dw  # flush in-flight aggregate
-    else:
-        epoch_fn = make_sharded_epoch_2d(mesh, loss,
-                                         delay_rounds=delay_rounds,
-                                         use_kernel=use_k,
-                                         interpret=interpret,
-                                         overlap=overlap_on)
-        alpha, w, gaps_arr = _drive_epochs(
-            epoch_fn, X, sq_norms, alpha, w, carry_dw, p=p, n_loc=n_loc,
-            n=n, n_blocks=n_blocks, block_size=block_size, epochs=epochs,
-            key=key, record=record, gap_every=gap_every,
-            delay_rounds=delay_rounds, blocks_sharding=data_sh,
-            gap_fn=lambda a: duality_gap(a[:n], X_gap, loss),
-        )
+        alpha, w, carry_dw, gaps_arr, eps_arr, act_arr, delay_arr = (
+            solve_fn(X, sq_norms, alpha, w, key, carry_dw))
+        if delay_rounds > 0 or st.shrink_every or st.adaptive:
+            w = w + carry_dw  # flush in-flight aggregate (0 when sync)
+        w_full = w.reshape(m, d1_loc)[:, :d_loc].reshape(-1)[:d]
+        return ShardedResult(alpha[:n], w_full, gaps_arr, epochs,
+                             eps_arr, act_arr, delay_arr)
+    epoch_fn = make_sharded_epoch_2d(mesh, loss,
+                                     delay_rounds=delay_rounds,
+                                     use_kernel=use_k,
+                                     interpret=interpret,
+                                     overlap=st.overlap)
+    alpha, w, gaps_arr = _drive_epochs(
+        epoch_fn, X, sq_norms, alpha, w, carry_dw, p=p, n_loc=n_loc,
+        n=n, n_blocks=n_blocks, block_size=block_size, epochs=epochs,
+        key=key, record=record, gap_every=gap_every,
+        delay_rounds=delay_rounds, blocks_sharding=data_sh,
+        gap_fn=lambda a: duality_gap(a[:n], X_gap, loss),
+    )
     # stitch the true primal back out of the per-shard padded slices
     w_full = w.reshape(m, d1_loc)[:, :d_loc].reshape(-1)[:d]
     return ShardedResult(alpha[:n], w_full, gaps_arr, epochs)

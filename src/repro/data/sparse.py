@@ -112,6 +112,26 @@ def unpad_primal(w_pad: jnp.ndarray) -> jnp.ndarray:
     return w_pad[:-1]
 
 
+def active_row_remap(mask: jnp.ndarray):
+    """Fixed-capacity compaction of active rows (DESIGN.md §12).
+
+    Returns ``(ids, count)`` where ``ids`` is a length-n int32
+    permutation listing the rows with ``mask`` True first — in their
+    original order (stable) — and ``count`` is how many there are.  The
+    shrinking solver repacks an epoch by drawing its permutation over
+    ``[0, count)`` and mapping through ``ids``, so frozen rows stop
+    costing update slots while every array keeps its static shape; with
+    an all-True mask this is the identity (``ids == arange``), which is
+    what makes the repacked path collapse bit-exactly onto the plain one.
+
+    Traceable (no data-dependent shapes): sorting the negated mask is
+    stable in jnp, so actives keep their relative order.
+    """
+    mask = mask.astype(bool)
+    ids = jnp.argsort(~mask).astype(jnp.int32)
+    return ids, jnp.sum(mask.astype(jnp.int32))
+
+
 # ------------------------------------------- column-partitioned ELL ----
 
 

@@ -8,8 +8,10 @@ touches jax device state — callers control when devices are initialized
 from __future__ import annotations
 
 import math
+from typing import NamedTuple
 
 import jax
+import jax.numpy as jnp
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -75,10 +77,12 @@ _lane_pad = lane_pad
 
 def dcd_kernel_vmem_bytes(n_loc: int, d: int, *, itemsize: int = 4) -> int:
     """Resident working set of the fused indexed-block DCD round: the
-    whole (n_loc, d̃) local shard plus w in/out (2·d̃), α in/out + q
-    (3·n_loc f32) and the int32 index block (n_loc upper bound)."""
+    whole (n_loc, d̃) local shard plus w in/out (2·d̃), α in/out + q +
+    the active-set mask (4·n_loc f32 — the mask operand is always bound,
+    all-ones when shrinking is off) and the int32 index block (n_loc
+    upper bound)."""
     dp = lane_pad(d)
-    return itemsize * (n_loc * dp + 2 * dp + 3 * n_loc) + 4 * n_loc
+    return itemsize * (n_loc * dp + 2 * dp + 4 * n_loc) + 4 * n_loc
 
 
 def dcd_kernel_fits(n_loc: int, d: int, *, vmem_bytes: int = VMEM_BYTES,
@@ -94,15 +98,16 @@ def dcd_ell_kernel_vmem_bytes(n_loc: int, k_max: int, d: int, *,
     """Resident working set of the fused *ELL* indexed-block round
     (DESIGN.md §9): the (n_loc, k̃) column-id and value shards
     (2·n_loc·k̃ words, k̃ = k_max lane-padded), the padded primal in/out
-    (2·d₁ with d₁ = lane_pad(d+1) for the dummy slot), α in/out + q
-    (3·n_loc f32) and the int32 index block (n_loc upper bound).
+    (2·d₁ with d₁ = lane_pad(d+1) for the dummy slot), α in/out + q +
+    the active-set mask (4·n_loc f32) and the int32 index block (n_loc
+    upper bound).
 
     Independent of d except through the 2·d₁ primal term — this is what
     admits the large-d problems (rcv1 d≈47k, news20 d≈1.3M at paper
     scale) whose dense n_loc·d̃ shard ``dcd_kernel_fits`` rejects."""
     kp = lane_pad(k_max)
     d1 = lane_pad(d + 1)
-    return itemsize * (2 * n_loc * kp + 2 * d1 + 3 * n_loc) + 4 * n_loc
+    return itemsize * (2 * n_loc * kp + 2 * d1 + 4 * n_loc) + 4 * n_loc
 
 
 def dcd_ell_kernel_fits(n_loc: int, k_max: int, d: int, *,
@@ -125,8 +130,9 @@ def dcd_feature_kernel_vmem_bytes(n_loc: int, k_loc: int, d_loc: int, *,
     (2·n_loc·k̃_loc words, k̃_loc lane-padded), the device's own primal
     *shard* in/out (2·d₁_loc with d₁_loc = lane_pad(d_loc + 1) for the
     per-shard dummy slot — this is the d/m term that makes huge d
-    feasible), α in/out + q (3·n_loc f32), the int32 index block, and
-    the per-block Gram/base exchange buffers (B² + O(B) f32).
+    feasible), α in/out + q + the active-set mask (4·n_loc f32), the
+    int32 index block, and the per-block Gram/base exchange buffers
+    (B² + O(B) f32).
 
     The only d-dependent term is 2·d₁_loc ≈ 2·d/m: at m = 16 this admits
     webspam/kddb-scale d ≈ 16.6M, where the dense policy's n_loc·d̃ and
@@ -134,7 +140,7 @@ def dcd_feature_kernel_vmem_bytes(n_loc: int, k_loc: int, d_loc: int, *,
     kp = lane_pad(k_loc)
     d1 = lane_pad(d_loc + 1)
     b = block_size
-    return (itemsize * (2 * n_loc * kp + 2 * d1 + 3 * n_loc + b * b + 3 * b)
+    return (itemsize * (2 * n_loc * kp + 2 * d1 + 4 * n_loc + b * b + 3 * b)
             + 4 * n_loc + 4 * b)
 
 
@@ -186,6 +192,103 @@ def pipeline_overlap(overlap, *, two_d: bool, fused: bool,
             "round carries its aggregates with the delayed-round "
             "bookkeeping")
     return True
+
+
+def adaptive_delay_policy(gap_prev, gap_new, *, improve_ratio: float = 0.95):
+    """Gap-trend controller for the effective asynchrony (DESIGN.md §12).
+
+    Maps two consecutive recorded duality gaps to the next delay flag:
+    1 (delayed psum — one round of staleness, maximal overlap) while the
+    gap is still improving by at least ``1 − improve_ratio`` per record
+    interval, 0 (synchronous rounds) once it stalls or regresses.  This
+    is the paper's staleness-vs-convergence tradeoff run closed-loop:
+    inside the Liu–Wright admissible region asynchrony is free, so take
+    the overlap; when progress stalls the gap trend is the observable
+    symptom, so fall back to the synchronous schedule instead of burning
+    epochs on stale updates.
+
+    jnp-traceable (the solver evaluates it inside the epoch scan on the
+    psummed — hence device-uniform — gap, so the flag it returns is
+    uniform too and may gate collectives).  Monotone in the trend:
+    a smaller ``gap_new`` never decreases the returned asynchrony.
+    Returns int32 0/1.
+
+    The pipelined solver applies this through a one-way latch (it only
+    ever lowers the carried flag): re-raising oscillates, because a
+    synchronous epoch's fast progress reads as "async affordable" and
+    the following stale epoch's slow progress reads as "back off",
+    re-paying the staleness tax each flip.
+    """
+    return (gap_new <= improve_ratio * gap_prev).astype(jnp.int32)
+
+
+class SelfTuning(NamedTuple):
+    """Resolved self-tuning configuration of one solve (see
+    ``resolve_self_tuning``)."""
+
+    shrink_every: int
+    repack: bool
+    adaptive: bool
+    overlap: bool
+
+
+def resolve_self_tuning(shrink_every, repack, adaptive, *, overlap_knob,
+                        overlap_on: bool, pipeline: bool,
+                        record: bool) -> SelfTuning:
+    """Resolve/validate the solver's self-tuning knobs (DESIGN.md §12).
+
+    ``shrink_every`` ∈ {0 = off, k ≥ 1}: recompute the active mask every
+    k epochs.  ``repack`` ∈ {False, True, "auto"}: draw repacked epochs
+    over the compacted active set so they take fewer block rounds.
+    ``adaptive`` toggles the gap-trend delay controller.  The knobs need
+    the pipelined (on-device epoch scan) path — mask, repack ids and the
+    delay flag all live in the scan carry — and the controller needs the
+    recorded gap as its input signal.
+
+    Interactions with the 2-D overlapped schedule: the overlapped round
+    keeps a (base, Gram) psum in flight that is only valid for the block
+    sequence it was issued against, so a repacked draw (sequence changes
+    with the mask) or a controller dropping to synchronous mid-solve
+    would invalidate it.  ``overlap="auto"`` therefore resolves *off*
+    when shrinking or adaptive is requested (repack's shorter epochs are
+    the measured win; overlap only hides collective latency), while an
+    explicit ``overlap=True`` keeps plain masked shrinking but rejects
+    repack/adaptive rather than silently changing semantics.
+    """
+    every = int(shrink_every or 0)
+    if every < 0:
+        raise ValueError(f"shrink_every must be >= 0, got {shrink_every}")
+    adaptive = bool(adaptive)
+    if (every or adaptive) and not pipeline:
+        raise ValueError(
+            "shrink_every/adaptive need pipeline=True — the active mask "
+            "and delay flag live in the on-device epoch-scan carry; the "
+            "host driver path has no carry to put them in")
+    if adaptive and not record:
+        raise ValueError(
+            "adaptive=True needs record=True — the gap-trend controller "
+            "reads the on-device duality-gap buffer as its input signal")
+    if repack not in (False, True, "auto"):
+        raise ValueError(f"repack must be False/True/'auto', got {repack!r}")
+    if repack is True and not every:
+        raise ValueError("repack=True needs shrink_every >= 1 — there is "
+                         "no active set to compact without shrinking")
+    if overlap_on and (every or adaptive):
+        if overlap_knob == "auto":
+            overlap_on = False
+        elif repack is True or adaptive:
+            raise ValueError(
+                "overlap=True is incompatible with repack/adaptive — the "
+                "in-flight (base, Gram) psum is only valid for a fixed "
+                "block sequence under a fixed delay schedule")
+    if repack == "auto":
+        repack = bool(every) and not overlap_on
+    if repack and overlap_on:
+        raise ValueError(
+            "repack=True is incompatible with the overlapped schedule — "
+            "the repacked draw changes the block sequence the in-flight "
+            "gram was issued against")
+    return SelfTuning(every, bool(repack), adaptive, overlap_on)
 
 
 def dcd_block_rows(d: int, *, vmem_bytes: int = VMEM_BYTES,

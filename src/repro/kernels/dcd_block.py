@@ -97,6 +97,7 @@ def _dcd_indexed_kernel(
     x_ref,  # (n, d)  whole shard, VMEM-resident (constant index_map)
     alpha_ref,  # (n, 1)  duals — full vector (seeds the carried output)
     q_ref,  # (n, 1)  row squared norms
+    act_ref,  # (n, 1)  active-set mask (f32 0/1; all-ones = no shrinking)
     w_ref,  # (1, d)  primal (seeds the carried output)
     alpha_out,  # (n, 1)  carried across grid steps
     w_out,  # (1, d)  carried across grid steps
@@ -115,7 +116,10 @@ def _dcd_indexed_kernel(
         wx = jnp.sum(w * x)
         a = alpha_out[pl.ds(i, 1), :]  # read the running α, not the seed
         q = q_ref[pl.ds(i, 1), :]
-        delta = loss.delta(a, wx, q)
+        # frozen (shrunk) coordinates take the exact zero-delta update
+        delta = jnp.where(
+            act_ref[pl.ds(i, 1), :] > 0.0, loss.delta(a, wx, q), 0.0
+        )
         alpha_out[pl.ds(i, 1), :] = a + delta  # scatter back
         return w + delta * x
 
@@ -135,10 +139,13 @@ def dcd_epoch_pallas_call(
     idx=None,  # (m,) int32 row ids, m % block_rows == 0 → indexed mode
     block_rows: int = 256,
     interpret: bool = False,
+    active=None,  # (n,) 0/1 active-set mask (indexed mode only)
 ):
     n, d = X.shape
     if loss is None:
         loss = _legacy_loss(c, sq_hinge)
+    assert active is None or idx is not None, (
+        "active-set masking needs the indexed mode")
     alpha2 = alpha.reshape(n, 1).astype(jnp.float32)
     q2 = sq_norms.reshape(n, 1).astype(jnp.float32)
     w2 = w.reshape(1, d).astype(jnp.float32)
@@ -174,6 +181,10 @@ def dcd_epoch_pallas_call(
     assert m % block_rows == 0, (m, block_rows)
     grid = (m // block_rows,)
     idx2 = idx.reshape(m, 1).astype(jnp.int32)
+    if active is None:
+        act2 = jnp.ones((n, 1), jnp.float32)
+    else:
+        act2 = active.reshape(n, 1).astype(jnp.float32)
     kernel = functools.partial(
         _dcd_indexed_kernel, loss=loss, block_rows=block_rows
     )
@@ -185,6 +196,7 @@ def dcd_epoch_pallas_call(
             pl.BlockSpec((n, d), lambda i: (0, 0)),  # X: whole shard
             pl.BlockSpec((n, 1), lambda i: (0, 0)),  # alpha seed
             pl.BlockSpec((n, 1), lambda i: (0, 0)),  # sq norms
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),  # active mask
             pl.BlockSpec((1, d), lambda i: (0, 0)),  # w seed
         ],
         out_specs=[
@@ -196,5 +208,5 @@ def dcd_epoch_pallas_call(
             jax.ShapeDtypeStruct((1, d), jnp.float32),
         ],
         interpret=interpret,
-    )(idx2, X, alpha2, q2, w2)
+    )(idx2, X, alpha2, q2, act2, w2)
     return alpha_out.reshape(n), w_out.reshape(d)

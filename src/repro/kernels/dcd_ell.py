@@ -54,6 +54,7 @@ def _dcd_ell_indexed_kernel(
     val_ref,  # (n, k)  whole shard's values, VMEM-resident
     alpha_ref,  # (n, 1)  duals — seeds the carried output
     q_ref,  # (n, 1)  row squared norms
+    act_ref,  # (n, 1)  active-set mask (f32 0/1; all-ones = no shrinking)
     w_ref,  # (1, d1) padded primal (dummy slot at d) — seeds the carry
     alpha_out,  # (n, 1)  carried across grid steps
     w_out,  # (1, d1) carried across grid steps
@@ -73,7 +74,11 @@ def _dcd_ell_indexed_kernel(
         wx = jnp.sum(jnp.take(w[0], cols) * vals)  # O(k) lane gather
         a = alpha_out[pl.ds(i, 1), :]  # running α, not the seed
         q = q_ref[pl.ds(i, 1), :]
-        delta = loss.delta(a, wx, q)
+        # frozen (shrunk) coordinates take the exact zero-delta update —
+        # same gate as the serial reference's masked epoch
+        delta = jnp.where(
+            act_ref[pl.ds(i, 1), :] > 0.0, loss.delta(a, wx, q), 0.0
+        )
         alpha_out[pl.ds(i, 1), :] = a + delta
         # rank-1 sparse axpy; padding ids scatter δ·0 into the dummy slot
         return w.at[0, cols].add(delta[0, 0] * vals)
@@ -93,6 +98,7 @@ def dcd_ell_epoch_pallas_call(
     idx,  # (m,) int32 row ids, m % block_rows == 0
     block_rows: int = 256,
     interpret: bool = False,
+    active=None,  # (n,) 0/1 active-set mask; None = all active
 ):
     n, k = cols.shape
     d1 = w_pad.shape[0]
@@ -102,6 +108,10 @@ def dcd_ell_epoch_pallas_call(
     idx2 = idx.reshape(m, 1).astype(jnp.int32)
     alpha2 = alpha.reshape(n, 1).astype(jnp.float32)
     q2 = sq_norms.reshape(n, 1).astype(jnp.float32)
+    if active is None:
+        act2 = jnp.ones((n, 1), jnp.float32)
+    else:
+        act2 = active.reshape(n, 1).astype(jnp.float32)
     w2 = w_pad.reshape(1, d1).astype(jnp.float32)
     kernel = functools.partial(
         _dcd_ell_indexed_kernel, loss=loss, block_rows=block_rows
@@ -115,6 +125,7 @@ def dcd_ell_epoch_pallas_call(
             pl.BlockSpec((n, k), lambda i: (0, 0)),  # vals: whole shard
             pl.BlockSpec((n, 1), lambda i: (0, 0)),  # alpha seed
             pl.BlockSpec((n, 1), lambda i: (0, 0)),  # sq norms
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),  # active mask
             pl.BlockSpec((1, d1), lambda i: (0, 0)),  # w seed
         ],
         out_specs=[
@@ -126,5 +137,5 @@ def dcd_ell_epoch_pallas_call(
             jax.ShapeDtypeStruct((1, d1), jnp.float32),
         ],
         interpret=interpret,
-    )(idx2, cols, vals, alpha2, q2, w2)
+    )(idx2, cols, vals, alpha2, q2, act2, w2)
     return alpha_out.reshape(n), w_out.reshape(d1)

@@ -109,6 +109,7 @@ def _update_kernel(
     val_ref,  # (n, k)  shard's values, VMEM-resident
     alpha_ref,  # (n, 1)  duals — seeds the output
     q_ref,  # (n, 1)  FULL row squared norms (summed over shards)
+    act_ref,  # (n, 1)  active-set mask (f32 0/1; all-ones = no shrinking)
     w_ref,  # (1, d1) this shard's padded primal slice — seeds the output
     base_ref,  # (B, 1)  psummed w₀ᵀx_t
     gram_ref,  # (B, B)  psummed Gram
@@ -131,7 +132,12 @@ def _update_kernel(
         wx = base[t, 0] + jnp.sum(deltas * gcol)
         a = alpha_out[pl.ds(i, 1), :]  # running α, not the seed
         q = q_ref[pl.ds(i, 1), :]
-        delta = loss.delta(a, wx, q)
+        # frozen (shrunk) coordinates take the exact zero-delta update;
+        # the δ-history then carries a 0, so the Gram recursion and the
+        # scatter both see exactly what a skipped row would produce
+        delta = jnp.where(
+            act_ref[pl.ds(i, 1), :] > 0.0, loss.delta(a, wx, q), 0.0
+        )
         alpha_out[pl.ds(i, 1), :] = a + delta
         w = w.at[0, cols].add(delta[0, 0] * vals)
         return w, deltas.at[t].set(delta[0, 0])
@@ -192,11 +198,16 @@ def dcd_feature_update_pallas_call(
     *,
     loss,
     interpret: bool = False,
+    active=None,  # (n,) 0/1 active-set mask; None = all active
 ):
     """B sequential δ-recursion updates; scatters only this shard."""
     n, k = cols.shape
     d1 = w_loc.shape[0]
     b = idx.shape[0]
+    if active is None:
+        act2 = jnp.ones((n, 1), jnp.float32)
+    else:
+        act2 = active.reshape(n, 1).astype(jnp.float32)
     kernel = functools.partial(_update_kernel, loss=loss, block_rows=b)
     alpha_out, w_out = pl.pallas_call(
         kernel,
@@ -205,6 +216,7 @@ def dcd_feature_update_pallas_call(
             pl.BlockSpec((b, 1), lambda i: (0, 0)),
             pl.BlockSpec((n, k), lambda i: (0, 0)),
             pl.BlockSpec((n, k), lambda i: (0, 0)),
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
             pl.BlockSpec((n, 1), lambda i: (0, 0)),
             pl.BlockSpec((n, 1), lambda i: (0, 0)),
             pl.BlockSpec((1, d1), lambda i: (0, 0)),
@@ -222,7 +234,7 @@ def dcd_feature_update_pallas_call(
         interpret=interpret,
     )(idx.reshape(b, 1).astype(jnp.int32), cols, vals,
       alpha.reshape(n, 1).astype(jnp.float32),
-      sq_norms.reshape(n, 1).astype(jnp.float32),
+      sq_norms.reshape(n, 1).astype(jnp.float32), act2,
       w_loc.reshape(1, d1).astype(jnp.float32),
       base.reshape(b, 1).astype(jnp.float32), gram)
     return alpha_out.reshape(n), w_out.reshape(d1)

@@ -116,24 +116,27 @@ def dcd_epoch_pallas(
 
 
 def dcd_block_update_pallas(X, sq_norms, alpha, w, idx, *, loss,
-                            interpret: bool = False):
+                            interpret: bool = False, active=None):
     """One indexed block of B sequential DCD updates — the fused
     equivalent of ``repro.core.sharded._local_block_update``.
 
     Traced (not jitted) so it can run inside a ``shard_map`` body: X is
     this device's (n_loc, d) shard with d already lane-padded to 128 by
-    the caller, ``idx`` the (B,) local row ids of the block.  Returns
-    (updated α shard, local Δw) exactly like the pure-jnp version.
+    the caller, ``idx`` the (B,) local row ids of the block.  ``active``
+    (optional (n_loc,) 0/1 mask) freezes shrunk coordinates to
+    zero-delta updates.  Returns (updated α shard, local Δw) exactly
+    like the pure-jnp version.
     """
     a_new, w_new = dcd_epoch_pallas_call(
         X, alpha, w, sq_norms, loss=loss, idx=idx,
-        block_rows=idx.shape[0], interpret=interpret,
+        block_rows=idx.shape[0], interpret=interpret, active=active,
     )
     return a_new, w_new - w
 
 
 def dcd_ell_block_update_pallas(cols, vals, sq_norms, alpha, w_pad, idx, *,
-                                loss, interpret: bool = False):
+                                loss, interpret: bool = False,
+                                active=None):
     """One indexed block of B sequential DCD updates on an ELL shard —
     the fused equivalent of ``repro.core.sharded._local_block_update_ell``.
 
@@ -141,13 +144,14 @@ def dcd_ell_block_update_pallas(cols, vals, sq_norms, alpha, w_pad, idx, *,
     ``cols``/``vals`` are this device's (n_loc, k̃) ELL shard with k̃
     already lane-padded to 128 by the caller, ``w_pad`` the (d₁,) padded
     primal (dummy slot at index d, d₁ a multiple of 128), ``idx`` the
-    (B,) local row ids of the block.  Returns (updated α shard, local
-    Δw_pad) exactly like the dense block engine — the padding slots of
-    Δw_pad are identically zero.
+    (B,) local row ids of the block.  ``active`` (optional (n_loc,) 0/1
+    mask) freezes shrunk coordinates to zero-delta updates.  Returns
+    (updated α shard, local Δw_pad) exactly like the dense block
+    engine — the padding slots of Δw_pad are identically zero.
     """
     a_new, w_new = dcd_ell_epoch_pallas_call(
         cols, vals, alpha, w_pad, sq_norms, loss=loss, idx=idx,
-        block_rows=idx.shape[0], interpret=interpret,
+        block_rows=idx.shape[0], interpret=interpret, active=active,
     )
     return a_new, w_new - w_pad
 
@@ -193,18 +197,24 @@ def dcd_feature_base_correction(cols, vals, dvec, idx, *,
 
 
 def dcd_feature_update_pallas(cols, vals, sq_norms, alpha, w_loc, idx, base,
-                              gram, *, loss, interpret: bool = False):
+                              gram, *, loss, interpret: bool = False,
+                              active=None):
     """Phase 2: the B-step δ recursion against a *reduced* (base, Gram);
-    no collectives.  Returns (updated α shard, updated primal shard)."""
+    no collectives.  ``active`` (optional (n_loc,) 0/1 mask) freezes
+    shrunk coordinates to zero-delta updates — legal here because a
+    zero δ contributes nothing through the Gram recursion or the
+    scatter, so the gram phase needs no mask.  Returns (updated α
+    shard, updated primal shard)."""
     return dcd_feature_update_pallas_call(
         cols, vals, alpha, sq_norms, w_loc, idx, base, gram, loss=loss,
-        interpret=interpret,
+        interpret=interpret, active=active,
     )
 
 
 def dcd_feature_block_update_pallas(cols, vals, sq_norms, alpha, w_loc, idx,
                                     *, loss, axis: str = "model",
-                                    interpret: bool = False):
+                                    interpret: bool = False,
+                                    active=None):
     """One indexed block of B sequential DCD updates on a 2D
     (data × model) feature shard — the fused equivalent of
     ``repro.core.sharded._local_block_update_feature``; the eager
@@ -225,6 +235,6 @@ def dcd_feature_block_update_pallas(cols, vals, sq_norms, alpha, w_loc, idx,
     )
     a_new, w_new = dcd_feature_update_pallas(
         cols, vals, sq_norms, alpha, w_loc, idx, base, gram, loss=loss,
-        interpret=interpret,
+        interpret=interpret, active=active,
     )
     return a_new, w_new - w_loc
