@@ -10,7 +10,9 @@ frontier; the 2D feature-sharded section → BENCH_feature.json,
 1D-vs-2D d-sweep + three-policy VMEM frontier; the multi-epoch pipeline
 section → BENCH_pipeline.json, driver-vs-pipeline dispatch overhead +
 overlap round; the adaptive self-tuning section → BENCH_adaptive.json,
-wall-clock-to-ε of shrinking/adaptive vs the static schedules).
+wall-clock-to-ε of shrinking/adaptive vs the static schedules;
+the pod double-async section → BENCH_pod.json, convergence-vs-staleness
+sweep + pod-axis mesh overhead).
 """
 
 from __future__ import annotations
@@ -56,6 +58,7 @@ def main() -> None:
         bench_feature,
         bench_kernel,
         bench_pipeline,
+        bench_pod,
         bench_roofline,
         bench_scaling,
         bench_sparse,
@@ -72,6 +75,7 @@ def main() -> None:
         ("2D feature-sharded solver", bench_feature, "feature"),
         ("Multi-epoch pipeline", bench_pipeline, "pipeline"),
         ("Adaptive self-tuning solver", bench_adaptive, "adaptive"),
+        ("Pod double-async solver", bench_pod, "pod"),
         ("Roofline (dry-run artifacts)", bench_roofline, None),
     ]
     print("name,us_per_call,derived")

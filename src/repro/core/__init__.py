@@ -23,7 +23,7 @@ from repro.core.objective import (
 from repro.core.dcd import dcd_epoch, dcd_solve
 from repro.core.passcode import PasscodeResult, passcode_epoch, passcode_solve
 from repro.core.backward_error import backward_error_report
-from repro.core.cocoa import cocoa_solve
+from repro.core.cocoa import cocoa_pod_solve, cocoa_solve
 from repro.core.asyscd import asyscd_solve
 from repro.core.sharded import sharded_passcode_solve
 
@@ -42,6 +42,7 @@ __all__ = [
     "PasscodeResult",
     "backward_error_report",
     "cocoa_solve",
+    "cocoa_pod_solve",
     "asyscd_solve",
     "sharded_passcode_solve",
 ]

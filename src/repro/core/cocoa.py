@@ -29,6 +29,19 @@ class CocoaResult(NamedTuple):
     rounds: int
 
 
+class CocoaPodResult(NamedTuple):
+    """Result of ``cocoa_pod_solve`` — ``gaps``/``eps`` are aligned with
+    the pod solver's record schedule (every ``gap_every`` epochs plus
+    the final one); ``eps`` is the backward error ‖w(α) − ŵ‖ against
+    the (possibly stale) merged read view ŵ."""
+
+    alpha: jnp.ndarray
+    w: jnp.ndarray
+    gaps: jnp.ndarray
+    eps: jnp.ndarray
+    rounds: int
+
+
 @functools.partial(jax.jit, static_argnames=("loss", "n_partitions", "local_steps"))
 def _cocoa_round(X, sq_norms, alpha, w, part_idx, perm_keys, loss,
                  n_partitions, local_steps):
@@ -91,3 +104,112 @@ def cocoa_solve(
             gaps.append(float(duality_gap(alpha, X, loss)))
     # w tracked by CoCoA equals w(α) exactly (updates are lossless).
     return CocoaResult(alpha, w_of_alpha(X, alpha), jnp.asarray(gaps), outer_rounds)
+
+
+@functools.partial(jax.jit, static_argnames=("loss",))
+def _pod_local_epoch(X, sq_norms, alpha, w, base, nvalid, rows, loss):
+    """One pod's serial local epoch from the shared (α, w) snapshot:
+    the drawn local-row sequence ``rows`` (already masked to the valid
+    prefix and cycled over the tail, exactly like the device draw)
+    updated with locally-fresh w.  ``base`` is the pod's first global
+    row id, ``nvalid`` its real row count — a drawn slot past it (only
+    possible for a pod owning nothing but padding) takes an exact
+    zero-delta update, matching the solver's q←1 zero-row convention.
+    Returns (Δα on the full dual vector, Δw)."""
+    n = X.shape[0]
+
+    def body(t, carry):
+        a, w_loc = carry
+        ok = rows[t] < nvalid
+        i = jnp.minimum(base + rows[t], n - 1)
+        x = X[i]
+        delta = loss.delta(a[i], jnp.dot(w_loc, x), sq_norms[i])
+        delta = jnp.where(ok, delta, 0.0)
+        return a.at[i].add(delta), w_loc + delta * x
+
+    a1, w1 = jax.lax.fori_loop(0, rows.shape[0], body, (alpha, w))
+    return a1 - alpha, w1 - w
+
+
+def cocoa_pod_solve(
+    X,
+    loss,
+    *,
+    n_pods: int = 2,
+    epochs: int = 10,
+    block_size: int = 64,
+    pod_delay_rounds: int = 0,
+    seed: int = 0,
+    record: bool = True,
+    gap_every: int = 1,
+    alpha0=None,
+    w0=None,
+) -> CocoaPodResult:
+    """Serial host-loop oracle for the double-async pod solver
+    (DESIGN.md §13) — ``sharded_passcode_solve`` on a ``(pod=n_pods,
+    data=1)`` mesh replayed as plain Python: per epoch each pod runs
+    one serial local epoch (locally-fresh w) on its contiguous row
+    shard from the shared (α, w) snapshot, then α picks up 1/K of its
+    own pod's Δα and w picks up the pod-mean Δw through a
+    ``pod_delay_rounds``-deep FIFO (flushed after the last epoch).
+
+    The PRNG chain, the per-pod block draw
+    (``repro.core.sharded._device_block_perm_v`` with fleet index k of
+    n_pods keys) and the record schedule are the SPMD solver's own, so
+    at ``data=1`` the trajectories agree to float tolerance — the
+    equivalence spine of ``tests/test_sharded_pod.py``.
+    ``pod_delay_rounds=0`` with ``n_pods=K`` is a synchronous CoCoA
+    outer round over contiguous partitions.  Dense math throughout (an
+    ``EllMatrix`` input is densified): this is the trustworthy-but-slow
+    reference, not a fast path."""
+    from repro.core.sharded import _device_block_perm_v, _n_blocks
+
+    Xd = X.to_dense() if hasattr(X, "to_dense") else jnp.asarray(X)
+    n, d = Xd.shape
+    P = int(n_pods)
+    if P < 1:
+        raise ValueError(f"n_pods must be >= 1, got {P}")
+    delay = int(pod_delay_rounds)
+    if delay < 0:
+        raise ValueError(f"pod_delay_rounds must be >= 0, got {delay}")
+    n_pod_loc = max(-(-n // P), 1)
+    n_blocks = _n_blocks(n_pod_loc, block_size)
+    sq_norms = jnp.sum(Xd * Xd, axis=1)
+    scale = 1.0 / P
+    gap_every = max(int(gap_every), 1)
+    alpha = (jnp.zeros((n,), jnp.float32) if alpha0 is None
+             else jnp.asarray(alpha0, jnp.float32))
+    w = (jnp.zeros((d,), jnp.float32) if w0 is None
+         else jnp.asarray(w0, jnp.float32))
+    fifo = [jnp.zeros((d,), jnp.float32) for _ in range(delay)]
+    key = jax.random.PRNGKey(seed)
+    gaps, eps = [], []
+    for e in range(epochs):
+        key, sub = jax.random.split(key)
+        d_alpha = jnp.zeros_like(alpha)
+        g = jnp.zeros_like(w)
+        for kp in range(P):
+            v = min(max(n - kp * n_pod_loc, 1), n_pod_loc)
+            rows = _device_block_perm_v(sub, kp, P, n_pod_loc, v,
+                                        n_blocks,
+                                        block_size).reshape(-1)
+            da, dw = _pod_local_epoch(Xd, sq_norms, alpha, w,
+                                      kp * n_pod_loc,
+                                      max(n - kp * n_pod_loc, 0),
+                                      rows, loss)
+            d_alpha = d_alpha + da
+            g = g + dw
+        alpha = alpha + scale * d_alpha
+        g = scale * g
+        if delay == 0:
+            w = w + g
+        else:
+            w = w + fifo.pop(0)
+            fifo.append(g)
+        if record and ((e + 1) % gap_every == 0 or e == epochs - 1):
+            gaps.append(float(duality_gap(alpha, Xd, loss)))
+            eps.append(float(jnp.linalg.norm(w_of_alpha(Xd, alpha) - w)))
+    for g_in in fifo:
+        w = w + g_in  # flush the in-flight merges
+    return CocoaPodResult(alpha, w, jnp.asarray(gaps, jnp.float32),
+                          jnp.asarray(eps, jnp.float32), epochs)

@@ -103,18 +103,22 @@ from repro.data.sparse import (
     active_row_remap,
     dense_to_ell,
     ell_column_split,
+    pod_row_layout,
 )
 from repro.dist.compat import shard_map
 from repro.dist.mesh import (
     adaptive_delay_policy,
+    data_axes,
     dcd_ell_kernel_fits,
     dcd_feature_kernel_fits,
     dcd_kernel_fits,
     lane_pad,
     pipeline_overlap,
+    pod_merge_policy,
     resolve_self_tuning,
     solver_mesh,
     solver_mesh_2d,
+    solver_mesh_3d,
 )
 from repro.dist.sharding import named, replicated
 from repro.kernels.ops import (
@@ -282,9 +286,25 @@ def _device_block_perm(sub, my, p: int, n_loc: int, n_rows: int,
     pipelined and host-driven solves run bit-identical update sequences
     by construction (also asserted in ``tests/test_sharded_pipeline.
     py``)."""
+    v = jnp.clip(n_rows - my * n_loc, 1, n_loc)
+    return _device_block_perm_v(sub, my, p, n_loc, v, n_blocks,
+                                block_size)
+
+
+def _device_block_perm_v(sub, my, p: int, n_loc: int, v, n_blocks: int,
+                         block_size: int):
+    """``_device_block_perm`` with the valid-row count ``v`` passed in
+    directly instead of derived from a global row prefix — the shared
+    draw core.  The pod solver needs this because its validity is
+    per-pod (each pod carries its own padded tail, so validity is not
+    one global prefix): a device at (pod k, data my) passes the
+    flattened fleet index ``k·p + my`` into ``p = n_pods·p_data`` split
+    keys and its pod-local valid count, keeping the whole fleet on ONE
+    key chain (the serial oracle ``repro.core.cocoa.cocoa_pod_solve``
+    replays the same chain on the host, which is what makes
+    pod-vs-oracle agreement bit-structural).  DESIGN.md §13."""
     m = n_blocks * block_size
     keys = jax.random.split(sub, p)
-    v = jnp.clip(n_rows - my * n_loc, 1, n_loc)
     perm = jax.random.permutation(keys[my], n_loc)
     order = jnp.argsort(perm >= v)  # stable: valid ids first, in order
     sel = perm[order][jnp.arange(m) % v]
@@ -530,7 +550,7 @@ def _gap_slots(epochs: int, gap_every: int) -> int:
                if (e + 1) % gap_every == 0 or e == epochs - 1)
 
 
-def _make_gap_1d(loss, X_loc, ell: bool):
+def _make_gap_1d(loss, X_loc, ell: bool, axes=("data",)):
     """Per-device duality-gap contribution for the pipelined 1-D solve:
     gap(α) = ‖w(α)‖² + Σ_i [ℓ(w(α)ᵀx_i) + ℓ*(−α_i)] computed from the
     padded shards — padding rows are masked out of both sums and
@@ -544,7 +564,13 @@ def _make_gap_1d(loss, X_loc, ell: bool):
     The whole computation — psums included — is ``cond``-gated on
     ``rec``: the predicate is a function of the scanned epoch index
     only, so it is uniform across devices and skipped epochs are
-    collective-free (no d-sized all-reduce of zeros)."""
+    collective-free (no d-sized all-reduce of zeros).
+
+    ``axes`` names the row-reduction axes — ``("data",)`` on a plain
+    mesh, ``("pod", "data")`` on a pod mesh, where w(α) and the loss
+    sums reduce over the whole fleet while ``w_view`` is the pod's
+    (possibly stale) read view, making the recorded backward error the
+    pod-staleness distance (DESIGN.md §13)."""
     if ell:
         cols_loc, vals_loc = X_loc
 
@@ -566,11 +592,11 @@ def _make_gap_1d(loss, X_loc, ell: bool):
 
         def compute(args):
             am, w_view = args
-            wa = jax.lax.psum(rmv(am, d_run), "data")  # w(α), replicated
+            wa = jax.lax.psum(rmv(am, d_run), axes)  # w(α), replicated
             z = mv(wa)
             s = jnp.sum(jnp.where(
                 mask, loss.primal_loss(z) + loss.conj(am), 0.0))
-            g = jnp.dot(wa, wa) + jax.lax.psum(s, "data")
+            g = jnp.dot(wa, wa) + jax.lax.psum(s, axes)
             e = wa - w_view  # dummy/pad slots are 0 in both
             return g, jnp.sqrt(jnp.dot(e, e))
 
@@ -583,13 +609,14 @@ def _make_gap_1d(loss, X_loc, ell: bool):
     return gap
 
 
-def _make_gap_2d(loss, cols_loc, vals_loc, d1_loc: int):
+def _make_gap_2d(loss, cols_loc, vals_loc, d1_loc: int, axes=("data",)):
     """``_make_gap_1d`` for the 2-D mesh: w(α) stays sharded along
     ``model`` (each device scatters its local slice and psums over
-    ``data``), the per-row dot psums over ``model``, ‖w(α)‖² over
-    ``model`` — no replicated primal is ever formed, matching the
-    solve's own memory model.  The backward-error metric ‖w(α) − ŵ‖
-    likewise reduces shard-local squared distances over ``model``."""
+    ``data`` — over ``("pod", "data")`` on a pod mesh), the per-row dot
+    psums over ``model``, ‖w(α)‖² over ``model`` — no replicated primal
+    is ever formed, matching the solve's own memory model.  The
+    backward-error metric ‖w(α) − ŵ‖ likewise reduces shard-local
+    squared distances over ``model``."""
 
     def gap(rec, alpha_loc, mask, w_view):
         am = jnp.where(mask, alpha_loc, 0.0)
@@ -600,13 +627,13 @@ def _make_gap_2d(loss, cols_loc, vals_loc, d1_loc: int):
 
         def compute(args):
             am, w_view = args
-            wa = jax.lax.psum(rmv(am), "data")  # this shard's w(α) slice
+            wa = jax.lax.psum(rmv(am), axes)  # this shard's w(α) slice
             z = jax.lax.psum(jnp.sum(wa[cols_loc] * vals_loc, axis=1),
                              "model")
             s = jnp.sum(jnp.where(
                 mask, loss.primal_loss(z) + loss.conj(am), 0.0))
             g = (jax.lax.psum(jnp.dot(wa, wa), "model")
-                 + jax.lax.psum(s, "data"))
+                 + jax.lax.psum(s, axes))
             e = wa - w_view  # dummy slots are 0 in both
             return g, jnp.sqrt(jax.lax.psum(jnp.dot(e, e), "model"))
 
@@ -818,7 +845,7 @@ def _epoch_scan(rounds, gap, key, alpha_loc, w_loc, dw_prev, draw_perm, *,
                 epochs: int, n_gaps: int, gap_every: int, record: bool,
                 n_blocks: int, valid=None, shrink=None,
                 adaptive: bool = False, adaptive_ratio: float = 0.95,
-                delay0: int = 0, inflight0=None):
+                delay0: int = 0, inflight0=None, pod=None):
     """The epoch loop every pipelined device body runs: split the PRNG
     chain exactly like the host driver, draw this device's masked block
     permutation, run the round scan, and ``cond``-record the duality
@@ -871,14 +898,36 @@ def _epoch_scan(rounds, gap, key, alpha_loc, w_loc, dw_prev, draw_perm, *,
         its follow-on target, so the per-epoch prologue gram of the old
         schedule is paid once per solve.
 
+      ``pod = (n_pods, pod_delay_rounds)`` turns each epoch into a
+        Hybrid-DCA outer round (DESIGN.md §13): the pod-local pipelined
+        epoch runs from a shared (α, w) snapshot, its inner in-flight
+        carry is flushed into the pod's primal delta, and the pods'
+        deltas merge as a CoCoA β_K=1 average — α rescaled locally by
+        1/n_pods, w bumped by the pod-mean Δw — through a length-
+        ``pod_delay_rounds`` FIFO.  The aggregate issued at outer round
+        t lands at t+pod_delay_rounds, a bounded-staleness model of a
+        slow cross-pod (DCN) allreduce; ``pod_delay_rounds=0`` is a
+        synchronous CoCoA outer round.  With ``adaptive`` the delay
+        latch acts at the *pod* level: on a gap stall the whole FIFO
+        drains and merges stay synchronous for good.  The recorded
+        backward error is taken against the stale read view, so eps is
+        exactly the in-flight merge mass — the perturbed-regularizer
+        quantity of Table 2.
+
     Returns ``(alpha, w, dw, gaps, eps, active, delay)`` — the last
-    three aligned with ``gaps`` (zeros where a mode is off)."""
+    three aligned with ``gaps`` (zeros where a mode is off).  In pod
+    mode the dw slot carries the un-drained FIFO sum, so the caller's
+    final ``w + dw`` flush lands the in-flight merges."""
     shrink_on = shrink is not None
     if shrink_on:
         mask_fn, shrink_every, repack_thresh, n_rows, blk = shrink
         shrink_every = max(int(shrink_every), 1)
     overlap = inflight0 is not None
-    dyn = (shrink_on or adaptive) and not overlap
+    pod_on = pod is not None
+    if pod_on:
+        n_pods, pod_delay = pod
+        pod_scale = 1.0 / n_pods
+    dyn = (shrink_on or adaptive) and not overlap and not pod_on
 
     def epoch_body(carry, e):
         c = dict(carry)
@@ -926,7 +975,31 @@ def _epoch_scan(rounds, gap, key, alpha_loc, w_loc, dw_prev, draw_perm, *,
             n_run_e = jnp.int32(n_blocks)
             blocks_loc = draw_perm(sub)
         delay_flag = c["delay"] if adaptive else jnp.int32(delay0)
-        if overlap:
+        if pod_on:
+            a0, w0 = c["alpha"], c["w"]
+            a1, w1, dwi = rounds(a0, w0, jnp.zeros_like(w0), blocks_loc)
+            dw_pod = (w1 + dwi) - w0
+            c["alpha"] = a0 + pod_scale * (a1 - a0)
+            g_m = pod_scale * jax.lax.psum(dw_pod, "pod")
+            if pod_delay == 0:
+                c["w"] = w0 + g_m
+            else:
+                buf = c["pbuf"]
+                w_async = w0 + buf[0]
+                pbuf_async = jnp.concatenate([buf[1:], g_m[None]], 0)
+                if adaptive:
+                    # pod-level anneal latch: once the gap-trend
+                    # controller drops asynchrony, drain the whole
+                    # FIFO and merge synchronously from then on
+                    sync = delay_flag == 0
+                    c["w"] = jnp.where(sync, w0 + buf.sum(0) + g_m,
+                                       w_async)
+                    c["pbuf"] = jnp.where(sync, jnp.zeros_like(buf),
+                                          pbuf_async)
+                else:
+                    c["w"] = w_async
+                    c["pbuf"] = pbuf_async
+        elif overlap:
             # peek the next epoch's first block: the next iteration
             # splits the carried key exactly like this
             _, sub_next = jax.random.split(key)
@@ -1005,8 +1078,13 @@ def _epoch_scan(rounds, gap, key, alpha_loc, w_loc, dw_prev, draw_perm, *,
             carry["rpok"] = jnp.int32(1)  # sticky repack guard
     if overlap:
         carry["inflight"] = inflight0
+    if pod_on and pod_delay > 0:
+        carry["pbuf"] = jnp.zeros((pod_delay,) + w_loc.shape,
+                                  w_loc.dtype)
     out, _ = jax.lax.scan(epoch_body, carry, jnp.arange(epochs))
-    return (out["alpha"], out["w"], out["dw"], out["gaps"], out["epsb"],
+    dw_out = (out["pbuf"].sum(0) if pod_on and pod_delay > 0
+              else out["dw"])
+    return (out["alpha"], out["w"], dw_out, out["gaps"], out["epsb"],
             out["actb"], out["delayb"])
 
 
@@ -1018,7 +1096,8 @@ def make_sharded_pipeline(mesh: Mesh, loss, *, epochs: int,
                           shrink_every: int = 0, shrink_tol: float = 1e-3,
                           repack_threshold: float | None = None,
                           adaptive: bool = False,
-                          adaptive_ratio: float = 0.95):
+                          adaptive_ratio: float = 0.95,
+                          pod_delay_rounds: int = 0):
     """Build the single-dispatch multi-epoch solver for a 1-D
     ``("data",)`` mesh (DESIGN.md §11): per-epoch PRNG block draws,
     every block round, and duality-gap recording all run inside one
@@ -1048,29 +1127,49 @@ def make_sharded_pipeline(mesh: Mesh, loss, *, epochs: int,
     improvement threshold).  Validate combinations with
     ``repro.dist.mesh.resolve_self_tuning`` before calling.
 
+    On a mesh carrying a ``pod`` axis the builder raises the epoch loop
+    to the Hybrid-DCA outer round (DESIGN.md §13): rows shard jointly
+    over ``("pod", "data")``, every round psum stays pod-local (the
+    named ``"data"`` axis only reduces its own mesh dimension), and
+    each epoch ends in the CoCoA β_K=1 cross-pod merge, delayed by
+    ``pod_delay_rounds`` (validate with ``repro.dist.mesh.
+    pod_merge_policy`` before calling; ``adaptive`` then latches the
+    *pod* FIFO, not the inner delayed psum).
+
     Returns ``fn(X, sq_norms, alpha, w, key, carry_dw) → (alpha, w,
     carry_dw, gaps, eps, active, delay)``; with ``delay_rounds > 0`` (or
-    any self-tuning mode) the caller flushes the final in-flight
-    aggregate (``w + carry_dw``) exactly like the host driver."""
+    any self-tuning mode, or ``pod_delay_rounds > 0``) the caller
+    flushes the final in-flight aggregate (``w + carry_dw``) exactly
+    like the host driver."""
     axis = "data"
     p = mesh.shape["data"]
+    pod_on = "pod" in mesh.axis_names
+    pods = mesh.shape["pod"] if pod_on else 1
+    n_pod_loc = -(-n_rows // pods)
+    row_ax = ("pod", "data") if pod_on else axis
+    gap_axes = ("pod", "data") if pod_on else ("data",)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     gap_every = max(int(gap_every), 1)
     n_gaps = _gap_slots(epochs, gap_every) if record else 0
     shrink_on = shrink_every > 0
-    dyn = shrink_on or adaptive
+    dyn = (shrink_on or adaptive) and not pod_on
     block_update = _block_update_1d(loss, use_kernel, interpret, ell)
-    x_spec = (P(axis), P(axis)) if ell else P(axis)
+    x_spec = (P(row_ax), P(row_ax)) if ell else P(row_ax)
 
     def solve(X, sq_norms, alpha, w, key, carry_dw):
         def device_fn(X_loc, sq_loc, alpha_loc, w_rep, key, dw_prev):
             my = jax.lax.axis_index(axis)
             n_loc = alpha_loc.shape[0]
             d_run = w_rep.shape[0]
-            valid = jnp.arange(n_loc) < (n_rows - my * n_loc)
+            if pod_on:
+                kp = jax.lax.axis_index("pod")
+                npv = jnp.clip(n_rows - kp * n_pod_loc, 0, n_pod_loc)
+            else:
+                npv = n_rows
+            valid = jnp.arange(n_loc) < (npv - my * n_loc)
             if record:
-                gap_fn = _make_gap_1d(loss, X_loc, ell)
+                gap_fn = _make_gap_1d(loss, X_loc, ell, axes=gap_axes)
                 gap = lambda rec, a, wv: gap_fn(rec, a, valid, d_run, wv)
             else:
                 gap = None
@@ -1084,6 +1183,11 @@ def make_sharded_pipeline(mesh: Mesh, loss, *, epochs: int,
 
             def draw(sub, act=None, rp=False):
                 if act is None:
+                    if pod_on:
+                        v = jnp.clip(npv - my * n_loc, 1, n_loc)
+                        return _device_block_perm_v(
+                            sub, kp * p + my, pods * p, n_loc, v,
+                            n_blocks, block_size)
                     return _device_block_perm(sub, my, p, n_loc, n_rows,
                                               n_blocks, block_size)
                 return _device_block_perm_masked(sub, my, p, n_loc,
@@ -1103,13 +1207,16 @@ def make_sharded_pipeline(mesh: Mesh, loss, *, epochs: int,
                                valid=valid, shrink=shrink,
                                adaptive=adaptive,
                                adaptive_ratio=adaptive_ratio,
-                               delay0=delay_rounds)
+                               delay0=(int(pod_delay_rounds > 0)
+                                       if pod_on else delay_rounds),
+                               pod=((pods, pod_delay_rounds)
+                                    if pod_on else None))
 
         return shard_map(
             device_fn,
             mesh=mesh,
-            in_specs=(x_spec, P(axis), P(axis), P(), P(), P()),
-            out_specs=(P(axis), P(), P(), P(), P(), P(), P()),
+            in_specs=(x_spec, P(row_ax), P(row_ax), P(), P(), P()),
+            out_specs=(P(row_ax), P(), P(), P(), P(), P(), P()),
             check_vma=False,  # carries flip replicated→varying across psum
         )(X, sq_norms, alpha, w, key, carry_dw)
 
@@ -1127,7 +1234,8 @@ def make_sharded_pipeline_2d(mesh: Mesh, loss, *, epochs: int,
                              shrink_tol: float = 1e-3,
                              repack_threshold: float | None = None,
                              adaptive: bool = False,
-                             adaptive_ratio: float = 0.95):
+                             adaptive_ratio: float = 0.95,
+                             pod_delay_rounds: int = 0):
     """``make_sharded_pipeline`` for the 2-D ``("data", "model")`` mesh:
     the whole multi-epoch feature-sharded solve in one dispatch, with
     the same in-body per-device block draws (keyed on the ``data``-axis
@@ -1140,8 +1248,18 @@ def make_sharded_pipeline_2d(mesh: Mesh, loss, *, epochs: int,
     scan, so only one prologue gram is paid per solve.  The self-tuning
     knobs mirror the 1-D builder (shrinking composes with ``overlap``;
     repack and the adaptive controller need the dyn round scan and are
-    rejected alongside it by ``resolve_self_tuning``)."""
+    rejected alongside it by ``resolve_self_tuning``).  On a mesh
+    carrying a ``pod`` axis the same Hybrid-DCA outer round as the 1-D
+    builder applies (DESIGN.md §13): rows over ``("pod", "data")``,
+    pod-local ``data``/``model`` collectives, per-epoch cross-pod
+    merge of the per-shard primal slices delayed by
+    ``pod_delay_rounds``."""
     p = mesh.shape["data"]
+    pod_on = "pod" in mesh.axis_names
+    pods = mesh.shape["pod"] if pod_on else 1
+    n_pod_loc = -(-n_rows // pods)
+    row_ax = ("pod", "data") if pod_on else "data"
+    gap_axes = ("pod", "data") if pod_on else ("data",)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     overlap = pipeline_overlap(overlap, two_d=True, fused=use_kernel,
@@ -1149,7 +1267,7 @@ def make_sharded_pipeline_2d(mesh: Mesh, loss, *, epochs: int,
     gap_every = max(int(gap_every), 1)
     n_gaps = _gap_slots(epochs, gap_every) if record else 0
     shrink_on = shrink_every > 0
-    dyn = (shrink_on or adaptive) and not overlap
+    dyn = (shrink_on or adaptive) and not overlap and not pod_on
     block_update = _block_update_2d(loss, use_kernel, interpret)
 
     def solve(X, sq_norms, alpha, w, key, carry_dw):
@@ -1159,16 +1277,26 @@ def make_sharded_pipeline_2d(mesh: Mesh, loss, *, epochs: int,
             vals_loc = vals4[:, 0]
             my = jax.lax.axis_index("data")
             n_loc = alpha_loc.shape[0]
-            valid = jnp.arange(n_loc) < (n_rows - my * n_loc)
+            if pod_on:
+                kp = jax.lax.axis_index("pod")
+                npv = jnp.clip(n_rows - kp * n_pod_loc, 0, n_pod_loc)
+            else:
+                npv = n_rows
+            valid = jnp.arange(n_loc) < (npv - my * n_loc)
             if record:
                 gap_fn = _make_gap_2d(loss, cols_loc, vals_loc,
-                                      w_loc.shape[0])
+                                      w_loc.shape[0], axes=gap_axes)
                 gap = lambda rec, a, wv: gap_fn(rec, a, valid, wv)
             else:
                 gap = None
 
             def draw(sub, act=None, rp=False):
                 if act is None:
+                    if pod_on:
+                        v = jnp.clip(npv - my * n_loc, 1, n_loc)
+                        return _device_block_perm_v(
+                            sub, kp * p + my, pods * p, n_loc, v,
+                            n_blocks, block_size)
                     return _device_block_perm(sub, my, p, n_loc, n_rows,
                                               n_blocks, block_size)
                 return _device_block_perm_masked(sub, my, p, n_loc,
@@ -1208,16 +1336,19 @@ def make_sharded_pipeline_2d(mesh: Mesh, loss, *, epochs: int,
                                valid=valid, shrink=shrink,
                                adaptive=adaptive,
                                adaptive_ratio=adaptive_ratio,
-                               delay0=delay_rounds,
-                               inflight0=inflight0)
+                               delay0=(int(pod_delay_rounds > 0)
+                                       if pod_on else delay_rounds),
+                               inflight0=inflight0,
+                               pod=((pods, pod_delay_rounds)
+                                    if pod_on else None))
 
         cols, vals = X
         return shard_map(
             device_fn,
             mesh=mesh,
-            in_specs=(P("data", "model"), P("data", "model"), P("data"),
-                      P("data"), P("model"), P(), P("model")),
-            out_specs=(P("data"), P("model"), P("model"), P(), P(), P(),
+            in_specs=(P(row_ax, "model"), P(row_ax, "model"), P(row_ax),
+                      P(row_ax), P("model"), P(), P("model")),
+            out_specs=(P(row_ax), P("model"), P("model"), P(), P(), P(),
                       P()),
             check_vma=False,  # carries flip replicated→varying across psum
         )(cols, vals, sq_norms, alpha, w, key, carry_dw)
@@ -1271,8 +1402,11 @@ def sharded_passcode_solve(
     epochs: int = 10,
     block_size: int = 64,
     delay_rounds: int = 0,
+    pod_delay_rounds: int = 0,
     seed: int = 0,
     record: bool = True,
+    alpha0=None,
+    w0=None,
     use_kernel: bool | str = False,
     gap_every: int = 1,
     pipeline: bool = True,
@@ -1342,10 +1476,46 @@ def sharded_passcode_solve(
     (the backward-error ‖w(α) − ŵ‖ of ``core/backward_error.py``),
     ``active`` (global active fraction) and ``delay`` (effective flag),
     all aligned with ``gaps``.
+
+    A mesh with a ``pod`` outer axis (``mesh_axes=("pod", "data")`` or
+    ``("pod", "data", "model")``; build with ``repro.dist.mesh.
+    solver_mesh_3d``) runs the double-async Hybrid-DCA scheme
+    (DESIGN.md §13): each pod solves PASSCoDe on its own contiguous row
+    shard (``repro.data.sparse.pod_row_layout`` — duals never leave the
+    pod), and per epoch the pods' primal deltas merge as a CoCoA β_K=1
+    average through a ``pod_delay_rounds``-deep FIFO — the bounded-
+    staleness model of a slow cross-pod allreduce.  ``pod_delay_rounds
+    = 0`` is a synchronous CoCoA outer round (the ``repro.core.cocoa``
+    oracle); admission is validated by ``repro.dist.mesh.
+    pod_merge_policy`` (pipelined path only; no shrinking/overlap;
+    ``adaptive`` becomes the pod-level FIFO-drain latch).  ``alpha0`` /
+    ``w0`` warm-start the solve from carried state — re-blocked onto
+    whatever pod count the mesh has, which is how elastic pod
+    join/leave works (``tests/test_elastic.py``).
     """
     if mesh is None:
-        mesh = (solver_mesh_2d() if "model" in mesh_axes
-                else solver_mesh("data"))
+        if "pod" in mesh_axes:
+            n_dev = len(jax.devices())
+            pods = 2 if n_dev % 2 == 0 else 1
+            if "model" in mesh_axes:
+                m_ax = 2 if (n_dev // pods) % 2 == 0 else 1
+                mesh = solver_mesh_3d(pod=pods, model=m_ax)
+            else:
+                mesh = jax.make_mesh((pods, n_dev // pods),
+                                     ("pod", "data"))
+        elif "model" in mesh_axes:
+            mesh = solver_mesh_2d()
+        else:
+            mesh = solver_mesh("data")
+    pod_on = "pod" in mesh.axis_names
+    if pod_on:
+        pod_merge_policy(pod_delay_rounds, n_pods=mesh.shape["pod"],
+                         pipeline=pipeline, record=record,
+                         shrink_every=shrink_every, adaptive=adaptive,
+                         overlap=overlap)
+    elif pod_delay_rounds:
+        raise ValueError(
+            "pod_delay_rounds needs a mesh with a 'pod' axis")
     if "model" in mesh.axis_names:
         if "data" not in mesh.axis_names:
             # legacy 1-D ("model",) mesh → (data=1, model=m): serial in
@@ -1359,16 +1529,24 @@ def sharded_passcode_solve(
             shrink_tol=shrink_tol, repack=repack,
             repack_threshold=repack_threshold, adaptive=adaptive,
             adaptive_ratio=adaptive_ratio,
+            pod_delay_rounds=pod_delay_rounds, alpha0=alpha0, w0=w0,
         )
     p = mesh.shape["data"]
+    pods = mesh.shape["pod"] if pod_on else 1
     is_ell = isinstance(X_host, EllMatrix)
     if is_ell:
         n, d, k_max = X_host.n_rows, X_host.n_features, X_host.k_max
     else:
         n, d = X_host.shape
         k_max = None
-    n_loc = -(-n // p)  # ceil: the n % p tail is padded, not dropped
-    n_pad = n_loc * p
+    # ceil twice on a pod mesh: each pod's contiguous row shard carries
+    # its OWN padded tail (pod_row_layout), then subdivides over "data"
+    n_pod_loc = max(-(-n // pods), 1)
+    n_loc = -(-n_pod_loc // p)  # ceil: the tail is padded, not dropped
+    n_pad = pods * p * n_loc
+    if pod_on:
+        rowmap, _ = pod_row_layout(n, pods, per_pod_rows=p * n_loc)
+        ridx = jnp.asarray(rowmap.reshape(-1))  # global id, n = padding
     use_k, interpret = _resolve_kernel_mode(use_kernel, n_loc, d, k_max)
     # a 1-D mesh has no model-axis psum: "auto" resolves to no overlap,
     # an explicit True is an error
@@ -1377,26 +1555,41 @@ def sharded_passcode_solve(
     st = resolve_self_tuning(shrink_every, repack, adaptive,
                              overlap_knob=overlap, overlap_on=False,
                              pipeline=pipeline, record=record)
-    data_sh = named(mesh, "data")
+    data_sh = named(mesh, data_axes(mesh))
+    row_sh = named(mesh, data_axes(mesh), None)
     rep_sh = replicated(mesh)
     if is_ell:
         X_gap = X_host  # duality gap always reads the unpadded data
         # lane-pad k_max to the 128-lane tile when fused; pad rows to
         # n_pad with all-padding rows (index d, value 0)
         k_run = lane_pad(k_max) if use_k else k_max
-        cols = jnp.full((n_pad, k_run), d, jnp.int32)
-        cols = cols.at[:n, :k_max].set(jnp.asarray(X_host.indices, jnp.int32))
-        vals = jnp.zeros((n_pad, k_run), jnp.float32)
-        vals = vals.at[:n, :k_max].set(
-            jnp.asarray(X_host.values, jnp.float32))
         # padded primal with the dummy slot at index d (lane-padded for
         # clean tiling when fused); padding scatter-adds land there
         d_run = lane_pad(d + 1) if use_k else d + 1
-        sq_norms = jnp.ones((n_pad,), jnp.float32)
-        sq_norms = sq_norms.at[:n].set(X_host.row_sq_norms())
+        if pod_on:
+            # pod layout: gather through the flattened rowmap with a
+            # padding row appended at global index n — each pod's
+            # contiguous shard lands with its own padded tail
+            cols = jnp.full((n + 1, k_run), d, jnp.int32)
+            cols = cols.at[:n, :k_max].set(
+                jnp.asarray(X_host.indices, jnp.int32))[ridx]
+            vals = jnp.zeros((n + 1, k_run), jnp.float32)
+            vals = vals.at[:n, :k_max].set(
+                jnp.asarray(X_host.values, jnp.float32))[ridx]
+            sq_norms = jnp.ones((n + 1,), jnp.float32).at[:n].set(
+                X_host.row_sq_norms())[ridx]
+        else:
+            cols = jnp.full((n_pad, k_run), d, jnp.int32)
+            cols = cols.at[:n, :k_max].set(
+                jnp.asarray(X_host.indices, jnp.int32))
+            vals = jnp.zeros((n_pad, k_run), jnp.float32)
+            vals = vals.at[:n, :k_max].set(
+                jnp.asarray(X_host.values, jnp.float32))
+            sq_norms = jnp.ones((n_pad,), jnp.float32)
+            sq_norms = sq_norms.at[:n].set(X_host.row_sq_norms())
         X = (
-            jax.device_put(cols, named(mesh, "data", None)),
-            jax.device_put(vals, named(mesh, "data", None)),
+            jax.device_put(cols, row_sh),
+            jax.device_put(vals, row_sh),
         )
     else:
         X = jnp.asarray(X_host)
@@ -1406,15 +1599,30 @@ def sharded_passcode_solve(
         # returned w); row padding is all-zero rows with q set to 1 so
         # their (never-selected) update stays finite
         d_run = lane_pad(d) if use_k else d
-        if d_run != d or n_pad != n:
-            X = jnp.zeros((n_pad, d_run), X.dtype).at[:n, :d].set(X)
-        sq_norms = jnp.sum(X * X, axis=1)
-        if n_pad != n:
-            sq_norms = sq_norms.at[n:].set(1.0)
-        X = jax.device_put(X, named(mesh, "data", None))
+        if pod_on:
+            X = jnp.zeros((n + 1, d_run), X.dtype).at[:n, :d].set(X)
+            sq_norms = jnp.sum(X * X, axis=1).at[n].set(1.0)[ridx]
+            X = X[ridx]
+        else:
+            if d_run != d or n_pad != n:
+                X = jnp.zeros((n_pad, d_run), X.dtype).at[:n, :d].set(X)
+            sq_norms = jnp.sum(X * X, axis=1)
+            if n_pad != n:
+                sq_norms = sq_norms.at[n:].set(1.0)
+        X = jax.device_put(X, row_sh)
     sq_norms = jax.device_put(sq_norms, data_sh)
-    alpha = jax.device_put(jnp.zeros((n_pad,), jnp.float32), data_sh)
-    w = jax.device_put(jnp.zeros((d_run,), jnp.float32), rep_sh)
+    if alpha0 is None:
+        alpha = jnp.zeros((n_pad,), jnp.float32)
+    else:
+        a_full = jnp.zeros((n + 1,), jnp.float32).at[:n].set(
+            jnp.asarray(alpha0, jnp.float32).reshape(-1)[:n])
+        alpha = a_full[ridx] if pod_on else jnp.concatenate(
+            [a_full[:n], jnp.zeros((n_pad - n,), jnp.float32)])
+    alpha = jax.device_put(alpha, data_sh)
+    w = jnp.zeros((d_run,), jnp.float32)
+    if w0 is not None:
+        w = w.at[:d].set(jnp.asarray(w0, jnp.float32).reshape(-1)[:d])
+    w = jax.device_put(w, rep_sh)
     carry_dw = jax.device_put(jnp.zeros((d_run,), jnp.float32), rep_sh)
     n_blocks = _n_blocks(n_loc, block_size)
     key = jax.random.PRNGKey(seed)  # one chain for both paths
@@ -1427,11 +1635,18 @@ def sharded_passcode_solve(
             record=record, gap_every=gap_every,
             shrink_every=st.shrink_every, shrink_tol=shrink_tol,
             repack_threshold=(repack_threshold if st.repack else None),
-            adaptive=st.adaptive, adaptive_ratio=adaptive_ratio)
+            adaptive=st.adaptive, adaptive_ratio=adaptive_ratio,
+            pod_delay_rounds=pod_delay_rounds)
         alpha, w, carry_dw, gaps_arr, eps_arr, act_arr, delay_arr = (
             solve_fn(X, sq_norms, alpha, w, key, carry_dw))
-        if delay_rounds > 0 or st.shrink_every or st.adaptive:
+        if (delay_rounds > 0 or st.shrink_every or st.adaptive
+                or pod_delay_rounds > 0):
             w = w + carry_dw  # flush in-flight aggregate (0 when sync)
+        if pod_on:
+            # invert the rowmap gather: scatter each pod's valid rows
+            # back to their global ids (padding slots all land on the
+            # sliced-off index n)
+            alpha = jnp.zeros((n + 1,), jnp.float32).at[ridx].set(alpha)
         return ShardedResult(alpha[:n], w[:d], gaps_arr, epochs,
                              eps_arr, act_arr, delay_arr)
     epoch_fn = make_sharded_epoch(mesh, loss,
@@ -1468,27 +1683,42 @@ def _solve_feature_sharded(
     repack_threshold: float = 0.5,
     adaptive: bool = False,
     adaptive_ratio: float = 0.95,
+    pod_delay_rounds: int = 0,
+    alpha0=None,
+    w0=None,
 ) -> ShardedResult:
     """The 2-D (data × model) engine behind ``sharded_passcode_solve``
     (DESIGN.md §10).  Rows/duals block-parallelize along ``data``
     exactly like the 1-D path; w and the feature dimension shard along
     ``model`` as per-feature-shard local ELL slices
     (``ell_column_split``), streamed to devices without ever
-    materializing a dense (n, d) array."""
+    materializing a dense (n, d) array.  On a 3-D ``("pod", "data",
+    "model")`` mesh the same engine runs pod-locally under the
+    Hybrid-DCA outer merge (DESIGN.md §13)."""
     p, m = mesh.shape["data"], mesh.shape["model"]
+    pod_on = "pod" in mesh.axis_names
+    pods = mesh.shape["pod"] if pod_on else 1
     is_ell = isinstance(X_host, EllMatrix)
     ell = X_host if is_ell else dense_to_ell(X_host)
     X_gap = X_host if is_ell else jnp.asarray(X_host)
     n, d = ell.n_rows, ell.n_features
     fse = ell_column_split(ell, m)
     d_loc, k_loc = fse.d_loc, fse.k_loc
-    n_loc = -(-n // p)  # ceil: the n % p tail is padded, not dropped
-    n_pad = n_loc * p
+    # ceil twice on a pod mesh: each pod's contiguous row shard carries
+    # its OWN padded tail (pod_row_layout), then subdivides over "data"
+    n_pod_loc = max(-(-n // pods), 1)
+    n_loc = -(-n_pod_loc // p)  # ceil: the tail is padded, not dropped
+    n_pad = pods * p * n_loc
     use_k, interpret = _resolve_kernel_mode_feature(
         use_kernel, n_loc, k_loc, d_loc, block_size
     )
     overlap_on = pipeline_overlap(overlap, two_d=True, fused=use_k,
                                   delay_rounds=delay_rounds)
+    if pod_on:
+        # pod_merge_policy already rejected an explicit overlap=True;
+        # "auto" resolves off — the in-flight (base, Gram) psum is not
+        # valid under the merge-rescaled outer schedule
+        overlap_on = False
     st = resolve_self_tuning(shrink_every, repack, adaptive,
                              overlap_knob=overlap, overlap_on=overlap_on,
                              pipeline=pipeline, record=record)
@@ -1496,22 +1726,50 @@ def _solve_feature_sharded(
     # rows to n_pad with all-padding rows (local id d_loc, value 0)
     k_run = lane_pad(k_loc) if use_k else k_loc
     d1_loc = lane_pad(d_loc + 1) if use_k else d_loc + 1
-    cols = jnp.full((n_pad, m, k_run), d_loc, jnp.int32)
-    cols = cols.at[:n, :, :k_loc].set(jnp.asarray(fse.indices, jnp.int32))
-    vals = jnp.zeros((n_pad, m, k_run), jnp.float32)
-    vals = vals.at[:n, :, :k_loc].set(jnp.asarray(fse.values, jnp.float32))
-    sq_norms = jnp.ones((n_pad,), jnp.float32).at[:n].set(fse.row_sq_norms())
-    data_sh = named(mesh, "data")
+    if pod_on:
+        rowmap, _ = pod_row_layout(n, pods, per_pod_rows=p * n_loc)
+        ridx = jnp.asarray(rowmap.reshape(-1))  # global id, n = padding
+        cols = jnp.full((n + 1, m, k_run), d_loc, jnp.int32)
+        cols = cols.at[:n, :, :k_loc].set(
+            jnp.asarray(fse.indices, jnp.int32))[ridx]
+        vals = jnp.zeros((n + 1, m, k_run), jnp.float32)
+        vals = vals.at[:n, :, :k_loc].set(
+            jnp.asarray(fse.values, jnp.float32))[ridx]
+        sq_norms = jnp.ones((n + 1,), jnp.float32).at[:n].set(
+            fse.row_sq_norms())[ridx]
+    else:
+        cols = jnp.full((n_pad, m, k_run), d_loc, jnp.int32)
+        cols = cols.at[:n, :, :k_loc].set(
+            jnp.asarray(fse.indices, jnp.int32))
+        vals = jnp.zeros((n_pad, m, k_run), jnp.float32)
+        vals = vals.at[:n, :, :k_loc].set(
+            jnp.asarray(fse.values, jnp.float32))
+        sq_norms = jnp.ones((n_pad,), jnp.float32).at[:n].set(
+            fse.row_sq_norms())
+    data_sh = named(mesh, data_axes(mesh))
     model_sh = named(mesh, "model")
     X = (
-        jax.device_put(cols, named(mesh, "data", "model", None)),
-        jax.device_put(vals, named(mesh, "data", "model", None)),
+        jax.device_put(cols, named(mesh, data_axes(mesh), "model", None)),
+        jax.device_put(vals, named(mesh, data_axes(mesh), "model", None)),
     )
     sq_norms = jax.device_put(sq_norms, data_sh)
-    alpha = jax.device_put(jnp.zeros((n_pad,), jnp.float32), data_sh)
+    if alpha0 is None:
+        alpha = jnp.zeros((n_pad,), jnp.float32)
+    else:
+        a_full = jnp.zeros((n + 1,), jnp.float32).at[:n].set(
+            jnp.asarray(alpha0, jnp.float32).reshape(-1)[:n])
+        alpha = a_full[ridx] if pod_on else jnp.concatenate(
+            [a_full[:n], jnp.zeros((n_pad - n,), jnp.float32)])
+    alpha = jax.device_put(alpha, data_sh)
     # per-shard padded primal slices, concatenated: shard j owns
     # w[j·d₁_loc : (j+1)·d₁_loc), dummy slot at local index d_loc
-    w = jax.device_put(jnp.zeros((m * d1_loc,), jnp.float32), model_sh)
+    w = jnp.zeros((m * d1_loc,), jnp.float32)
+    if w0 is not None:
+        wp = jnp.zeros((m * d_loc,), jnp.float32).at[:d].set(
+            jnp.asarray(w0, jnp.float32).reshape(-1)[:d]).reshape(m, d_loc)
+        w = jnp.zeros((m, d1_loc), jnp.float32).at[:, :d_loc].set(
+            wp).reshape(-1)
+    w = jax.device_put(w, model_sh)
     carry_dw = jax.device_put(jnp.zeros((m * d1_loc,), jnp.float32),
                               model_sh)
     n_blocks = _n_blocks(n_loc, block_size)
@@ -1525,13 +1783,19 @@ def _solve_feature_sharded(
             gap_every=gap_every, overlap=st.overlap,
             shrink_every=st.shrink_every, shrink_tol=shrink_tol,
             repack_threshold=(repack_threshold if st.repack else None),
-            adaptive=st.adaptive, adaptive_ratio=adaptive_ratio)
+            adaptive=st.adaptive, adaptive_ratio=adaptive_ratio,
+            pod_delay_rounds=pod_delay_rounds)
         # identical block draws to the 1-D solver at equal p and seed,
         # so the two paths run the same update sequence
         alpha, w, carry_dw, gaps_arr, eps_arr, act_arr, delay_arr = (
             solve_fn(X, sq_norms, alpha, w, key, carry_dw))
-        if delay_rounds > 0 or st.shrink_every or st.adaptive:
+        if (delay_rounds > 0 or st.shrink_every or st.adaptive
+                or pod_delay_rounds > 0):
             w = w + carry_dw  # flush in-flight aggregate (0 when sync)
+        if pod_on:
+            # invert the rowmap gather: scatter each pod's valid rows
+            # back to their global ids (padding slots land on index n)
+            alpha = jnp.zeros((n + 1,), jnp.float32).at[ridx].set(alpha)
         w_full = w.reshape(m, d1_loc)[:, :d_loc].reshape(-1)[:d]
         return ShardedResult(alpha[:n], w_full, gaps_arr, epochs,
                              eps_arr, act_arr, delay_arr)

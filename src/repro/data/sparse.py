@@ -132,6 +132,115 @@ def active_row_remap(mask: jnp.ndarray):
     return ids, jnp.sum(mask.astype(jnp.int32))
 
 
+# ---------------------------------------------- row-partitioned ELL ----
+
+
+def pod_row_layout(n: int, n_pods: int, per_pod_rows: int | None = None):
+    """Contiguous row partition across pods (DESIGN.md §13).
+
+    Pod ``k`` owns global rows [k·n_pod_loc, (k+1)·n_pod_loc) with
+    ``n_pod_loc = ceil(n / n_pods)``; each pod's slice is padded to
+    ``per_pod_rows`` slots (the solver passes p·n_loc so the slice then
+    subdivides evenly over the pod's ``data`` devices).  Returns host
+    numpy ``(rowmap, mask)``: ``rowmap`` is (n_pods, per_pod_rows) int32
+    global row ids with the sentinel ``n`` marking padding slots — a
+    gather through it (with a padding row appended at index n) builds
+    the pod-sharded layout in one pass — and ``mask = rowmap < n``
+    covers exactly the valid rows.  Like ``dense_to_ell``'s ``k_max``,
+    forcing ``per_pod_rows`` larger is allowed (extra slots pad),
+    smaller is an error — dropping rows would silently corrupt X.
+    """
+    n = int(n)
+    n_pods = int(n_pods)
+    if n_pods < 1:
+        raise ValueError(f"n_pods must be >= 1, got {n_pods}")
+    n_pod_loc = max(-(-n // n_pods), 1)
+    if per_pod_rows is None:
+        per_pod_rows = n_pod_loc
+    elif per_pod_rows < n_pod_loc:
+        raise ValueError(
+            f"per_pod_rows={per_pod_rows} < rows per pod {n_pod_loc}")
+    base = (np.arange(n_pods, dtype=np.int64)[:, None] * n_pod_loc
+            + np.arange(per_pod_rows, dtype=np.int64)[None, :])
+    mask = (np.arange(per_pod_rows)[None, :]
+            < np.clip(n - np.arange(n_pods)[:, None] * n_pod_loc,
+                      0, n_pod_loc))
+    rowmap = np.where(mask, base, n).astype(np.int32)
+    return rowmap, mask
+
+
+class PodShardedEll(NamedTuple):
+    """ELL matrix row-partitioned into ``n_pods`` per-pod shards
+    (DESIGN.md §13) — the input layout of the double-async pod solver.
+
+    Pod ``k`` owns the contiguous global row range of
+    ``pod_row_layout``; padding slots hold all-padding rows (index ==
+    ``n_features``, value 0 — a zero row whose rank-1 update cannot
+    move w) and are marked False in ``row_mask``.
+
+    Attributes:
+        indices: (n_pods, rows_per_pod, k_max) int32 column ids.
+        values:  (n_pods, rows_per_pod, k_max) float32.
+        row_mask: (n_pods, rows_per_pod) bool — True exactly on rows
+            carrying real data.
+        n_features: static int, true feature dimension d.
+        n_rows: static int, true global row count n.
+    """
+
+    indices: jnp.ndarray
+    values: jnp.ndarray
+    row_mask: jnp.ndarray
+    n_features: int
+    n_rows: int
+
+    @property
+    def n_pods(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def rows_per_pod(self) -> int:
+        return self.indices.shape[1]
+
+    @property
+    def k_max(self) -> int:
+        return self.indices.shape[2]
+
+    def row_sq_norms(self) -> jnp.ndarray:
+        """(n_pods, rows_per_pod) ‖x_i‖² with padding rows forced to 1
+        so a (never-selected) padded update's δ stays finite — the same
+        q←1 convention as the sharded solver's tail padding."""
+        sq = jnp.sum(self.values * self.values, axis=2)
+        return jnp.where(self.row_mask, sq, 1.0)
+
+    def to_ell(self) -> EllMatrix:
+        """Reassemble the original ``EllMatrix`` — valid rows in (pod,
+        slot) order are exactly the original row order, so dropping the
+        masked padding is a lossless round-trip (host-side)."""
+        idx = np.asarray(self.indices).reshape(-1, self.k_max)
+        val = np.asarray(self.values).reshape(-1, self.k_max)
+        m = np.asarray(self.row_mask).reshape(-1)
+        return EllMatrix(
+            jnp.asarray(idx[m]), jnp.asarray(val[m]), self.n_features
+        )
+
+
+def ell_row_partition(mat: EllMatrix, n_pods: int,
+                      per_pod_rows: int | None = None) -> PodShardedEll:
+    """Partition an ``EllMatrix`` by contiguous row ranges into
+    ``n_pods`` per-pod shards (host-side, numpy, one gather — never
+    densifies).  The inverse is ``PodShardedEll.to_ell``."""
+    rowmap, mask = pod_row_layout(mat.n_rows, n_pods, per_pod_rows)
+    d, k = mat.n_features, mat.k_max
+    idx = np.concatenate(
+        [np.asarray(mat.indices), np.full((1, k), d, np.int32)], axis=0)
+    val = np.concatenate(
+        [np.asarray(mat.values), np.zeros((1, k), np.float32)], axis=0)
+    return PodShardedEll(
+        jnp.asarray(idx[rowmap]), jnp.asarray(val[rowmap]),
+        jnp.asarray(mask), d, mat.n_rows,
+    )
+
+
 # ------------------------------------------- column-partitioned ELL ----
 
 

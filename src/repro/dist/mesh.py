@@ -47,6 +47,85 @@ def solver_mesh_2d(data: int | None = None, model: int = 1,
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def solver_mesh_3d(pod: int = 2, data: int | None = None, model: int = 1,
+                   n_devices: int | None = None):
+    """3-D ``(pod, data, model)`` mesh for the double-async pod solver
+    (DESIGN.md §13): each pod runs the existing pipelined 1D/2D PASSCoDe
+    solve on its local row shard — rows/duals block-parallelize along
+    ``data``, features optionally along ``model``, both *pod-local*
+    collectives — while the ``pod`` axis carries only the CoCoA-style
+    Δw-average merge, a per-outer-round psum that the
+    ``pod_delay_rounds`` staleness knob may keep in flight.  ``data``
+    defaults to all remaining devices."""
+    n = n_devices or len(jax.devices())
+    if data is None:
+        data = max(n // (pod * model), 1)
+    return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+
+
+def pod_merge_policy(pod_delay_rounds: int, *, n_pods: int,
+                     pipeline: bool = True, record: bool = True,
+                     shrink_every: int = 0, adaptive: bool = False,
+                     overlap: bool | str = "auto") -> int:
+    """Admission/staleness rule for the cross-pod primal merge
+    (DESIGN.md §13) — the pod-level analogue of ``pipeline_overlap`` +
+    ``resolve_self_tuning``: whether (and how stale) the delayed
+    cross-pod allreduce may run is *distribution* policy, so it lives
+    here next to ``solver_mesh_3d``.
+
+    ``pod_delay_rounds = k`` lets the merge aggregate issued at outer
+    round t arrive at round t+k (a FIFO of k in-flight scaled psums —
+    modelling a DCN allreduce that takes k outer rounds), so every pod
+    reads a primal that lags the true w(α) by at most k merge rounds:
+    bounded staleness, PASSCoDe Assumption 1 lifted to the pod level.
+    ``k = 0`` is the synchronous CoCoA outer round exactly.
+
+    Returns the validated ``pod_delay_rounds``.  Raises on
+    combinations the pod merge scan does not (yet) compose with:
+
+      * ``pipeline=False`` — the outer merge scan only exists in the
+        pipelined (single-dispatch) path; the host driver has no
+        cross-epoch carry to keep a merge in flight in;
+      * ``shrink_every >= 1`` — the active mask lives in the dyn round
+        scan, which the pod path's static inner rounds do not run;
+      * ``overlap=True`` — the in-flight (base, Gram) psum is only
+        valid under the plain epoch schedule, not the merge-rescaled
+        one ("auto" resolves off, like everywhere else);
+      * ``adaptive`` without ``record`` — the pod-level anneal latch
+        (``adaptive_delay_policy`` on the recorded gap trend) needs the
+        gap buffer as its input signal.
+    """
+    k = int(pod_delay_rounds)
+    if k < 0:
+        raise ValueError(
+            f"pod_delay_rounds must be >= 0, got {pod_delay_rounds}")
+    if int(n_pods) < 1:
+        raise ValueError(f"n_pods must be >= 1, got {n_pods}")
+    if not pipeline:
+        raise ValueError(
+            "a pod mesh needs pipeline=True — the cross-pod merge scan "
+            "(and its in-flight delayed aggregates) lives in the "
+            "on-device epoch-scan carry; the host driver path has no "
+            "carry to put it in")
+    if shrink_every:
+        raise ValueError(
+            "shrink_every is not composed with the pod merge loop — "
+            "the active mask needs the dyn round scan, which the pod "
+            "path's static inner rounds do not run")
+    if overlap is True:
+        raise ValueError(
+            "overlap=True is not composed with the pod merge loop — "
+            "the in-flight (base, Gram) psum is only valid under the "
+            "plain epoch schedule, not the merge-rescaled one; leave "
+            "overlap='auto'")
+    if adaptive and not record:
+        raise ValueError(
+            "adaptive=True needs record=True — the pod-level anneal "
+            "latch reads the on-device duality-gap buffer as its input "
+            "signal")
+    return k
+
+
 def data_axes(mesh) -> tuple:
     """Axes that form the data-parallel dimension."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

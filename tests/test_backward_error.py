@@ -50,6 +50,25 @@ def test_eps_is_lost_updates(tiny_dense, hinge):
     assert float(r1.eps_norms[-1]) > 0.5
 
 
+def test_pod_staleness_eps_monotone(tiny_dense, hinge):
+    """The pod solver's recorded backward error is the same
+    perturbed-regularizer quantity at fleet scale (DESIGN.md §13):
+    eps = ‖w(α) − ŵ‖ against the stale merged read view is float noise
+    under synchronous merges (w == w(α) exactly) and grows with every
+    extra in-flight cross-pod merge round — Table 2's staleness→ε
+    relationship as an executable check."""
+    from repro.core import cocoa_pod_solve
+
+    X = np.asarray(tiny_dense)[:96]
+    eps = {}
+    for delay in (0, 2, 4):
+        o = cocoa_pod_solve(X, hinge, n_pods=4, epochs=8, block_size=16,
+                            pod_delay_rounds=delay, seed=0)
+        eps[delay] = float(np.mean(np.asarray(o.eps)))
+    assert eps[0] < 1e-4, eps
+    assert eps[2] >= eps[0] and eps[4] >= eps[2] - 1e-4, eps
+
+
 def test_report_fields_consistent(tiny_dense, tiny_test_dense, hinge):
     r = _wild_result(tiny_dense, hinge)
     rep = backward_error_report(tiny_dense, tiny_test_dense, hinge, r)
