@@ -12,7 +12,9 @@ section → BENCH_pipeline.json, driver-vs-pipeline dispatch overhead +
 overlap round; the adaptive self-tuning section → BENCH_adaptive.json,
 wall-clock-to-ε of shrinking/adaptive vs the static schedules;
 the pod double-async section → BENCH_pod.json, convergence-vs-staleness
-sweep + pod-axis mesh overhead).
+sweep + pod-axis mesh overhead; the resilient solver section →
+BENCH_resilience.json, checkpoint overhead per segment + recovery
+cost/epochs-lost per fault class).
 """
 
 from __future__ import annotations
@@ -59,6 +61,7 @@ def main() -> None:
         bench_kernel,
         bench_pipeline,
         bench_pod,
+        bench_resilience,
         bench_roofline,
         bench_scaling,
         bench_sparse,
@@ -76,6 +79,7 @@ def main() -> None:
         ("Multi-epoch pipeline", bench_pipeline, "pipeline"),
         ("Adaptive self-tuning solver", bench_adaptive, "adaptive"),
         ("Pod double-async solver", bench_pod, "pod"),
+        ("Resilient solver", bench_resilience, "resilience"),
         ("Roofline (dry-run artifacts)", bench_roofline, None),
     ]
     print("name,us_per_call,derived")

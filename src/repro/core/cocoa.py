@@ -40,6 +40,10 @@ class CocoaPodResult(NamedTuple):
     gaps: jnp.ndarray
     eps: jnp.ndarray
     rounds: int
+    # segmented-replay carry (``flush=False`` only): the live FIFO and
+    # PRNG key to hand the next segment (None on a flushed whole solve)
+    fifo: tuple | None = None
+    key: jnp.ndarray | None = None
 
 
 @functools.partial(jax.jit, static_argnames=("loss", "n_partitions", "local_steps"))
@@ -144,6 +148,11 @@ def cocoa_pod_solve(
     gap_every: int = 1,
     alpha0=None,
     w0=None,
+    epoch_start: int = 0,
+    total_epochs: int | None = None,
+    key0=None,
+    fifo0=None,
+    flush: bool = True,
 ) -> CocoaPodResult:
     """Serial host-loop oracle for the double-async pod solver
     (DESIGN.md §13) — ``sharded_passcode_solve`` on a ``(pod=n_pods,
@@ -161,7 +170,18 @@ def cocoa_pod_solve(
     ``pod_delay_rounds=0`` with ``n_pods=K`` is a synchronous CoCoA
     outer round over contiguous partitions.  Dense math throughout (an
     ``EllMatrix`` input is densified): this is the trustworthy-but-slow
-    reference, not a fast path."""
+    reference, not a fast path.
+
+    Segmented replay (the oracle side of ``repro.resilience``,
+    DESIGN.md §14): ``epoch_start``/``total_epochs`` run a slice
+    [epoch_start, epoch_start + epochs) of a ``total_epochs`` solve —
+    the record schedule keys on the *global* epoch, and the PRNG chain
+    fast-forwards ``epoch_start`` splits when no explicit ``key0`` is
+    handed in.  ``flush=False`` returns the live FIFO and key in the
+    result instead of flushing, so the next segment (fed ``alpha0``/
+    ``w0``/``fifo0``/``key0`` from this one) continues bit-identically
+    — chaining segments reproduces the whole solve exactly, which is
+    how a rollback replay is checked against the oracle."""
     from repro.core.sharded import _device_block_perm_v, _n_blocks
 
     Xd = X.to_dense() if hasattr(X, "to_dense") else jnp.asarray(X)
@@ -177,14 +197,27 @@ def cocoa_pod_solve(
     sq_norms = jnp.sum(Xd * Xd, axis=1)
     scale = 1.0 / P
     gap_every = max(int(gap_every), 1)
+    e0 = int(epoch_start)
+    total = int(total_epochs) if total_epochs is not None else e0 + epochs
     alpha = (jnp.zeros((n,), jnp.float32) if alpha0 is None
              else jnp.asarray(alpha0, jnp.float32))
     w = (jnp.zeros((d,), jnp.float32) if w0 is None
          else jnp.asarray(w0, jnp.float32))
-    fifo = [jnp.zeros((d,), jnp.float32) for _ in range(delay)]
-    key = jax.random.PRNGKey(seed)
+    if fifo0 is not None:
+        fifo = [jnp.asarray(g, jnp.float32) for g in fifo0]
+        if len(fifo) != delay:
+            raise ValueError(
+                f"fifo0 has depth {len(fifo)}, expected {delay}")
+    else:
+        fifo = [jnp.zeros((d,), jnp.float32) for _ in range(delay)]
+    if key0 is not None:
+        key = jnp.asarray(key0)
+    else:
+        key = jax.random.PRNGKey(seed)
+        for _ in range(e0):  # fast-forward the chain to epoch_start
+            key, _ = jax.random.split(key)
     gaps, eps = [], []
-    for e in range(epochs):
+    for e in range(e0, e0 + epochs):
         key, sub = jax.random.split(key)
         d_alpha = jnp.zeros_like(alpha)
         g = jnp.zeros_like(w)
@@ -206,9 +239,13 @@ def cocoa_pod_solve(
         else:
             w = w + fifo.pop(0)
             fifo.append(g)
-        if record and ((e + 1) % gap_every == 0 or e == epochs - 1):
+        if record and ((e + 1) % gap_every == 0 or e == total - 1):
             gaps.append(float(duality_gap(alpha, Xd, loss)))
             eps.append(float(jnp.linalg.norm(w_of_alpha(Xd, alpha) - w)))
+    if not flush:
+        return CocoaPodResult(alpha, w, jnp.asarray(gaps, jnp.float32),
+                              jnp.asarray(eps, jnp.float32), epochs,
+                              fifo=tuple(fifo), key=key)
     for g_in in fifo:
         w = w + g_in  # flush the in-flight merges
     return CocoaPodResult(alpha, w, jnp.asarray(gaps, jnp.float32),

@@ -93,6 +93,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
@@ -119,6 +120,7 @@ from repro.dist.mesh import (
     solver_mesh,
     solver_mesh_2d,
     solver_mesh_3d,
+    watchdog_trip,
 )
 from repro.dist.sharding import named, replicated
 from repro.kernels.ops import (
@@ -841,11 +843,12 @@ def make_sharded_epoch_2d(mesh: Mesh, loss, *, delay_rounds: int = 0,
 # --------------------------------------------------- pipeline builders ----
 
 
-def _epoch_scan(rounds, gap, key, alpha_loc, w_loc, dw_prev, draw_perm, *,
-                epochs: int, n_gaps: int, gap_every: int, record: bool,
-                n_blocks: int, valid=None, shrink=None,
+def _epoch_scan(rounds, gap, carry, draw_perm, *, epochs: int,
+                total_epochs: int, e0, n_gaps: int, gap_every: int,
+                record: bool, n_blocks: int, valid=None, shrink=None,
                 adaptive: bool = False, adaptive_ratio: float = 0.95,
-                delay0: int = 0, inflight0=None, pod=None):
+                delay0: int = 0, overlap: bool = False, pod=None,
+                watchdog=None, fault=None):
     """The epoch loop every pipelined device body runs: split the PRNG
     chain exactly like the host driver, draw this device's masked block
     permutation, run the round scan, and ``cond``-record the duality
@@ -890,8 +893,9 @@ def _epoch_scan(rounds, gap, key, alpha_loc, w_loc, dw_prev, draw_perm, *,
         τ × 1/frac), so once the gap stalls the solve falls back to
         full-length epochs for good.
 
-      ``inflight0`` (the overlapped 2-D round) threads the in-flight
-        (base, Gram) aggregate across epoch boundaries: each epoch
+      ``overlap`` (the overlapped 2-D round) threads the in-flight
+        (base, Gram) aggregate — ``carry["inflight"]`` — across epoch
+        boundaries: each epoch
         peeks the *next* epoch's first block through the deterministic
         PRNG chain (``_, sub_next = split(key)`` is exactly what the
         next iteration's draw will consume) and hands the round scan
@@ -914,26 +918,33 @@ def _epoch_scan(rounds, gap, key, alpha_loc, w_loc, dw_prev, draw_perm, *,
         exactly the in-flight merge mass — the perturbed-regularizer
         quantity of Table 2.
 
-    Returns ``(alpha, w, dw, gaps, eps, active, delay)`` — the last
-    three aligned with ``gaps`` (zeros where a mode is off).  In pod
-    mode the dw slot carries the un-drained FIFO sum, so the caller's
-    final ``w + dw`` flush lands the in-flight merges."""
+    Segmentation (DESIGN.md §14): the caller hands in the FULL carried
+    state (``carry``, built by ``_fresh_carry`` or restored from a
+    checkpoint) and gets the full carried state back — the scan runs
+    ``epochs`` iterations with *global* epoch indices ``e0..e0+epochs``
+    against a ``total_epochs``-long schedule, so the record slots, the
+    final-epoch unshrunk pass, and any armed fault all key on the
+    global epoch and a segmented run replays the uninterrupted one
+    bit-for-bit.  ``watchdog = (bad_fn, blowup, floor)`` adds the
+    sticky ``health``/``gph``/``eph`` trio; ``fault`` is the compiled
+    ``(nan_e, drop_e, dup_e)`` chaos triple (−1 = off)."""
     shrink_on = shrink is not None
     if shrink_on:
         mask_fn, shrink_every, repack_thresh, n_rows, blk = shrink
         shrink_every = max(int(shrink_every), 1)
-    overlap = inflight0 is not None
     pod_on = pod is not None
     if pod_on:
         n_pods, pod_delay = pod
         pod_scale = 1.0 / n_pods
     dyn = (shrink_on or adaptive) and not overlap and not pod_on
+    if fault is not None:
+        nan_e, drop_e, dup_e = fault
 
     def epoch_body(carry, e):
         c = dict(carry)
         key, sub = jax.random.split(c["key"])
         c["key"] = key
-        final = e == epochs - 1
+        final = e == total_epochs - 1
         if shrink_on:
             w_view = c["w"] + c["dw"]
 
@@ -981,6 +992,19 @@ def _epoch_scan(rounds, gap, key, alpha_loc, w_loc, dw_prev, draw_perm, *,
             dw_pod = (w1 + dwi) - w0
             c["alpha"] = a0 + pod_scale * (a1 - a0)
             g_m = pod_scale * jax.lax.psum(dw_pod, "pod")
+            if fault is not None:
+                # declarative chaos (DESIGN.md §14): poison/drop/dup THIS
+                # outer round's cross-pod merge — -1 compiles each away
+                if nan_e >= 0:
+                    g_m = g_m + jnp.where(e == nan_e,
+                                          jnp.float32(jnp.nan),
+                                          jnp.float32(0.0))
+                if drop_e >= 0:
+                    g_m = g_m * jnp.where(e == drop_e, jnp.float32(0.0),
+                                          jnp.float32(1.0))
+                if dup_e >= 0:
+                    g_m = g_m * jnp.where(e == dup_e, jnp.float32(2.0),
+                                          jnp.float32(1.0))
             if pod_delay == 0:
                 c["w"] = w0 + g_m
             else:
@@ -1015,9 +1039,15 @@ def _epoch_scan(rounds, gap, key, alpha_loc, w_loc, dw_prev, draw_perm, *,
         else:
             c["alpha"], c["w"], c["dw"] = rounds(
                 c["alpha"], c["w"], c["dw"], blocks_loc)
+        if fault is not None and not pod_on and nan_e >= 0:
+            # single-pod chaos: poison the primal at epoch nan_e —
+            # models a corrupted "data"/"model" psum reaching w
+            c["w"] = c["w"] + jnp.where(e == nan_e, jnp.float32(jnp.nan),
+                                        jnp.float32(0.0))
         if record:
             rec = ((e + 1) % gap_every == 0) | final
-            g, eps = gap(rec, c["alpha"], c["w"] + c["dw"])
+            w_view = c["w"] + c["dw"]
+            g, eps = gap(rec, c["alpha"], w_view)
             slot = c["slot"]
             c["gaps"] = jnp.where(rec, c["gaps"].at[slot].set(g),
                                   c["gaps"])
@@ -1054,20 +1084,76 @@ def _epoch_scan(rounds, gap, key, alpha_loc, w_loc, dw_prev, draw_perm, *,
                     c["rpok"] = jnp.where(rec, c["rpok"] * stall,
                                           c["rpok"])
                 c["gapprev"] = jnp.where(rec, g, c["gapprev"])
+            if watchdog is not None:
+                # on-device divergence watchdog (DESIGN.md §14): a
+                # NaN/Inf census of (α, ŵ) plus the gap/eps trend test,
+                # folded into a sticky per-segment health code.  The
+                # healthy-baseline pair only advances on clean records,
+                # so a blow-up is judged against the last good state.
+                bad_fn, wd_blowup, wd_floor = watchdog
+                nb = jax.lax.cond(
+                    rec, lambda a: bad_fn(*a),
+                    lambda a: jnp.int32(0), (c["alpha"], w_view))
+                code = watchdog_trip(c["gph"], g, c["eph"], eps, nb,
+                                     blowup=wd_blowup, floor=wd_floor)
+                ok = rec & (code == 0)
+                c["health"] = jnp.where(
+                    rec, jnp.maximum(c["health"], code), c["health"])
+                c["gph"] = jnp.where(ok, g, c["gph"])
+                c["eph"] = jnp.where(ok, eps, c["eph"])
             c["slot"] = slot + rec.astype(jnp.int32)
         return c, ()
 
+    out, _ = jax.lax.scan(epoch_body, carry,
+                          jnp.arange(epochs, dtype=jnp.int32) + e0)
+    return out
+
+
+def pipeline_state_keys(*, dyn: bool, shrink_on: bool, adaptive: bool,
+                        pod_fifo: int, watchdog: bool):
+    """The key set of the pipelined solver's carried-state dict
+    (``SolverState``, DESIGN.md §14) for a given knob combination.
+    This IS the checkpoint schema: the segmented solver persists exactly
+    these leaves, and resume validates against them.  ``inflight`` is
+    deliberately absent — the overlapped 2-D aggregate is a pure
+    function of the carried (w, key) and is reconstructed at segment
+    entry (see the builder prologue)."""
+    keys = ["alpha", "w", "dw", "key", "gaps", "epsb", "actb", "delayb",
+            "slot", "epoch"]
+    if dyn:
+        keys.append("dwo")
+    if shrink_on:
+        keys += ["act", "frac", "nrun", "rp"]
+    if adaptive:
+        keys += ["delay", "gapprev"]
+        if shrink_on:
+            keys.append("rpok")
+    if pod_fifo:
+        keys.append("pbuf")
+    if watchdog:
+        keys += ["health", "gph", "eph"]
+    return keys
+
+
+def _fresh_carry(alpha_loc, w_loc, dw_prev, key, n_gaps, *, n_blocks,
+                 dyn, shrink_on, adaptive, delay0, pod_fifo=0,
+                 watchdog=False):
+    """Epoch-0 carried state for ``_epoch_scan`` — the one place the
+    scan state's initial values live, shared by the legacy whole-solve
+    entry points and ``init_pipeline_state``.  The shrink ``act`` mask
+    is NOT seeded here: inside a shard_map body the caller seeds it
+    from its device-local ``valid`` (the global-state path seeds the
+    global mask instead)."""
     carry = {"alpha": alpha_loc, "w": w_loc, "dw": dw_prev, "key": key,
              "gaps": jnp.zeros((n_gaps,), jnp.float32),
              "epsb": jnp.zeros((n_gaps,), jnp.float32),
              "actb": jnp.zeros((n_gaps,), jnp.float32),
              "delayb": jnp.zeros((n_gaps,), jnp.float32),
-             "slot": jnp.int32(0)}
+             "slot": jnp.int32(0), "epoch": jnp.int32(0)}
     if dyn:
         # the dyn delayed mode's own-updates view (real stale reads)
         carry["dwo"] = jnp.zeros_like(w_loc)
     if shrink_on:
-        carry["act"] = valid
         carry["frac"] = jnp.float32(1.0)
         carry["nrun"] = jnp.int32(n_blocks)
         carry["rp"] = jnp.zeros((), bool)
@@ -1076,16 +1162,51 @@ def _epoch_scan(rounds, gap, key, alpha_loc, w_loc, dw_prev, draw_perm, *,
         carry["gapprev"] = jnp.float32(jnp.inf)
         if shrink_on:
             carry["rpok"] = jnp.int32(1)  # sticky repack guard
-    if overlap:
-        carry["inflight"] = inflight0
-    if pod_on and pod_delay > 0:
-        carry["pbuf"] = jnp.zeros((pod_delay,) + w_loc.shape,
+    if pod_fifo:
+        carry["pbuf"] = jnp.zeros((pod_fifo,) + w_loc.shape,
                                   w_loc.dtype)
-    out, _ = jax.lax.scan(epoch_body, carry, jnp.arange(epochs))
-    dw_out = (out["pbuf"].sum(0) if pod_on and pod_delay > 0
-              else out["dw"])
-    return (out["alpha"], out["w"], dw_out, out["gaps"], out["epsb"],
-            out["actb"], out["delayb"])
+    if watchdog:
+        carry["health"] = jnp.int32(0)
+        carry["gph"] = jnp.float32(jnp.inf)
+        carry["eph"] = jnp.float32(jnp.inf)
+    return carry
+
+
+def _make_badcount(axes, two_d: bool):
+    """Watchdog NaN/Inf census, run only on record epochs: count
+    non-finite entries of the dual shard (psummed over the row axes so
+    every device sees the global count) and of the primal view (psummed
+    over ``model`` on the 2-D mesh; replicated on 1-D)."""
+
+    def bad(alpha_loc, w_view):
+        ba = jax.lax.psum(
+            jnp.sum((~jnp.isfinite(alpha_loc)).astype(jnp.int32)), axes)
+        bw = jnp.sum((~jnp.isfinite(w_view)).astype(jnp.int32))
+        if two_d:
+            bw = jax.lax.psum(bw, "model")
+        return ba + bw
+
+    return bad
+
+
+def _check_pipeline_chaos(*, record, watchdog, fault, pod_on):
+    """Shared builder-argument validation for the resilience knobs."""
+    if watchdog and not record:
+        raise ValueError(
+            "watchdog=True requires record=True: the divergence test "
+            "keys on the recorded gap/eps schedule (DESIGN.md §14)")
+    if fault is None:
+        return None
+    fault = tuple(int(v) for v in fault)
+    if len(fault) != 3:
+        raise ValueError("fault must be (nan_epoch, drop_epoch, "
+                         "dup_epoch), -1 disabling each")
+    if not pod_on and (fault[1] >= 0 or fault[2] >= 0):
+        raise ValueError(
+            "drop/dup merge faults target the cross-pod merge and need "
+            "a pod mesh; on a single-pod mesh only the NaN-psum fault "
+            "is meaningful")
+    return fault
 
 
 def make_sharded_pipeline(mesh: Mesh, loss, *, epochs: int,
@@ -1097,7 +1218,13 @@ def make_sharded_pipeline(mesh: Mesh, loss, *, epochs: int,
                           repack_threshold: float | None = None,
                           adaptive: bool = False,
                           adaptive_ratio: float = 0.95,
-                          pod_delay_rounds: int = 0):
+                          pod_delay_rounds: int = 0,
+                          total_epochs: int | None = None,
+                          segmented: bool = False,
+                          watchdog: bool = False,
+                          watchdog_blowup: float = 4.0,
+                          watchdog_floor: float = 1e-3,
+                          fault=None):
     """Build the single-dispatch multi-epoch solver for a 1-D
     ``("data",)`` mesh (DESIGN.md §11): per-epoch PRNG block draws,
     every block round, and duality-gap recording all run inside one
@@ -1140,7 +1267,16 @@ def make_sharded_pipeline(mesh: Mesh, loss, *, epochs: int,
     carry_dw, gaps, eps, active, delay)``; with ``delay_rounds > 0`` (or
     any self-tuning mode, or ``pod_delay_rounds > 0``) the caller
     flushes the final in-flight aggregate (``w + carry_dw``) exactly
-    like the host driver."""
+    like the host driver.
+
+    Resilience mode (DESIGN.md §14): with ``segmented=True`` the built
+    function is instead ``fn(X, sq_norms, st) → st`` over the full
+    ``SolverState`` dict (``pipeline_state_keys``), running ``epochs``
+    epochs of a ``total_epochs``-long schedule starting at
+    ``st["epoch"]`` — chained segments replay the whole-solve dispatch
+    bit-for-bit.  ``watchdog=True`` adds the sticky on-device health
+    code; ``fault`` compiles a ``(nan_e, drop_e, dup_e)`` chaos triple
+    into the scan."""
     axis = "data"
     p = mesh.shape["data"]
     pod_on = "pod" in mesh.axis_names
@@ -1151,66 +1287,103 @@ def make_sharded_pipeline(mesh: Mesh, loss, *, epochs: int,
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     gap_every = max(int(gap_every), 1)
-    n_gaps = _gap_slots(epochs, gap_every) if record else 0
+    total = int(total_epochs) if total_epochs is not None else int(epochs)
+    n_gaps = _gap_slots(total, gap_every) if record else 0
     shrink_on = shrink_every > 0
     dyn = (shrink_on or adaptive) and not pod_on
+    fault = _check_pipeline_chaos(record=record, watchdog=watchdog,
+                                  fault=fault, pod_on=pod_on)
     block_update = _block_update_1d(loss, use_kernel, interpret, ell)
     x_spec = (P(row_ax), P(row_ax)) if ell else P(row_ax)
+    delay0 = int(pod_delay_rounds > 0) if pod_on else delay_rounds
+    pod_fifo = pod_delay_rounds if (pod_on and pod_delay_rounds > 0) else 0
+
+    def device_body(X_loc, sq_loc, st):
+        my = jax.lax.axis_index(axis)
+        n_loc = st["alpha"].shape[0]
+        d_run = st["w"].shape[0]
+        if pod_on:
+            kp = jax.lax.axis_index("pod")
+            npv = jnp.clip(n_rows - kp * n_pod_loc, 0, n_pod_loc)
+        else:
+            npv = n_rows
+        valid = jnp.arange(n_loc) < (npv - my * n_loc)
+        if record:
+            gap_fn = _make_gap_1d(loss, X_loc, ell, axes=gap_axes)
+            gap = lambda rec, a, wv: gap_fn(rec, a, valid, d_run, wv)
+        else:
+            gap = None
+        bu = lambda a, w_eff, idx, act=None: block_update(
+            X_loc, sq_loc, a, w_eff, idx, act)
+        if dyn:
+            rounds = functools.partial(_scan_rounds_dyn, bu)
+        else:
+            rounds = functools.partial(_scan_rounds, bu,
+                                       delay_rounds=delay_rounds)
+
+        def draw(sub, act=None, rp=False):
+            if act is None:
+                if pod_on:
+                    v = jnp.clip(npv - my * n_loc, 1, n_loc)
+                    return _device_block_perm_v(
+                        sub, kp * p + my, pods * p, n_loc, v,
+                        n_blocks, block_size)
+                return _device_block_perm(sub, my, p, n_loc, n_rows,
+                                          n_blocks, block_size)
+            return _device_block_perm_masked(sub, my, p, n_loc,
+                                             n_blocks, block_size,
+                                             act, rp)
+
+        shrink = None
+        if shrink_on:
+            shrink = (_make_shrink_1d(loss, X_loc, ell, shrink_tol,
+                                      valid),
+                      shrink_every, repack_threshold, n_rows,
+                      block_size)
+        carry = dict(st)
+        e0 = carry.pop("epoch")
+        if shrink_on and "act" not in carry:
+            carry["act"] = valid
+        out = _epoch_scan(rounds, gap, carry, draw, epochs=epochs,
+                          total_epochs=total, e0=e0, n_gaps=n_gaps,
+                          gap_every=gap_every, record=record,
+                          n_blocks=n_blocks, valid=valid, shrink=shrink,
+                          adaptive=adaptive,
+                          adaptive_ratio=adaptive_ratio, delay0=delay0,
+                          pod=((pods, pod_delay_rounds)
+                               if pod_on else None),
+                          watchdog=((_make_badcount(gap_axes, False),
+                                     watchdog_blowup, watchdog_floor)
+                                    if watchdog else None),
+                          fault=fault)
+        out["epoch"] = e0 + jnp.int32(epochs)
+        return out
+
+    if segmented:
+        def solve_seg(X, sq_norms, st):
+            st_specs = {k: P(row_ax) if k in ("alpha", "act") else P()
+                        for k in st}
+            return shard_map(
+                device_body,
+                mesh=mesh,
+                in_specs=(x_spec, P(row_ax), st_specs),
+                out_specs=st_specs,
+                check_vma=False,
+            )(X, sq_norms, st)
+
+        return jax.jit(solve_seg)
 
     def solve(X, sq_norms, alpha, w, key, carry_dw):
         def device_fn(X_loc, sq_loc, alpha_loc, w_rep, key, dw_prev):
-            my = jax.lax.axis_index(axis)
-            n_loc = alpha_loc.shape[0]
-            d_run = w_rep.shape[0]
-            if pod_on:
-                kp = jax.lax.axis_index("pod")
-                npv = jnp.clip(n_rows - kp * n_pod_loc, 0, n_pod_loc)
-            else:
-                npv = n_rows
-            valid = jnp.arange(n_loc) < (npv - my * n_loc)
-            if record:
-                gap_fn = _make_gap_1d(loss, X_loc, ell, axes=gap_axes)
-                gap = lambda rec, a, wv: gap_fn(rec, a, valid, d_run, wv)
-            else:
-                gap = None
-            bu = lambda a, w_eff, idx, act=None: block_update(
-                X_loc, sq_loc, a, w_eff, idx, act)
-            if dyn:
-                rounds = functools.partial(_scan_rounds_dyn, bu)
-            else:
-                rounds = functools.partial(_scan_rounds, bu,
-                                           delay_rounds=delay_rounds)
-
-            def draw(sub, act=None, rp=False):
-                if act is None:
-                    if pod_on:
-                        v = jnp.clip(npv - my * n_loc, 1, n_loc)
-                        return _device_block_perm_v(
-                            sub, kp * p + my, pods * p, n_loc, v,
-                            n_blocks, block_size)
-                    return _device_block_perm(sub, my, p, n_loc, n_rows,
-                                              n_blocks, block_size)
-                return _device_block_perm_masked(sub, my, p, n_loc,
-                                                 n_blocks, block_size,
-                                                 act, rp)
-
-            shrink = None
-            if shrink_on:
-                shrink = (_make_shrink_1d(loss, X_loc, ell, shrink_tol,
-                                          valid),
-                          shrink_every, repack_threshold, n_rows,
-                          block_size)
-            return _epoch_scan(rounds, gap, key, alpha_loc, w_rep,
-                               dw_prev, draw, epochs=epochs,
-                               n_gaps=n_gaps, gap_every=gap_every,
-                               record=record, n_blocks=n_blocks,
-                               valid=valid, shrink=shrink,
-                               adaptive=adaptive,
-                               adaptive_ratio=adaptive_ratio,
-                               delay0=(int(pod_delay_rounds > 0)
-                                       if pod_on else delay_rounds),
-                               pod=((pods, pod_delay_rounds)
-                                    if pod_on else None))
+            st = _fresh_carry(alpha_loc, w_rep, dw_prev, key, n_gaps,
+                              n_blocks=n_blocks, dyn=dyn,
+                              shrink_on=shrink_on, adaptive=adaptive,
+                              delay0=delay0, pod_fifo=pod_fifo,
+                              watchdog=watchdog)
+            out = device_body(X_loc, sq_loc, st)
+            dw_out = out["pbuf"].sum(0) if pod_fifo else out["dw"]
+            return (out["alpha"], out["w"], dw_out, out["gaps"],
+                    out["epsb"], out["actb"], out["delayb"])
 
         return shard_map(
             device_fn,
@@ -1235,7 +1408,13 @@ def make_sharded_pipeline_2d(mesh: Mesh, loss, *, epochs: int,
                              repack_threshold: float | None = None,
                              adaptive: bool = False,
                              adaptive_ratio: float = 0.95,
-                             pod_delay_rounds: int = 0):
+                             pod_delay_rounds: int = 0,
+                             total_epochs: int | None = None,
+                             segmented: bool = False,
+                             watchdog: bool = False,
+                             watchdog_blowup: float = 4.0,
+                             watchdog_floor: float = 1e-3,
+                             fault=None):
     """``make_sharded_pipeline`` for the 2-D ``("data", "model")`` mesh:
     the whole multi-epoch feature-sharded solve in one dispatch, with
     the same in-body per-device block draws (keyed on the ``data``-axis
@@ -1253,7 +1432,15 @@ def make_sharded_pipeline_2d(mesh: Mesh, loss, *, epochs: int,
     builder applies (DESIGN.md §13): rows over ``("pod", "data")``,
     pod-local ``data``/``model`` collectives, per-epoch cross-pod
     merge of the per-shard primal slices delayed by
-    ``pod_delay_rounds``."""
+    ``pod_delay_rounds``.
+
+    The resilience knobs (``segmented``/``total_epochs``/``watchdog``/
+    ``fault``) mirror the 1-D builder (DESIGN.md §14).  The overlapped
+    in-flight (base, Gram) aggregate is NOT part of the segmented
+    state: the carry out of any epoch is ``gram_fn(w, next-epoch first
+    block)``, a pure function of the carried (w, key), so segment entry
+    recomputes it bit-exactly — fresh and resumed solves share the one
+    prologue code path."""
     p = mesh.shape["data"]
     pod_on = "pod" in mesh.axis_names
     pods = mesh.shape["pod"] if pod_on else 1
@@ -1265,82 +1452,132 @@ def make_sharded_pipeline_2d(mesh: Mesh, loss, *, epochs: int,
     overlap = pipeline_overlap(overlap, two_d=True, fused=use_kernel,
                                delay_rounds=delay_rounds)
     gap_every = max(int(gap_every), 1)
-    n_gaps = _gap_slots(epochs, gap_every) if record else 0
+    total = int(total_epochs) if total_epochs is not None else int(epochs)
+    n_gaps = _gap_slots(total, gap_every) if record else 0
     shrink_on = shrink_every > 0
     dyn = (shrink_on or adaptive) and not overlap and not pod_on
+    fault = _check_pipeline_chaos(record=record, watchdog=watchdog,
+                                  fault=fault, pod_on=pod_on)
     block_update = _block_update_2d(loss, use_kernel, interpret)
+    delay0 = int(pod_delay_rounds > 0) if pod_on else delay_rounds
+    pod_fifo = pod_delay_rounds if (pod_on and pod_delay_rounds > 0) else 0
+
+    def device_body(cols4, vals4, sq_loc, st):
+        cols_loc = cols4[:, 0]  # (n_loc, 1, k) → (n_loc, k)
+        vals_loc = vals4[:, 0]
+        my = jax.lax.axis_index("data")
+        n_loc = st["alpha"].shape[0]
+        if pod_on:
+            kp = jax.lax.axis_index("pod")
+            npv = jnp.clip(n_rows - kp * n_pod_loc, 0, n_pod_loc)
+        else:
+            npv = n_rows
+        valid = jnp.arange(n_loc) < (npv - my * n_loc)
+        if record:
+            gap_fn = _make_gap_2d(loss, cols_loc, vals_loc,
+                                  st["w"].shape[0], axes=gap_axes)
+            gap = lambda rec, a, wv: gap_fn(rec, a, valid, wv)
+        else:
+            gap = None
+
+        def draw(sub, act=None, rp=False):
+            if act is None:
+                if pod_on:
+                    v = jnp.clip(npv - my * n_loc, 1, n_loc)
+                    return _device_block_perm_v(
+                        sub, kp * p + my, pods * p, n_loc, v,
+                        n_blocks, block_size)
+                return _device_block_perm(sub, my, p, n_loc, n_rows,
+                                          n_blocks, block_size)
+            return _device_block_perm_masked(sub, my, p, n_loc,
+                                             n_blocks, block_size,
+                                             act, rp)
+
+        carry = dict(st)
+        e0 = carry.pop("epoch")
+        if shrink_on and "act" not in carry:
+            carry["act"] = valid
+        if overlap:
+            gram_fn, corr_fn, update_fn = _overlap_round_fns(
+                cols_loc, vals_loc, sq_loc, loss, interpret)
+            rounds = functools.partial(_scan_rounds_overlap, gram_fn,
+                                       corr_fn, update_fn)
+            # prologue: the NEXT epoch's first block, referenced to the
+            # entering primal shard — the split below is exactly what
+            # the first scan iteration will consume, so a fresh solve
+            # pays its one up-front gram here and a RESUMED segment
+            # reconstructs the carried-out in-flight aggregate of the
+            # previous segment bit-exactly (it never hits the disk)
+            _, sub0 = jax.random.split(carry["key"])
+            b0 = (draw(sub0, valid) if shrink_on else draw(sub0))[0]
+            carry["inflight"] = gram_fn(carry["w"], b0)
+        else:
+            bu = lambda a, w_eff, idx, act=None: block_update(
+                cols_loc, vals_loc, sq_loc, a, w_eff, idx, act)
+            if dyn:
+                rounds = functools.partial(_scan_rounds_dyn, bu)
+            else:
+                rounds = functools.partial(_scan_rounds, bu,
+                                           delay_rounds=delay_rounds)
+        shrink = None
+        if shrink_on:
+            shrink = (_make_shrink_2d(loss, cols_loc, vals_loc,
+                                      shrink_tol, valid),
+                      shrink_every, repack_threshold, n_rows,
+                      block_size)
+        out = _epoch_scan(rounds, gap, carry, draw, epochs=epochs,
+                          total_epochs=total, e0=e0, n_gaps=n_gaps,
+                          gap_every=gap_every, record=record,
+                          n_blocks=n_blocks, valid=valid, shrink=shrink,
+                          adaptive=adaptive,
+                          adaptive_ratio=adaptive_ratio, delay0=delay0,
+                          overlap=overlap,
+                          pod=((pods, pod_delay_rounds)
+                               if pod_on else None),
+                          watchdog=((_make_badcount(gap_axes, True),
+                                     watchdog_blowup, watchdog_floor)
+                                    if watchdog else None),
+                          fault=fault)
+        out.pop("inflight", None)
+        out["epoch"] = e0 + jnp.int32(epochs)
+        return out
+
+    if segmented:
+        def spec_of(k):
+            if k in ("alpha", "act"):
+                return P(row_ax)
+            if k in ("w", "dw", "dwo"):
+                return P("model")
+            if k == "pbuf":
+                return P(None, "model")
+            return P()
+
+        def solve_seg(X, sq_norms, st):
+            st_specs = {k: spec_of(k) for k in st}
+            cols, vals = X
+            return shard_map(
+                device_body,
+                mesh=mesh,
+                in_specs=(P(row_ax, "model"), P(row_ax, "model"),
+                          P(row_ax), st_specs),
+                out_specs=st_specs,
+                check_vma=False,
+            )(cols, vals, sq_norms, st)
+
+        return jax.jit(solve_seg)
 
     def solve(X, sq_norms, alpha, w, key, carry_dw):
         def device_fn(cols4, vals4, sq_loc, alpha_loc, w_loc, key,
                       dw_prev):
-            cols_loc = cols4[:, 0]  # (n_loc, 1, k) → (n_loc, k)
-            vals_loc = vals4[:, 0]
-            my = jax.lax.axis_index("data")
-            n_loc = alpha_loc.shape[0]
-            if pod_on:
-                kp = jax.lax.axis_index("pod")
-                npv = jnp.clip(n_rows - kp * n_pod_loc, 0, n_pod_loc)
-            else:
-                npv = n_rows
-            valid = jnp.arange(n_loc) < (npv - my * n_loc)
-            if record:
-                gap_fn = _make_gap_2d(loss, cols_loc, vals_loc,
-                                      w_loc.shape[0], axes=gap_axes)
-                gap = lambda rec, a, wv: gap_fn(rec, a, valid, wv)
-            else:
-                gap = None
-
-            def draw(sub, act=None, rp=False):
-                if act is None:
-                    if pod_on:
-                        v = jnp.clip(npv - my * n_loc, 1, n_loc)
-                        return _device_block_perm_v(
-                            sub, kp * p + my, pods * p, n_loc, v,
-                            n_blocks, block_size)
-                    return _device_block_perm(sub, my, p, n_loc, n_rows,
-                                              n_blocks, block_size)
-                return _device_block_perm_masked(sub, my, p, n_loc,
-                                                 n_blocks, block_size,
-                                                 act, rp)
-
-            inflight0 = None
-            if overlap:
-                gram_fn, corr_fn, update_fn = _overlap_round_fns(
-                    cols_loc, vals_loc, sq_loc, loss, interpret)
-                rounds = functools.partial(_scan_rounds_overlap, gram_fn,
-                                           corr_fn, update_fn)
-                # prologue: the FIRST epoch's first block, referenced to
-                # the entering primal shard — the one gram the carried
-                # schedule still pays up front (once per solve)
-                _, sub0 = jax.random.split(key)
-                b0 = (draw(sub0, valid) if shrink_on else draw(sub0))[0]
-                inflight0 = gram_fn(w_loc, b0)
-            else:
-                bu = lambda a, w_eff, idx, act=None: block_update(
-                    cols_loc, vals_loc, sq_loc, a, w_eff, idx, act)
-                if dyn:
-                    rounds = functools.partial(_scan_rounds_dyn, bu)
-                else:
-                    rounds = functools.partial(_scan_rounds, bu,
-                                               delay_rounds=delay_rounds)
-            shrink = None
-            if shrink_on:
-                shrink = (_make_shrink_2d(loss, cols_loc, vals_loc,
-                                          shrink_tol, valid),
-                          shrink_every, repack_threshold, n_rows,
-                          block_size)
-            return _epoch_scan(rounds, gap, key, alpha_loc, w_loc,
-                               dw_prev, draw, epochs=epochs,
-                               n_gaps=n_gaps, gap_every=gap_every,
-                               record=record, n_blocks=n_blocks,
-                               valid=valid, shrink=shrink,
-                               adaptive=adaptive,
-                               adaptive_ratio=adaptive_ratio,
-                               delay0=(int(pod_delay_rounds > 0)
-                                       if pod_on else delay_rounds),
-                               inflight0=inflight0,
-                               pod=((pods, pod_delay_rounds)
-                                    if pod_on else None))
+            st = _fresh_carry(alpha_loc, w_loc, dw_prev, key, n_gaps,
+                              n_blocks=n_blocks, dyn=dyn,
+                              shrink_on=shrink_on, adaptive=adaptive,
+                              delay0=delay0, pod_fifo=pod_fifo,
+                              watchdog=watchdog)
+            out = device_body(cols4, vals4, sq_loc, st)
+            dw_out = out["pbuf"].sum(0) if pod_fifo else out["dw"]
+            return (out["alpha"], out["w"], dw_out, out["gaps"],
+                    out["epsb"], out["actb"], out["delayb"])
 
         cols, vals = X
         return shard_map(
@@ -1393,6 +1630,465 @@ def _drive_epochs(epoch_fn, X, sq_norms, alpha, w, carry_dw, *, p, n_loc,
     return alpha, w, gaps_arr
 
 
+class SolverSetup(NamedTuple):
+    """The resolved-and-placed half of a solve (DESIGN.md §14): mesh +
+    admission policies + the padded, device-resident dataset — i.e.
+    everything ``sharded_passcode_solve`` needs besides the (α, w)
+    iterates themselves.  Built once by ``prepare_solver`` and shared
+    by the whole-solve entry point and the segmented resilience layer
+    (``repro.resilience``), which builds per-segment pipelines —
+    possibly with degraded knobs — against the same arrays."""
+
+    mesh: Mesh
+    loss: object
+    two_d: bool
+    pod_on: bool
+    pods: int
+    p: int
+    m: int
+    n: int
+    d: int
+    n_loc: int
+    n_pad: int
+    n_blocks: int
+    block_size: int
+    w_len: int   # padded primal length: d_run (1-D) / m·d1_loc (2-D)
+    d_loc: int   # 2-D per-shard feature count (0 on 1-D)
+    d1_loc: int  # 2-D per-shard padded slice length (0 on 1-D)
+    ell: bool
+    use_k: bool
+    interpret: bool
+    X: object
+    X_gap: object
+    sq_norms: object
+    ridx: object  # pod rowmap gather indices (None off-pod)
+    delay_rounds: int
+    pod_delay_rounds: int
+    gap_every: int
+    record: bool
+    tuning: object  # repro.dist.mesh.SelfTuning (resolved knobs)
+    shrink_tol: float
+    repack_threshold: float
+    adaptive_ratio: float
+    seed: int
+
+
+def prepare_solver(
+    X_host,
+    loss,
+    *,
+    mesh: Mesh | None = None,
+    mesh_axes: tuple = ("data",),
+    block_size: int = 64,
+    delay_rounds: int = 0,
+    pod_delay_rounds: int = 0,
+    seed: int = 0,
+    record: bool = True,
+    use_kernel: bool | str = False,
+    gap_every: int = 1,
+    pipeline: bool = True,
+    overlap: bool | str = "auto",
+    shrink_every: int = 0,
+    shrink_tol: float = 1e-3,
+    repack: bool | str = "auto",
+    repack_threshold: float = 0.5,
+    adaptive: bool = False,
+    adaptive_ratio: float = 0.95,
+) -> SolverSetup:
+    """Resolve the mesh and every admission policy, pad and place the
+    dataset, and return the ``SolverSetup`` the solve entry points run
+    against.  All knob validation (``pod_merge_policy``,
+    ``pipeline_overlap``, ``resolve_self_tuning``) happens here, so the
+    segmented resilience layer inherits it for free."""
+    if mesh is None:
+        if "pod" in mesh_axes:
+            n_dev = len(jax.devices())
+            pods = 2 if n_dev % 2 == 0 else 1
+            if "model" in mesh_axes:
+                m_ax = 2 if (n_dev // pods) % 2 == 0 else 1
+                mesh = solver_mesh_3d(pod=pods, model=m_ax)
+            else:
+                mesh = jax.make_mesh((pods, n_dev // pods),
+                                     ("pod", "data"))
+        elif "model" in mesh_axes:
+            mesh = solver_mesh_2d()
+        else:
+            mesh = solver_mesh("data")
+    if "model" in mesh.axis_names and "data" not in mesh.axis_names:
+        # legacy 1-D ("model",) mesh → (data=1, model=m): serial in i
+        # within each round, features sharded
+        mesh = Mesh(mesh.devices.reshape(1, -1), ("data", "model"))
+    pod_on = "pod" in mesh.axis_names
+    if pod_on:
+        pod_merge_policy(pod_delay_rounds, n_pods=mesh.shape["pod"],
+                         pipeline=pipeline, record=record,
+                         shrink_every=shrink_every, adaptive=adaptive,
+                         overlap=overlap)
+    elif pod_delay_rounds:
+        raise ValueError(
+            "pod_delay_rounds needs a mesh with a 'pod' axis")
+    two_d = "model" in mesh.axis_names
+    gap_every = max(int(gap_every), 1)
+    p = mesh.shape["data"]
+    pods = mesh.shape["pod"] if pod_on else 1
+    data_sh = named(mesh, data_axes(mesh))
+    row_sh = named(mesh, data_axes(mesh), None)
+
+    if two_d:
+        m = mesh.shape["model"]
+        is_ell = isinstance(X_host, EllMatrix)
+        ell = X_host if is_ell else dense_to_ell(X_host)
+        X_gap = X_host if is_ell else jnp.asarray(X_host)
+        n, d = ell.n_rows, ell.n_features
+        fse = ell_column_split(ell, m)
+        d_loc, k_loc = fse.d_loc, fse.k_loc
+        # ceil twice on a pod mesh: each pod's contiguous row shard
+        # carries its OWN padded tail (pod_row_layout), then subdivides
+        # over "data"
+        n_pod_loc = max(-(-n // pods), 1)
+        n_loc = -(-n_pod_loc // p)  # ceil: the tail is padded
+        n_pad = pods * p * n_loc
+        use_k, interpret = _resolve_kernel_mode_feature(
+            use_kernel, n_loc, k_loc, d_loc, block_size
+        )
+        overlap_on = pipeline_overlap(overlap, two_d=True, fused=use_k,
+                                      delay_rounds=delay_rounds)
+        if pod_on:
+            # pod_merge_policy already rejected an explicit
+            # overlap=True; "auto" resolves off — the in-flight (base,
+            # Gram) psum is not valid under the merge-rescaled outer
+            # schedule
+            overlap_on = False
+        tuning = resolve_self_tuning(shrink_every, repack, adaptive,
+                                     overlap_knob=overlap,
+                                     overlap_on=overlap_on,
+                                     pipeline=pipeline, record=record)
+        # lane-pad k_loc and the per-shard padded primal when fused;
+        # pad rows to n_pad with all-padding rows (local id d_loc, 0)
+        k_run = lane_pad(k_loc) if use_k else k_loc
+        d1_loc = lane_pad(d_loc + 1) if use_k else d_loc + 1
+        ridx = None
+        if pod_on:
+            rowmap, _ = pod_row_layout(n, pods, per_pod_rows=p * n_loc)
+            ridx = jnp.asarray(rowmap.reshape(-1))  # global id, n = pad
+            cols = jnp.full((n + 1, m, k_run), d_loc, jnp.int32)
+            cols = cols.at[:n, :, :k_loc].set(
+                jnp.asarray(fse.indices, jnp.int32))[ridx]
+            vals = jnp.zeros((n + 1, m, k_run), jnp.float32)
+            vals = vals.at[:n, :, :k_loc].set(
+                jnp.asarray(fse.values, jnp.float32))[ridx]
+            sq_norms = jnp.ones((n + 1,), jnp.float32).at[:n].set(
+                fse.row_sq_norms())[ridx]
+        else:
+            cols = jnp.full((n_pad, m, k_run), d_loc, jnp.int32)
+            cols = cols.at[:n, :, :k_loc].set(
+                jnp.asarray(fse.indices, jnp.int32))
+            vals = jnp.zeros((n_pad, m, k_run), jnp.float32)
+            vals = vals.at[:n, :, :k_loc].set(
+                jnp.asarray(fse.values, jnp.float32))
+            sq_norms = jnp.ones((n_pad,), jnp.float32).at[:n].set(
+                fse.row_sq_norms())
+        x_sh = named(mesh, data_axes(mesh), "model", None)
+        X = (jax.device_put(cols, x_sh), jax.device_put(vals, x_sh))
+        return SolverSetup(
+            mesh=mesh, loss=loss, two_d=True, pod_on=pod_on, pods=pods,
+            p=p, m=m, n=n, d=d, n_loc=n_loc, n_pad=n_pad,
+            n_blocks=_n_blocks(n_loc, block_size), block_size=block_size,
+            w_len=m * d1_loc, d_loc=d_loc, d1_loc=d1_loc, ell=True,
+            use_k=use_k, interpret=interpret, X=X, X_gap=X_gap,
+            sq_norms=jax.device_put(sq_norms, data_sh), ridx=ridx,
+            delay_rounds=delay_rounds, pod_delay_rounds=pod_delay_rounds,
+            gap_every=gap_every, record=record, tuning=tuning,
+            shrink_tol=shrink_tol, repack_threshold=repack_threshold,
+            adaptive_ratio=adaptive_ratio, seed=seed)
+
+    is_ell = isinstance(X_host, EllMatrix)
+    if is_ell:
+        n, d, k_max = X_host.n_rows, X_host.n_features, X_host.k_max
+    else:
+        n, d = X_host.shape
+        k_max = None
+    # ceil twice on a pod mesh: each pod's contiguous row shard carries
+    # its OWN padded tail (pod_row_layout), then subdivides over "data"
+    n_pod_loc = max(-(-n // pods), 1)
+    n_loc = -(-n_pod_loc // p)  # ceil: the tail is padded, not dropped
+    n_pad = pods * p * n_loc
+    ridx = None
+    if pod_on:
+        rowmap, _ = pod_row_layout(n, pods, per_pod_rows=p * n_loc)
+        ridx = jnp.asarray(rowmap.reshape(-1))  # global id, n = padding
+    use_k, interpret = _resolve_kernel_mode(use_kernel, n_loc, d, k_max)
+    # a 1-D mesh has no model-axis psum: "auto" resolves to no overlap,
+    # an explicit True is an error
+    pipeline_overlap(overlap, two_d=False, fused=use_k,
+                     delay_rounds=delay_rounds)
+    tuning = resolve_self_tuning(shrink_every, repack, adaptive,
+                                 overlap_knob=overlap, overlap_on=False,
+                                 pipeline=pipeline, record=record)
+    if is_ell:
+        X_gap = X_host  # duality gap always reads the unpadded data
+        # lane-pad k_max to the 128-lane tile when fused; pad rows to
+        # n_pad with all-padding rows (index d, value 0)
+        k_run = lane_pad(k_max) if use_k else k_max
+        # padded primal with the dummy slot at index d (lane-padded for
+        # clean tiling when fused); padding scatter-adds land there
+        d_run = lane_pad(d + 1) if use_k else d + 1
+        if pod_on:
+            # pod layout: gather through the flattened rowmap with a
+            # padding row appended at global index n — each pod's
+            # contiguous shard lands with its own padded tail
+            cols = jnp.full((n + 1, k_run), d, jnp.int32)
+            cols = cols.at[:n, :k_max].set(
+                jnp.asarray(X_host.indices, jnp.int32))[ridx]
+            vals = jnp.zeros((n + 1, k_run), jnp.float32)
+            vals = vals.at[:n, :k_max].set(
+                jnp.asarray(X_host.values, jnp.float32))[ridx]
+            sq_norms = jnp.ones((n + 1,), jnp.float32).at[:n].set(
+                X_host.row_sq_norms())[ridx]
+        else:
+            cols = jnp.full((n_pad, k_run), d, jnp.int32)
+            cols = cols.at[:n, :k_max].set(
+                jnp.asarray(X_host.indices, jnp.int32))
+            vals = jnp.zeros((n_pad, k_run), jnp.float32)
+            vals = vals.at[:n, :k_max].set(
+                jnp.asarray(X_host.values, jnp.float32))
+            sq_norms = jnp.ones((n_pad,), jnp.float32)
+            sq_norms = sq_norms.at[:n].set(X_host.row_sq_norms())
+        X = (
+            jax.device_put(cols, row_sh),
+            jax.device_put(vals, row_sh),
+        )
+    else:
+        X = jnp.asarray(X_host)
+        X_gap = X  # duality gap always reads the unpadded data
+        # the kernel wants clean (8, 128) f32 tiling: lane-pad d with
+        # zero columns (inert in every dot product; sliced off the
+        # returned w); row padding is all-zero rows with q set to 1 so
+        # their (never-selected) update stays finite
+        d_run = lane_pad(d) if use_k else d
+        if pod_on:
+            X = jnp.zeros((n + 1, d_run), X.dtype).at[:n, :d].set(X)
+            sq_norms = jnp.sum(X * X, axis=1).at[n].set(1.0)[ridx]
+            X = X[ridx]
+        else:
+            if d_run != d or n_pad != n:
+                X = jnp.zeros((n_pad, d_run), X.dtype).at[:n, :d].set(X)
+            sq_norms = jnp.sum(X * X, axis=1)
+            if n_pad != n:
+                sq_norms = sq_norms.at[n:].set(1.0)
+        X = jax.device_put(X, row_sh)
+    return SolverSetup(
+        mesh=mesh, loss=loss, two_d=False, pod_on=pod_on, pods=pods,
+        p=p, m=1, n=n, d=d, n_loc=n_loc, n_pad=n_pad,
+        n_blocks=_n_blocks(n_loc, block_size), block_size=block_size,
+        w_len=d_run, d_loc=0, d1_loc=0, ell=is_ell, use_k=use_k,
+        interpret=interpret, X=X, X_gap=X_gap,
+        sq_norms=jax.device_put(sq_norms, data_sh), ridx=ridx,
+        delay_rounds=delay_rounds, pod_delay_rounds=pod_delay_rounds,
+        gap_every=gap_every, record=record, tuning=tuning,
+        shrink_tol=shrink_tol, repack_threshold=repack_threshold,
+        adaptive_ratio=adaptive_ratio, seed=seed)
+
+
+def _init_alpha_w(setup: SolverSetup, alpha0=None, w0=None):
+    """Global padded (α, w) for a solve — zeros, or the PR-7 warm-start
+    re-blocking of carried state onto whatever layout ``setup`` has
+    (the elastic pod join/leave path, reused verbatim by checkpoint
+    restore across changed meshes)."""
+    n, n_pad, d = setup.n, setup.n_pad, setup.d
+    if alpha0 is None:
+        alpha = jnp.zeros((n_pad,), jnp.float32)
+    else:
+        a_full = jnp.zeros((n + 1,), jnp.float32).at[:n].set(
+            jnp.asarray(alpha0, jnp.float32).reshape(-1)[:n])
+        alpha = (a_full[setup.ridx] if setup.pod_on else jnp.concatenate(
+            [a_full[:n], jnp.zeros((n_pad - n,), jnp.float32)]))
+    if setup.two_d:
+        m, d_loc, d1_loc = setup.m, setup.d_loc, setup.d1_loc
+        # per-shard padded primal slices, concatenated: shard j owns
+        # w[j·d₁_loc : (j+1)·d₁_loc), dummy slot at local index d_loc
+        w = jnp.zeros((m * d1_loc,), jnp.float32)
+        if w0 is not None:
+            wp = jnp.zeros((m * d_loc,), jnp.float32).at[:d].set(
+                jnp.asarray(w0, jnp.float32).reshape(-1)[:d]
+            ).reshape(m, d_loc)
+            w = jnp.zeros((m, d1_loc), jnp.float32).at[:, :d_loc].set(
+                wp).reshape(-1)
+    else:
+        w = jnp.zeros((setup.w_len,), jnp.float32)
+        if w0 is not None:
+            w = w.at[:d].set(jnp.asarray(w0, jnp.float32).reshape(-1)[:d])
+    return alpha, w
+
+
+def build_pipeline(setup: SolverSetup, *, epochs: int,
+                   total_epochs: int | None = None,
+                   segmented: bool = False, watchdog: bool = False,
+                   watchdog_blowup: float = 4.0,
+                   watchdog_floor: float = 1e-3, fault=None,
+                   delay_rounds: int | None = None,
+                   pod_delay_rounds: int | None = None,
+                   overlap_on: bool | None = None):
+    """Build the pipelined solve for a prepared setup — the one place
+    the two builders are dispatched from.  The override knobs
+    (``delay_rounds``/``pod_delay_rounds``/``overlap_on``) exist for
+    the degradation ladder (DESIGN.md §14): a degraded retry rebuilds
+    the pipeline synchronous against the same ``SolverSetup``."""
+    dr = setup.delay_rounds if delay_rounds is None else int(delay_rounds)
+    pdr = (setup.pod_delay_rounds if pod_delay_rounds is None
+           else int(pod_delay_rounds))
+    st = setup.tuning
+    common = dict(
+        epochs=epochs, block_size=setup.block_size,
+        n_blocks=setup.n_blocks, n_rows=setup.n, delay_rounds=dr,
+        use_kernel=setup.use_k, interpret=setup.interpret,
+        record=setup.record, gap_every=setup.gap_every,
+        shrink_every=st.shrink_every, shrink_tol=setup.shrink_tol,
+        repack_threshold=(setup.repack_threshold if st.repack else None),
+        adaptive=st.adaptive, adaptive_ratio=setup.adaptive_ratio,
+        pod_delay_rounds=pdr, total_epochs=total_epochs,
+        segmented=segmented, watchdog=watchdog,
+        watchdog_blowup=watchdog_blowup, watchdog_floor=watchdog_floor,
+        fault=fault)
+    if setup.two_d:
+        ov = st.overlap if overlap_on is None else bool(overlap_on)
+        if dr < 1:
+            ov = False  # the in-flight psum needs the delayed round
+        return make_sharded_pipeline_2d(setup.mesh, setup.loss,
+                                        overlap=ov, **common)
+    return make_sharded_pipeline(setup.mesh, setup.loss, ell=setup.ell,
+                                 **common)
+
+
+def init_pipeline_state(setup: SolverSetup, *, total_epochs: int,
+                        watchdog: bool = False, alpha0=None, w0=None,
+                        delay_rounds: int | None = None,
+                        pod_delay_rounds: int | None = None,
+                        overlap_on: bool | None = None):
+    """Fresh epoch-0 ``SolverState`` (global arrays, mesh-placed) for
+    the segmented solver — exactly the state a ``segmented=True``
+    pipeline consumes and returns.  ``alpha0``/``w0`` warm-start it
+    (the elastic-restore path re-blocks them onto this setup's
+    layout)."""
+    dr = setup.delay_rounds if delay_rounds is None else int(delay_rounds)
+    pdr = (setup.pod_delay_rounds if pod_delay_rounds is None
+           else int(pod_delay_rounds))
+    st = setup.tuning
+    ov = st.overlap if overlap_on is None else bool(overlap_on)
+    if dr < 1:
+        ov = False
+    shrink_on = st.shrink_every > 0
+    dyn = (shrink_on or st.adaptive) and not ov and not setup.pod_on
+    n_gaps = (_gap_slots(int(total_epochs), setup.gap_every)
+              if setup.record else 0)
+    alpha, w = _init_alpha_w(setup, alpha0, w0)
+    delay0 = int(pdr > 0) if setup.pod_on else dr
+    pod_fifo = pdr if (setup.pod_on and pdr > 0) else 0
+    state = _fresh_carry(alpha, w, jnp.zeros_like(w),
+                         jax.random.PRNGKey(setup.seed), n_gaps,
+                         n_blocks=setup.n_blocks, dyn=dyn,
+                         shrink_on=shrink_on, adaptive=st.adaptive,
+                         delay0=delay0, pod_fifo=pod_fifo,
+                         watchdog=watchdog)
+    if shrink_on:
+        # global view of the device-local ``valid`` masks (the padding
+        # rows of every pod tail excluded)
+        state["act"] = (setup.ridx < setup.n if setup.pod_on
+                        else jnp.arange(setup.n_pad) < setup.n)
+    return device_put_state(setup, state)
+
+
+def device_put_state(setup: SolverSetup, state: dict) -> dict:
+    """Place a global ``SolverState`` onto the mesh with the segmented
+    builders' specs: dual-sized leaves over the row axes, primal-sized
+    leaves over ``model`` (2-D) or replicated (1-D), the pod FIFO
+    sharded on its trailing primal axis, everything else replicated.
+    This is the elastic-resharding point: restored host arrays re-shard
+    here onto whatever mesh ``setup`` carries."""
+    mesh = setup.mesh
+    data_sh = named(mesh, data_axes(mesh))
+    w_sh = named(mesh, "model") if setup.two_d else replicated(mesh)
+    pbuf_sh = (named(mesh, None, "model") if setup.two_d
+               else replicated(mesh))
+    rep_sh = replicated(mesh)
+
+    def place(k, v):
+        if k in ("alpha", "act"):
+            return jax.device_put(v, data_sh)
+        if k in ("w", "dw", "dwo"):
+            return jax.device_put(v, w_sh)
+        if k == "pbuf":
+            return jax.device_put(v, pbuf_sh)
+        return jax.device_put(v, rep_sh)
+
+    return {k: place(k, v) for k, v in state.items()}
+
+
+def finalize_state(setup: SolverSetup, state: dict,
+                   *, epochs: int) -> ShardedResult:
+    """``ShardedResult`` out of a segmented run's final ``SolverState``:
+    flush the in-flight aggregate (exact zeros when the run ended
+    synchronous — the add is then inert), drain the pod FIFO, and
+    un-pad exactly like the whole-solve entry point."""
+    dw = state["pbuf"].sum(0) if "pbuf" in state else state["dw"]
+    w = state["w"] + dw
+    return _finalize(setup, state["alpha"], w, state["gaps"], epochs,
+                     state["epsb"], state["actb"], state["delayb"])
+
+
+def _finalize(setup: SolverSetup, alpha, w, gaps_arr, epochs,
+              eps_arr=None, act_arr=None, delay_arr=None):
+    """Un-pad a finished solve back to user coordinates: invert the pod
+    rowmap gather (padding slots all land on the sliced-off index n),
+    stitch the true primal out of the 2-D per-shard padded slices, and
+    slice off row/lane padding."""
+    n, d = setup.n, setup.d
+    if setup.pod_on:
+        alpha = jnp.zeros((n + 1,), jnp.float32).at[setup.ridx].set(alpha)
+    if setup.two_d:
+        w = w.reshape(setup.m, setup.d1_loc)[:, :setup.d_loc]
+        w = w.reshape(-1)[:d]
+    else:
+        w = w[:d]
+    if eps_arr is None:
+        return ShardedResult(alpha[:n], w, gaps_arr, epochs)
+    return ShardedResult(alpha[:n], w, gaps_arr, epochs, eps_arr,
+                         act_arr, delay_arr)
+
+
+def _validate_solver_inputs(X_host, y, loss):
+    """Fail fast at the solver mouth (DESIGN.md §14): a non-finite
+    feature value, a non-positive C, or a label outside {−1, +1} each
+    used to surface only as a silently diverged solve epochs later.
+    Returns ``X_host`` with the labels folded in (x_i = y_i·ẋ_i — the
+    convention every solver path already assumes) when ``y`` is
+    given."""
+    C = getattr(loss, "C", None)
+    if C is not None and not float(C) > 0:
+        raise ValueError(f"loss.C must be positive, got {C!r}")
+    vals = X_host.values if isinstance(X_host, EllMatrix) else X_host
+    if not np.all(np.isfinite(np.asarray(vals))):
+        raise ValueError("X contains non-finite entries (NaN/Inf)")
+    if y is None:
+        return X_host
+    y = np.asarray(jax.device_get(y), np.float32).reshape(-1)
+    n = (X_host.n_rows if isinstance(X_host, EllMatrix)
+         else X_host.shape[0])
+    if y.shape[0] != n:
+        raise ValueError(f"y has {y.shape[0]} labels for {n} rows")
+    if not np.all(np.isfinite(y)):
+        raise ValueError("y contains non-finite entries (NaN/Inf)")
+    if not np.all(np.isin(y, (-1.0, 1.0))):
+        raise ValueError(
+            "labels must be in {-1, +1}; the solver folds them into X "
+            "as x_i = y_i*x_i")
+    if isinstance(X_host, EllMatrix):
+        return EllMatrix(X_host.indices,
+                         np.asarray(X_host.values) * y[:, None],
+                         X_host.n_features)
+    return np.asarray(X_host) * y[:, None]
+
+
 def sharded_passcode_solve(
     X_host,
     loss,
@@ -1407,6 +2103,7 @@ def sharded_passcode_solve(
     record: bool = True,
     alpha0=None,
     w0=None,
+    y=None,
     use_kernel: bool | str = False,
     gap_every: int = 1,
     pipeline: bool = True,
@@ -1492,328 +2189,66 @@ def sharded_passcode_solve(
     ``w0`` warm-start the solve from carried state — re-blocked onto
     whatever pod count the mesh has, which is how elastic pod
     join/leave works (``tests/test_elastic.py``).
+
+    ``y`` (optional): ±1 labels to validate and fold into X as
+    x_i = y_i·ẋ_i — the convention every solver path assumes when X
+    arrives pre-folded.  With or without ``y`` the mouth validates its
+    inputs (finite X, positive C) before anything touches the mesh
+    (DESIGN.md §14); the segmented fault-tolerant variant of this
+    entry point lives in ``repro.resilience.solve_segmented``.
     """
-    if mesh is None:
-        if "pod" in mesh_axes:
-            n_dev = len(jax.devices())
-            pods = 2 if n_dev % 2 == 0 else 1
-            if "model" in mesh_axes:
-                m_ax = 2 if (n_dev // pods) % 2 == 0 else 1
-                mesh = solver_mesh_3d(pod=pods, model=m_ax)
-            else:
-                mesh = jax.make_mesh((pods, n_dev // pods),
-                                     ("pod", "data"))
-        elif "model" in mesh_axes:
-            mesh = solver_mesh_2d()
-        else:
-            mesh = solver_mesh("data")
-    pod_on = "pod" in mesh.axis_names
-    if pod_on:
-        pod_merge_policy(pod_delay_rounds, n_pods=mesh.shape["pod"],
-                         pipeline=pipeline, record=record,
-                         shrink_every=shrink_every, adaptive=adaptive,
-                         overlap=overlap)
-    elif pod_delay_rounds:
-        raise ValueError(
-            "pod_delay_rounds needs a mesh with a 'pod' axis")
-    if "model" in mesh.axis_names:
-        if "data" not in mesh.axis_names:
-            # legacy 1-D ("model",) mesh → (data=1, model=m): serial in
-            # i within each round, features sharded
-            mesh = Mesh(mesh.devices.reshape(1, -1), ("data", "model"))
-        return _solve_feature_sharded(
-            X_host, loss, mesh=mesh, epochs=epochs, block_size=block_size,
-            delay_rounds=delay_rounds, seed=seed, record=record,
-            use_kernel=use_kernel, gap_every=gap_every, pipeline=pipeline,
-            overlap=overlap, shrink_every=shrink_every,
-            shrink_tol=shrink_tol, repack=repack,
-            repack_threshold=repack_threshold, adaptive=adaptive,
-            adaptive_ratio=adaptive_ratio,
-            pod_delay_rounds=pod_delay_rounds, alpha0=alpha0, w0=w0,
-        )
-    p = mesh.shape["data"]
-    pods = mesh.shape["pod"] if pod_on else 1
-    is_ell = isinstance(X_host, EllMatrix)
-    if is_ell:
-        n, d, k_max = X_host.n_rows, X_host.n_features, X_host.k_max
-    else:
-        n, d = X_host.shape
-        k_max = None
-    # ceil twice on a pod mesh: each pod's contiguous row shard carries
-    # its OWN padded tail (pod_row_layout), then subdivides over "data"
-    n_pod_loc = max(-(-n // pods), 1)
-    n_loc = -(-n_pod_loc // p)  # ceil: the tail is padded, not dropped
-    n_pad = pods * p * n_loc
-    if pod_on:
-        rowmap, _ = pod_row_layout(n, pods, per_pod_rows=p * n_loc)
-        ridx = jnp.asarray(rowmap.reshape(-1))  # global id, n = padding
-    use_k, interpret = _resolve_kernel_mode(use_kernel, n_loc, d, k_max)
-    # a 1-D mesh has no model-axis psum: "auto" resolves to no overlap,
-    # an explicit True is an error
-    pipeline_overlap(overlap, two_d=False, fused=use_k,
-                     delay_rounds=delay_rounds)
-    st = resolve_self_tuning(shrink_every, repack, adaptive,
-                             overlap_knob=overlap, overlap_on=False,
-                             pipeline=pipeline, record=record)
-    data_sh = named(mesh, data_axes(mesh))
-    row_sh = named(mesh, data_axes(mesh), None)
-    rep_sh = replicated(mesh)
-    if is_ell:
-        X_gap = X_host  # duality gap always reads the unpadded data
-        # lane-pad k_max to the 128-lane tile when fused; pad rows to
-        # n_pad with all-padding rows (index d, value 0)
-        k_run = lane_pad(k_max) if use_k else k_max
-        # padded primal with the dummy slot at index d (lane-padded for
-        # clean tiling when fused); padding scatter-adds land there
-        d_run = lane_pad(d + 1) if use_k else d + 1
-        if pod_on:
-            # pod layout: gather through the flattened rowmap with a
-            # padding row appended at global index n — each pod's
-            # contiguous shard lands with its own padded tail
-            cols = jnp.full((n + 1, k_run), d, jnp.int32)
-            cols = cols.at[:n, :k_max].set(
-                jnp.asarray(X_host.indices, jnp.int32))[ridx]
-            vals = jnp.zeros((n + 1, k_run), jnp.float32)
-            vals = vals.at[:n, :k_max].set(
-                jnp.asarray(X_host.values, jnp.float32))[ridx]
-            sq_norms = jnp.ones((n + 1,), jnp.float32).at[:n].set(
-                X_host.row_sq_norms())[ridx]
-        else:
-            cols = jnp.full((n_pad, k_run), d, jnp.int32)
-            cols = cols.at[:n, :k_max].set(
-                jnp.asarray(X_host.indices, jnp.int32))
-            vals = jnp.zeros((n_pad, k_run), jnp.float32)
-            vals = vals.at[:n, :k_max].set(
-                jnp.asarray(X_host.values, jnp.float32))
-            sq_norms = jnp.ones((n_pad,), jnp.float32)
-            sq_norms = sq_norms.at[:n].set(X_host.row_sq_norms())
-        X = (
-            jax.device_put(cols, row_sh),
-            jax.device_put(vals, row_sh),
-        )
-    else:
-        X = jnp.asarray(X_host)
-        X_gap = X  # duality gap always reads the unpadded data
-        # the kernel wants clean (8, 128) f32 tiling: lane-pad d with
-        # zero columns (inert in every dot product; sliced off the
-        # returned w); row padding is all-zero rows with q set to 1 so
-        # their (never-selected) update stays finite
-        d_run = lane_pad(d) if use_k else d
-        if pod_on:
-            X = jnp.zeros((n + 1, d_run), X.dtype).at[:n, :d].set(X)
-            sq_norms = jnp.sum(X * X, axis=1).at[n].set(1.0)[ridx]
-            X = X[ridx]
-        else:
-            if d_run != d or n_pad != n:
-                X = jnp.zeros((n_pad, d_run), X.dtype).at[:n, :d].set(X)
-            sq_norms = jnp.sum(X * X, axis=1)
-            if n_pad != n:
-                sq_norms = sq_norms.at[n:].set(1.0)
-        X = jax.device_put(X, row_sh)
-    sq_norms = jax.device_put(sq_norms, data_sh)
-    if alpha0 is None:
-        alpha = jnp.zeros((n_pad,), jnp.float32)
-    else:
-        a_full = jnp.zeros((n + 1,), jnp.float32).at[:n].set(
-            jnp.asarray(alpha0, jnp.float32).reshape(-1)[:n])
-        alpha = a_full[ridx] if pod_on else jnp.concatenate(
-            [a_full[:n], jnp.zeros((n_pad - n,), jnp.float32)])
+    X_host = _validate_solver_inputs(X_host, y, loss)
+    setup = prepare_solver(
+        X_host, loss, mesh=mesh, mesh_axes=mesh_axes,
+        block_size=block_size, delay_rounds=delay_rounds,
+        pod_delay_rounds=pod_delay_rounds, seed=seed, record=record,
+        use_kernel=use_kernel, gap_every=gap_every, pipeline=pipeline,
+        overlap=overlap, shrink_every=shrink_every,
+        shrink_tol=shrink_tol, repack=repack,
+        repack_threshold=repack_threshold, adaptive=adaptive,
+        adaptive_ratio=adaptive_ratio)
+    st = setup.tuning
+    data_sh = named(setup.mesh, data_axes(setup.mesh))
+    w_sh = (named(setup.mesh, "model") if setup.two_d
+            else replicated(setup.mesh))
+    alpha, w = _init_alpha_w(setup, alpha0, w0)
     alpha = jax.device_put(alpha, data_sh)
-    w = jnp.zeros((d_run,), jnp.float32)
-    if w0 is not None:
-        w = w.at[:d].set(jnp.asarray(w0, jnp.float32).reshape(-1)[:d])
-    w = jax.device_put(w, rep_sh)
-    carry_dw = jax.device_put(jnp.zeros((d_run,), jnp.float32), rep_sh)
-    n_blocks = _n_blocks(n_loc, block_size)
-    key = jax.random.PRNGKey(seed)  # one chain for both paths
+    w = jax.device_put(w, w_sh)
+    carry_dw = jax.device_put(jnp.zeros((setup.w_len,), jnp.float32),
+                              w_sh)
+    key = jax.random.PRNGKey(setup.seed)  # one chain for both paths
 
     if pipeline:
-        solve_fn = make_sharded_pipeline(
-            mesh, loss, epochs=epochs, block_size=block_size,
-            n_blocks=n_blocks, n_rows=n, delay_rounds=delay_rounds,
-            use_kernel=use_k, interpret=interpret, ell=is_ell,
-            record=record, gap_every=gap_every,
-            shrink_every=st.shrink_every, shrink_tol=shrink_tol,
-            repack_threshold=(repack_threshold if st.repack else None),
-            adaptive=st.adaptive, adaptive_ratio=adaptive_ratio,
-            pod_delay_rounds=pod_delay_rounds)
+        solve_fn = build_pipeline(setup, epochs=epochs)
+        # identical block draws on the 1-D and 2-D paths at equal p and
+        # seed, so the two engines run the same update sequence
         alpha, w, carry_dw, gaps_arr, eps_arr, act_arr, delay_arr = (
-            solve_fn(X, sq_norms, alpha, w, key, carry_dw))
-        if (delay_rounds > 0 or st.shrink_every or st.adaptive
-                or pod_delay_rounds > 0):
+            solve_fn(setup.X, setup.sq_norms, alpha, w, key, carry_dw))
+        if (setup.delay_rounds > 0 or st.shrink_every or st.adaptive
+                or setup.pod_delay_rounds > 0):
             w = w + carry_dw  # flush in-flight aggregate (0 when sync)
-        if pod_on:
-            # invert the rowmap gather: scatter each pod's valid rows
-            # back to their global ids (padding slots all land on the
-            # sliced-off index n)
-            alpha = jnp.zeros((n + 1,), jnp.float32).at[ridx].set(alpha)
-        return ShardedResult(alpha[:n], w[:d], gaps_arr, epochs,
-                             eps_arr, act_arr, delay_arr)
-    epoch_fn = make_sharded_epoch(mesh, loss,
-                                  delay_rounds=delay_rounds,
-                                  use_kernel=use_k,
-                                  interpret=interpret, ell=is_ell)
-    alpha, w, gaps_arr = _drive_epochs(
-        epoch_fn, X, sq_norms, alpha, w, carry_dw, p=p, n_loc=n_loc,
-        n=n, n_blocks=n_blocks, block_size=block_size, epochs=epochs,
-        key=key, record=record, gap_every=gap_every,
-        delay_rounds=delay_rounds, blocks_sharding=data_sh,
-        gap_fn=lambda a: duality_gap(a[:n], X_gap, loss),
-    )
-    return ShardedResult(alpha[:n], w[:d], gaps_arr, epochs)
-
-
-def _solve_feature_sharded(
-    X_host,
-    loss,
-    *,
-    mesh: Mesh,
-    epochs: int,
-    block_size: int,
-    delay_rounds: int,
-    seed: int,
-    record: bool,
-    use_kernel: bool | str,
-    gap_every: int,
-    pipeline: bool,
-    overlap: bool | str,
-    shrink_every: int = 0,
-    shrink_tol: float = 1e-3,
-    repack: bool | str = "auto",
-    repack_threshold: float = 0.5,
-    adaptive: bool = False,
-    adaptive_ratio: float = 0.95,
-    pod_delay_rounds: int = 0,
-    alpha0=None,
-    w0=None,
-) -> ShardedResult:
-    """The 2-D (data × model) engine behind ``sharded_passcode_solve``
-    (DESIGN.md §10).  Rows/duals block-parallelize along ``data``
-    exactly like the 1-D path; w and the feature dimension shard along
-    ``model`` as per-feature-shard local ELL slices
-    (``ell_column_split``), streamed to devices without ever
-    materializing a dense (n, d) array.  On a 3-D ``("pod", "data",
-    "model")`` mesh the same engine runs pod-locally under the
-    Hybrid-DCA outer merge (DESIGN.md §13)."""
-    p, m = mesh.shape["data"], mesh.shape["model"]
-    pod_on = "pod" in mesh.axis_names
-    pods = mesh.shape["pod"] if pod_on else 1
-    is_ell = isinstance(X_host, EllMatrix)
-    ell = X_host if is_ell else dense_to_ell(X_host)
-    X_gap = X_host if is_ell else jnp.asarray(X_host)
-    n, d = ell.n_rows, ell.n_features
-    fse = ell_column_split(ell, m)
-    d_loc, k_loc = fse.d_loc, fse.k_loc
-    # ceil twice on a pod mesh: each pod's contiguous row shard carries
-    # its OWN padded tail (pod_row_layout), then subdivides over "data"
-    n_pod_loc = max(-(-n // pods), 1)
-    n_loc = -(-n_pod_loc // p)  # ceil: the tail is padded, not dropped
-    n_pad = pods * p * n_loc
-    use_k, interpret = _resolve_kernel_mode_feature(
-        use_kernel, n_loc, k_loc, d_loc, block_size
-    )
-    overlap_on = pipeline_overlap(overlap, two_d=True, fused=use_k,
-                                  delay_rounds=delay_rounds)
-    if pod_on:
-        # pod_merge_policy already rejected an explicit overlap=True;
-        # "auto" resolves off — the in-flight (base, Gram) psum is not
-        # valid under the merge-rescaled outer schedule
-        overlap_on = False
-    st = resolve_self_tuning(shrink_every, repack, adaptive,
-                             overlap_knob=overlap, overlap_on=overlap_on,
-                             pipeline=pipeline, record=record)
-    # lane-pad k_loc and the per-shard padded primal when fused; pad
-    # rows to n_pad with all-padding rows (local id d_loc, value 0)
-    k_run = lane_pad(k_loc) if use_k else k_loc
-    d1_loc = lane_pad(d_loc + 1) if use_k else d_loc + 1
-    if pod_on:
-        rowmap, _ = pod_row_layout(n, pods, per_pod_rows=p * n_loc)
-        ridx = jnp.asarray(rowmap.reshape(-1))  # global id, n = padding
-        cols = jnp.full((n + 1, m, k_run), d_loc, jnp.int32)
-        cols = cols.at[:n, :, :k_loc].set(
-            jnp.asarray(fse.indices, jnp.int32))[ridx]
-        vals = jnp.zeros((n + 1, m, k_run), jnp.float32)
-        vals = vals.at[:n, :, :k_loc].set(
-            jnp.asarray(fse.values, jnp.float32))[ridx]
-        sq_norms = jnp.ones((n + 1,), jnp.float32).at[:n].set(
-            fse.row_sq_norms())[ridx]
+        return _finalize(setup, alpha, w, gaps_arr, epochs, eps_arr,
+                         act_arr, delay_arr)
+    if setup.two_d:
+        epoch_fn = make_sharded_epoch_2d(
+            setup.mesh, loss, delay_rounds=setup.delay_rounds,
+            use_kernel=setup.use_k, interpret=setup.interpret,
+            overlap=st.overlap)
     else:
-        cols = jnp.full((n_pad, m, k_run), d_loc, jnp.int32)
-        cols = cols.at[:n, :, :k_loc].set(
-            jnp.asarray(fse.indices, jnp.int32))
-        vals = jnp.zeros((n_pad, m, k_run), jnp.float32)
-        vals = vals.at[:n, :, :k_loc].set(
-            jnp.asarray(fse.values, jnp.float32))
-        sq_norms = jnp.ones((n_pad,), jnp.float32).at[:n].set(
-            fse.row_sq_norms())
-    data_sh = named(mesh, data_axes(mesh))
-    model_sh = named(mesh, "model")
-    X = (
-        jax.device_put(cols, named(mesh, data_axes(mesh), "model", None)),
-        jax.device_put(vals, named(mesh, data_axes(mesh), "model", None)),
-    )
-    sq_norms = jax.device_put(sq_norms, data_sh)
-    if alpha0 is None:
-        alpha = jnp.zeros((n_pad,), jnp.float32)
-    else:
-        a_full = jnp.zeros((n + 1,), jnp.float32).at[:n].set(
-            jnp.asarray(alpha0, jnp.float32).reshape(-1)[:n])
-        alpha = a_full[ridx] if pod_on else jnp.concatenate(
-            [a_full[:n], jnp.zeros((n_pad - n,), jnp.float32)])
-    alpha = jax.device_put(alpha, data_sh)
-    # per-shard padded primal slices, concatenated: shard j owns
-    # w[j·d₁_loc : (j+1)·d₁_loc), dummy slot at local index d_loc
-    w = jnp.zeros((m * d1_loc,), jnp.float32)
-    if w0 is not None:
-        wp = jnp.zeros((m * d_loc,), jnp.float32).at[:d].set(
-            jnp.asarray(w0, jnp.float32).reshape(-1)[:d]).reshape(m, d_loc)
-        w = jnp.zeros((m, d1_loc), jnp.float32).at[:, :d_loc].set(
-            wp).reshape(-1)
-    w = jax.device_put(w, model_sh)
-    carry_dw = jax.device_put(jnp.zeros((m * d1_loc,), jnp.float32),
-                              model_sh)
-    n_blocks = _n_blocks(n_loc, block_size)
-    key = jax.random.PRNGKey(seed)  # one chain for both paths
-
-    if pipeline:
-        solve_fn = make_sharded_pipeline_2d(
-            mesh, loss, epochs=epochs, block_size=block_size,
-            n_blocks=n_blocks, n_rows=n, delay_rounds=delay_rounds,
-            use_kernel=use_k, interpret=interpret, record=record,
-            gap_every=gap_every, overlap=st.overlap,
-            shrink_every=st.shrink_every, shrink_tol=shrink_tol,
-            repack_threshold=(repack_threshold if st.repack else None),
-            adaptive=st.adaptive, adaptive_ratio=adaptive_ratio,
-            pod_delay_rounds=pod_delay_rounds)
-        # identical block draws to the 1-D solver at equal p and seed,
-        # so the two paths run the same update sequence
-        alpha, w, carry_dw, gaps_arr, eps_arr, act_arr, delay_arr = (
-            solve_fn(X, sq_norms, alpha, w, key, carry_dw))
-        if (delay_rounds > 0 or st.shrink_every or st.adaptive
-                or pod_delay_rounds > 0):
-            w = w + carry_dw  # flush in-flight aggregate (0 when sync)
-        if pod_on:
-            # invert the rowmap gather: scatter each pod's valid rows
-            # back to their global ids (padding slots land on index n)
-            alpha = jnp.zeros((n + 1,), jnp.float32).at[ridx].set(alpha)
-        w_full = w.reshape(m, d1_loc)[:, :d_loc].reshape(-1)[:d]
-        return ShardedResult(alpha[:n], w_full, gaps_arr, epochs,
-                             eps_arr, act_arr, delay_arr)
-    epoch_fn = make_sharded_epoch_2d(mesh, loss,
-                                     delay_rounds=delay_rounds,
-                                     use_kernel=use_k,
-                                     interpret=interpret,
-                                     overlap=st.overlap)
+        epoch_fn = make_sharded_epoch(
+            setup.mesh, loss, delay_rounds=setup.delay_rounds,
+            use_kernel=setup.use_k, interpret=setup.interpret,
+            ell=setup.ell)
     alpha, w, gaps_arr = _drive_epochs(
-        epoch_fn, X, sq_norms, alpha, w, carry_dw, p=p, n_loc=n_loc,
-        n=n, n_blocks=n_blocks, block_size=block_size, epochs=epochs,
-        key=key, record=record, gap_every=gap_every,
-        delay_rounds=delay_rounds, blocks_sharding=data_sh,
-        gap_fn=lambda a: duality_gap(a[:n], X_gap, loss),
+        epoch_fn, setup.X, setup.sq_norms, alpha, w, carry_dw,
+        p=setup.p, n_loc=setup.n_loc, n=setup.n,
+        n_blocks=setup.n_blocks, block_size=setup.block_size,
+        epochs=epochs, key=key, record=record,
+        gap_every=setup.gap_every, delay_rounds=setup.delay_rounds,
+        blocks_sharding=data_sh,
+        gap_fn=lambda a: duality_gap(a[:setup.n], setup.X_gap, loss),
     )
-    # stitch the true primal back out of the per-shard padded slices
-    w_full = w.reshape(m, d1_loc)[:, :d_loc].reshape(-1)[:d]
-    return ShardedResult(alpha[:n], w_full, gaps_arr, epochs)
+    return _finalize(setup, alpha, w, gaps_arr, epochs)
 
 
 def sharded_passcode_feature(

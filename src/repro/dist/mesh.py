@@ -301,6 +301,70 @@ def adaptive_delay_policy(gap_prev, gap_new, *, improve_ratio: float = 0.95):
     return (gap_new <= improve_ratio * gap_prev).astype(jnp.int32)
 
 
+def watchdog_trip(gap_prev, gap_new, eps_prev, eps_new, n_bad, *,
+                  blowup: float = 4.0, floor: float = 1e-3):
+    """On-device divergence watchdog for the pipelined solve
+    (DESIGN.md §14) — the health-code companion of
+    ``adaptive_delay_policy``: where the adaptive controller reads the
+    recorded gap trend to *tune* asynchrony, this reads the same trend
+    (plus the backward error ε = ‖w(α) − ŵ‖ of Table 2 and a NaN/Inf
+    census of the carried α/w) to decide whether the solve is still
+    healthy at all.
+
+    Inputs are the previous *healthy* record's (gap, eps) — seeded with
+    +inf so the first record only establishes the baseline — the fresh
+    record, and ``n_bad``, the psummed count of non-finite entries in
+    (α, ŵ).  Returns an int32 health code, device-uniform because every
+    input is:
+
+      0  healthy — the record becomes the next baseline;
+      1  divergence trend — gap or eps blew past ``blowup`` × its last
+         healthy value + ``floor`` (the absolute floor keeps float-noise
+         jitter around a converged eps ~1e-7 from tripping; a dropped or
+         duplicated pod merge shows up as an eps jump of O(‖Δw‖), orders
+         above it);
+      2  non-finite — anything NaN/Inf in α, ŵ, the gap or eps (a
+         poisoned psum lands here within one record interval).
+
+    jnp-traceable; the epoch scan latches ``max`` of the codes so a trip
+    is sticky for the rest of the segment and the rollback harness
+    (``repro.resilience``) reads one scalar after the dispatch."""
+    nonfin = ((n_bad > 0) | ~jnp.isfinite(gap_new)
+              | ~jnp.isfinite(eps_new))
+    div = ((gap_new > blowup * gap_prev + floor)
+           | (eps_new > blowup * eps_prev + floor))
+    return jnp.where(nonfin, 2, jnp.where(div, 1, 0)).astype(jnp.int32)
+
+
+def degrade_ladder(rung: int, *, delay_rounds: int,
+                   pod_delay_rounds: int, overlap) -> dict:
+    """Graceful-degradation ladder for the rollback harness
+    (DESIGN.md §14) — which asynchrony knobs a retry of a tripped
+    segment may keep.  Like ``pod_merge_policy``/``pipeline_overlap``,
+    *how much staleness a recovery is allowed* is distribution policy,
+    so it lives here; ``repro.resilience.solve_segmented`` consumes it.
+
+    Rung 0 replays the segment with the original knobs — the
+    transient-fault assumption (a poisoned psum, a corrupted payload
+    that re-materialization heals): replay from the healthy snapshot is
+    then *bit-identical* to the fault-free solve.  Rung 1 is the
+    persistent-fault response, applied when a same-knob retry trips
+    again: latch ``delay_rounds → 0``, drain the pod FIFO
+    (``pod_delay_rounds → 0``) and disable overlap — every source of
+    staleness the Liu–Wright bound charges is removed, trading speed
+    for the synchronous schedule's stability, exactly the one-way
+    direction ``adaptive_delay_policy`` anneals in.  Rungs are sticky
+    (the harness never climbs back up) and bounded by its retry budget,
+    after which ``SolverDiverged`` surfaces instead of silent garbage.
+    """
+    if rung <= 0:
+        return {"rung": 0, "delay_rounds": int(delay_rounds),
+                "pod_delay_rounds": int(pod_delay_rounds),
+                "overlap": overlap}
+    return {"rung": 1, "delay_rounds": 0, "pod_delay_rounds": 0,
+            "overlap": False}
+
+
 class SelfTuning(NamedTuple):
     """Resolved self-tuning configuration of one solve (see
     ``resolve_self_tuning``)."""

@@ -1,0 +1,22 @@
+"""Fault tolerance for the pipelined solver (DESIGN.md §14): segmented
+checkpoint/resume around the epoch scan, the on-device divergence
+watchdog + graceful-degradation ladder, and the deterministic
+fault-injection harness that exercises every recovery path in CI."""
+
+from repro.resilience.faults import FaultPlan, corrupt_payload
+from repro.resilience.segmented import ResilientResult, solve_segmented
+from repro.resilience.state import (
+    SolverDiverged,
+    drain_state,
+    load_solver_state,
+)
+
+__all__ = [
+    "FaultPlan",
+    "ResilientResult",
+    "SolverDiverged",
+    "corrupt_payload",
+    "drain_state",
+    "load_solver_state",
+    "solve_segmented",
+]

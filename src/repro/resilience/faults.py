@@ -1,0 +1,94 @@
+"""Declarative, seeded fault injection for the solver (DESIGN.md §14).
+
+A ``FaultPlan`` names *what* breaks and *when*, in solver coordinates:
+device faults key on the global epoch (compiled into the epoch scan as
+``(nan_e, drop_e, dup_e)`` — see ``_epoch_scan``), host faults key on
+the segment index (payload corruption, SIGKILL).  Everything is
+deterministic given the plan, so every recovery path replays exactly
+in CI — chaos testing without the chaos.
+
+Fault taxonomy → detection → recovery:
+
+  ``nan_psum_epoch``      NaN lands in the primal/merge psum at epoch e
+                          → watchdog non-finite census (code 2)
+                          → rollback + same-knob replay (bit-identical
+                            when the fault was transient)
+  ``drop_merge_epoch``    a cross-pod merge contributes nothing
+  ``dup_merge_epoch``     a cross-pod merge lands twice
+                          → gap/eps-trend divergence (code 1) or clean
+                            replay, depending on severity
+  ``corrupt_payload_segment``  NaNs poked into the ELL/dense values for
+                          one segment → non-finite census → rollback +
+                          healed replay
+  ``sigkill_segment``     the host dies after computing a segment but
+                          before checkpointing it → next process
+                          resumes from the last checkpoint and replays
+                          the segment bit-for-bit
+
+``persistent=True`` keeps a fault armed across rollbacks (recovery is
+then impossible and the ladder must exhaust into ``SolverDiverged``);
+the default is a transient fault that disarms after first detection.
+``async_only=True`` arms device faults only while the effective knobs
+keep asynchrony on — the rung-1 (synchronous) retry then survives,
+which is how the degradation ladder itself is exercised.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    nan_psum_epoch: int = -1
+    drop_merge_epoch: int = -1
+    dup_merge_epoch: int = -1
+    corrupt_payload_segment: int = -1
+    corrupt_frac: float = 0.05
+    sigkill_segment: int = -1
+    seed: int = 0
+    persistent: bool = False
+    async_only: bool = False
+
+    def device_fault(self, *, delay_rounds: int, pod_delay_rounds: int):
+        """The compiled ``(nan_e, drop_e, dup_e)`` triple for a segment
+        run under the given effective knobs, or None when no device
+        fault is armed.  ``async_only`` plans disarm once the ladder
+        has forced the solve synchronous."""
+        if (self.async_only and delay_rounds == 0
+                and pod_delay_rounds == 0):
+            return None
+        triple = (int(self.nan_psum_epoch), int(self.drop_merge_epoch),
+                  int(self.dup_merge_epoch))
+        return triple if any(v >= 0 for v in triple) else None
+
+    @property
+    def any_armed(self) -> bool:
+        return (self.nan_psum_epoch >= 0 or self.drop_merge_epoch >= 0
+                or self.dup_merge_epoch >= 0
+                or self.corrupt_payload_segment >= 0
+                or self.sigkill_segment >= 0)
+
+
+def corrupt_payload(setup, *, frac: float = 0.05, seed: int = 0):
+    """A copy of ``setup.X`` with ``frac`` of the value entries
+    NaN-poisoned (seeded — bit-reproducible), placed with the original
+    sharding: the 'corrupted payload' fault class.  Indices are left
+    intact; a NaN value is what a flipped mantissa bit in a DMA'd tile
+    degenerates to after one multiply."""
+    rng = np.random.default_rng(seed)
+
+    def poison(vals):
+        v = np.asarray(jax.device_get(vals))
+        mask = rng.random(v.shape) < frac
+        bad = jnp.asarray(np.where(mask, np.nan, v).astype(v.dtype))
+        return jax.device_put(bad, vals.sharding)
+
+    if isinstance(setup.X, tuple):
+        cols, vals = setup.X
+        return (cols, poison(vals))
+    return poison(setup.X)

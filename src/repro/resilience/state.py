@@ -1,0 +1,89 @@
+"""SolverState persistence + conversion for the segmented solver
+(DESIGN.md §14).
+
+The carried state of the pipelined solve is a flat ``{name: array}``
+dict (``repro.core.sharded.pipeline_state_keys``), which makes the
+checkpoint schema self-describing: ``save_checkpoint`` records each
+dict key as the leaf name in its manifest, so a restore needs NO state
+template — ``load_solver_state`` reads the manifest + npz back into
+the same flat dict.  That is what lets a resume target a *different*
+mesh: the raw host arrays come first, and the caller decides whether
+they bit-resume (layout match) or elastically warm-start (layout
+changed) before any ``device_put``.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class SolverDiverged(RuntimeError):
+    """The watchdog tripped and the retry/degradation ladder exhausted
+    its budget — the structured replacement for silently returning NaN
+    iterates.  Carries the last *healthy* state's result (``result``),
+    the global epoch reached (``epoch``) and the per-segment attempt
+    history (``history``)."""
+
+    def __init__(self, message, *, epoch: int, history, result=None):
+        super().__init__(message)
+        self.epoch = int(epoch)
+        self.history = tuple(history)
+        self.result = result
+
+
+def load_solver_state(ckpt_dir: str, step: int, *,
+                      validate: bool = True) -> dict:
+    """Template-free restore of a ``save_checkpoint``-written solver
+    checkpoint: returns the flat ``{name: np.ndarray}`` dict exactly as
+    saved (state leaves + ``meta_*`` scalars + the canonical
+    ``alpha_canon``/``w_canon`` pair), with the same prefix-hash
+    integrity check as ``restore_checkpoint``."""
+    path = os.path.join(ckpt_dir, f"ckpt_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    if validate:
+        hasher = hashlib.sha256()
+        for i in range(len(manifest["leaves"])):
+            hasher.update(data[f"leaf_{i}"].tobytes()[:4096])
+        if hasher.hexdigest() != manifest["content_hash"]:
+            raise ValueError(f"checkpoint {path} failed integrity check")
+    return {meta["name"]: data[key]
+            for key, meta in manifest["leaves"].items()}
+
+
+def drain_state(state: dict, target_keys) -> dict:
+    """Convert a carried SolverState to a degraded-knob key set (the
+    rung-1 ladder step, DESIGN.md §14): land every in-flight aggregate
+    — ``w += dw`` plus the whole pod FIFO — zero the async carries, and
+    force the adaptive latch synchronous.  Keys the degraded config no
+    longer carries (``pbuf``) are dropped; the one key it may *gain* is
+    ``dwo`` (disabling overlap flips the 2-D path onto the dyn round
+    scan), seeded with zeros.  Idempotent once synchronous."""
+    st = dict(state)
+    w = st["w"] + st["dw"]
+    if "pbuf" in st:
+        w = w + st["pbuf"].sum(0)
+    st["w"] = w
+    st["dw"] = jnp.zeros_like(st["dw"])
+    if "dwo" in st:
+        st["dwo"] = jnp.zeros_like(st["dwo"])
+    if "delay" in st:
+        st["delay"] = jnp.zeros_like(st["delay"])
+    target = set(target_keys)
+    for k in list(st):
+        if k not in target:
+            del st[k]
+    for k in target:
+        if k not in st:
+            if k != "dwo":
+                raise KeyError(
+                    f"cannot synthesize state leaf {k!r} while draining "
+                    "to a degraded config")
+            st[k] = jnp.zeros_like(st["w"])
+    return st

@@ -26,6 +26,35 @@ import jax
 import numpy as np
 
 
+_TMP_PREFIX = ".tmp_ckpt_"
+
+
+def _step_of(name: str) -> Optional[int]:
+    """Parse a directory entry as a checkpoint step: exactly
+    ``ckpt_<int>`` maps to the int, anything else — stray files, a
+    ``ckpt_12_old`` the operator renamed aside, the tmp dirs below — maps
+    to None so listers *skip* it instead of crashing or (worse)
+    mis-parsing ``ckpt_12_old`` as step 12 and garbage-collecting the
+    real ``ckpt_12``."""
+    if not name.startswith("ckpt_"):
+        return None
+    tail = name[len("ckpt_"):]
+    return int(tail) if tail.isdigit() else None
+
+
+def _sweep_stale_tmp(ckpt_dir: str) -> None:
+    """Remove orphaned ``.tmp_ckpt_*`` dirs: a process killed between
+    ``np.savez`` and the atomic rename leaves its tmp dir behind (the
+    ``except`` cleanup never runs on SIGKILL), and those grow without
+    bound under the segmented solver's per-segment saves.  Safe because
+    a tmp dir is only ever *observed* by the process that created it —
+    by the time another save runs here, the orphan's owner is gone."""
+    for entry in os.listdir(ckpt_dir):
+        if entry.startswith(_TMP_PREFIX):
+            shutil.rmtree(os.path.join(ckpt_dir, entry),
+                          ignore_errors=True)
+
+
 def _flatten_with_names(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     names, leaves = [], []
@@ -42,6 +71,7 @@ def _flatten_with_names(tree):
 def save_checkpoint(ckpt_dir: str, step: int, state) -> str:
     """Write ``<ckpt_dir>/ckpt_<step>`` atomically.  Returns the path."""
     os.makedirs(ckpt_dir, exist_ok=True)
+    _sweep_stale_tmp(ckpt_dir)
     names, leaves, _ = _flatten_with_names(state)
     arrays = {}
     manifest = {"step": int(step), "leaves": {}}
@@ -56,7 +86,7 @@ def save_checkpoint(ckpt_dir: str, step: int, state) -> str:
         hasher.update(arr.tobytes()[:4096])  # prefix hash: cheap integrity
     manifest["content_hash"] = hasher.hexdigest()
     final = os.path.join(ckpt_dir, f"ckpt_{step}")
-    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_ckpt_")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=_TMP_PREFIX)
     try:
         np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -73,13 +103,8 @@ def save_checkpoint(ckpt_dir: str, step: int, state) -> str:
 def latest_step(ckpt_dir: str) -> Optional[int]:
     if not os.path.isdir(ckpt_dir):
         return None
-    steps = []
-    for d in os.listdir(ckpt_dir):
-        if d.startswith("ckpt_"):
-            try:
-                steps.append(int(d.split("_")[1]))
-            except ValueError:
-                continue
+    steps = [s for s in map(_step_of, os.listdir(ckpt_dir))
+             if s is not None]
     return max(steps) if steps else None
 
 
@@ -128,10 +153,8 @@ def gc_checkpoints(ckpt_dir: str, keep: int = 3):
     """Delete all but the newest ``keep`` checkpoints."""
     if not os.path.isdir(ckpt_dir):
         return
-    steps = sorted(
-        int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
-        if d.startswith("ckpt_") and d.split("_")[1].isdigit()
-    )
+    steps = sorted(s for s in map(_step_of, os.listdir(ckpt_dir))
+                   if s is not None)
     for s in steps[:-keep]:
         shutil.rmtree(os.path.join(ckpt_dir, f"ckpt_{s}"),
                       ignore_errors=True)

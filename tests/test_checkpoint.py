@@ -72,6 +72,35 @@ def test_gc_keeps_last_k(tmp_path):
     assert latest_step(str(tmp_path)) == 5
 
 
+def test_save_sweeps_orphaned_tmp_dirs(tmp_path):
+    """A SIGKILL between np.savez and the atomic rename leaves a
+    ``.tmp_ckpt_*`` orphan; the next save sweeps it so per-segment
+    checkpointing can't grow the dir without bound."""
+    orphan = tmp_path / ".tmp_ckpt_dead"
+    orphan.mkdir()
+    (orphan / "arrays.npz").write_bytes(b"partial")
+    save_checkpoint(str(tmp_path), 1, _state())
+    assert not orphan.exists()
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_listers_skip_non_checkpoint_entries(tmp_path):
+    """``latest_step``/``gc_checkpoints`` only touch exact
+    ``ckpt_<int>`` entries: an operator's ``ckpt_12_old``, a stray
+    file, or ``ckpt_abc`` must be neither parsed as a step nor
+    garbage-collected."""
+    state = _state()
+    save_checkpoint(str(tmp_path), 3, state)
+    save_checkpoint(str(tmp_path), 12, state)
+    (tmp_path / "ckpt_12_old").mkdir()
+    (tmp_path / "ckpt_abc").mkdir()
+    (tmp_path / "notes.txt").write_text("keep me")
+    assert latest_step(str(tmp_path)) == 12
+    gc_checkpoints(str(tmp_path), keep=1)
+    left = sorted(os.listdir(tmp_path))
+    assert left == ["ckpt_12", "ckpt_12_old", "ckpt_abc", "notes.txt"]
+
+
 def test_loop_trains_and_resumes_deterministically(tmp_path):
     """Interrupted-and-resumed run lands on the same loss trajectory as an
     uninterrupted one (checkpoint + step-indexed data = resume-exact)."""

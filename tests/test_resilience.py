@@ -1,0 +1,244 @@
+"""Fault-tolerant segmented solver (DESIGN.md §14): segmented dispatch
+is bit-identical to the whole-solve path, checkpoint/resume replays
+exactly, the watchdog + rollback ladder recovers every fault class the
+chaos harness can arm, and the solver mouth validates its inputs."""
+
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cocoa import cocoa_pod_solve
+from repro.core.duals import Hinge, SquaredHinge
+from repro.core.sharded import sharded_passcode_solve
+from repro.resilience import FaultPlan, SolverDiverged, solve_segmented
+
+A = np.asarray
+
+
+def _data(n=96, d=12, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    y = np.where(rng.random(n) < 0.5, -1.0, 1.0).astype(np.float32)
+    return X * y[:, None], y
+
+
+def _bit_eq(a, b):
+    np.testing.assert_array_equal(A(a), A(b))
+
+
+@pytest.mark.parametrize("kw", [
+    dict(),
+    dict(delay_rounds=1),
+    dict(delay_rounds=1, shrink_every=2, adaptive=True),
+], ids=["sync", "delayed", "shrink+adaptive"])
+def test_segmented_matches_whole_solve(kw):
+    """Segment boundaries are invisible: the segmented dispatch carries
+    the full SolverState and keys every epoch decision on the global
+    epoch, so (α, w, gaps) match the one-dispatch solve bit-for-bit."""
+    X, _ = _data()
+    loss = Hinge(C=0.5)
+    base = sharded_passcode_solve(X, loss, epochs=6, seed=3, **kw)
+    r = solve_segmented(X, loss, epochs=6, checkpoint_every=2, seed=3,
+                        **kw)
+    assert r.health == 0 and r.attempts == (1, 1, 1)
+    _bit_eq(base.alpha, r.result.alpha)
+    _bit_eq(base.w_hat, r.result.w_hat)
+    _bit_eq(base.gaps, r.result.gaps)
+    _bit_eq(base.eps, r.result.eps)
+
+
+@pytest.mark.parametrize("mesh_axes,kw", [
+    (("data", "model"), dict(delay_rounds=1)),
+    (("pod", "data"), dict(pod_delay_rounds=1)),
+], ids=["2d", "pod"])
+def test_segmented_matches_engines(mesh_axes, kw):
+    X, _ = _data()
+    loss = SquaredHinge(C=1.0)
+    mesh = jax.make_mesh((1, 1), mesh_axes)
+    base = sharded_passcode_solve(X, loss, epochs=6, seed=4, mesh=mesh,
+                                  **kw)
+    r = solve_segmented(X, loss, epochs=6, checkpoint_every=2, seed=4,
+                        mesh=mesh, **kw)
+    _bit_eq(base.alpha, r.result.alpha)
+    _bit_eq(base.w_hat, r.result.w_hat)
+    _bit_eq(base.gaps, r.result.gaps)
+
+
+def test_resume_is_bit_identical(tmp_path):
+    """Kill-and-resume semantics without the kill: wipe the later
+    checkpoints, resume from the survivor, land on the uninterrupted
+    run's exact (α, w, gaps)."""
+    X, _ = _data()
+    loss = Hinge(C=0.5)
+    d = str(tmp_path)
+    full = solve_segmented(X, loss, epochs=6, checkpoint_every=2,
+                           seed=3, ckpt_dir=d, keep=10)
+    for s in (4, 6):
+        shutil.rmtree(os.path.join(d, f"ckpt_{s}"))
+    res = solve_segmented(X, loss, epochs=6, checkpoint_every=2,
+                          seed=3, ckpt_dir=d, keep=10, resume=True)
+    assert res.resumed_from == 2 and res.attempts == (1, 1)
+    _bit_eq(full.result.alpha, res.result.alpha)
+    _bit_eq(full.result.w_hat, res.result.w_hat)
+    _bit_eq(full.result.gaps, res.result.gaps)
+
+
+def test_resume_without_checkpoints_runs_fresh(tmp_path):
+    X, _ = _data()
+    r = solve_segmented(X, Hinge(C=0.5), epochs=4, checkpoint_every=2,
+                        seed=3, ckpt_dir=str(tmp_path), resume=True)
+    assert r.resumed_from is None and r.attempts == (1, 1)
+
+
+def test_nan_psum_fault_recovers_bit_identical():
+    """A transient NaN poisoning trips the non-finite census; rollback
+    to the last healthy boundary + same-knob replay makes the final
+    iterates bit-equal to the fault-free run."""
+    X, _ = _data()
+    loss = Hinge(C=0.5)
+    kw = dict(epochs=6, checkpoint_every=2, seed=3, delay_rounds=1)
+    clean = solve_segmented(X, loss, **kw)
+    r = solve_segmented(X, loss, fault_plan=FaultPlan(nan_psum_epoch=3),
+                        **kw)
+    assert r.attempts == (1, 2, 1) and r.rollbacks == 1
+    assert r.epochs_lost == 2 and r.rung == 0 and r.health == 0
+    _bit_eq(clean.result.alpha, r.result.alpha)
+    _bit_eq(clean.result.w_hat, r.result.w_hat)
+
+
+@pytest.mark.parametrize("plan", [
+    FaultPlan(drop_merge_epoch=2),
+    FaultPlan(dup_merge_epoch=2),
+], ids=["drop", "dup"])
+def test_pod_merge_faults_recover(plan):
+    """A dropped/duplicated cross-pod merge desyncs ŵ from α by
+    O(‖Δw‖); under the synchronous merge the eps baseline is tiny so
+    the trend watchdog trips, and the replay is bit-clean."""
+    X, _ = _data()
+    loss = Hinge(C=0.5)
+    mesh = jax.make_mesh((1, 1), ("pod", "data"))
+    kw = dict(epochs=6, checkpoint_every=2, seed=2, mesh=mesh)
+    clean = solve_segmented(X, loss, **kw)
+    r = solve_segmented(X, loss, fault_plan=plan, **kw)
+    assert r.rollbacks == 1 and r.attempts == (1, 2, 1)
+    _bit_eq(clean.result.alpha, r.result.alpha)
+    _bit_eq(clean.result.w_hat, r.result.w_hat)
+
+
+def test_merge_faults_need_pod_mesh():
+    X, _ = _data()
+    with pytest.raises(ValueError, match="pod"):
+        solve_segmented(X, Hinge(C=0.5), epochs=4, checkpoint_every=2,
+                        fault_plan=FaultPlan(drop_merge_epoch=1))
+
+
+def test_payload_corruption_recovers():
+    """NaNs poked into the device-resident values trip the census; the
+    retry re-reads the pristine ``setup.X`` (re-materialization heals)
+    and matches the clean run bit-for-bit."""
+    X, _ = _data()
+    loss = Hinge(C=0.5)
+    kw = dict(epochs=6, checkpoint_every=2, seed=3)
+    clean = solve_segmented(X, loss, **kw)
+    r = solve_segmented(
+        X, loss,
+        fault_plan=FaultPlan(corrupt_payload_segment=1, corrupt_frac=0.2),
+        **kw)
+    assert r.rollbacks == 1 and r.attempts == (1, 2, 1)
+    _bit_eq(clean.result.alpha, r.result.alpha)
+    _bit_eq(clean.result.w_hat, r.result.w_hat)
+
+
+def test_persistent_fault_raises_solver_diverged():
+    """When every retry (including the synchronous rung) keeps
+    tripping, the ladder exhausts into a structured ``SolverDiverged``
+    carrying the last healthy boundary's result — never silent NaNs."""
+    X, _ = _data()
+    with pytest.raises(SolverDiverged) as ei:
+        solve_segmented(X, Hinge(C=0.5), epochs=6, checkpoint_every=2,
+                        seed=3, max_retries=2,
+                        fault_plan=FaultPlan(nan_psum_epoch=3,
+                                             persistent=True))
+    ex = ei.value
+    assert ex.epoch == 2 and ex.history[-1] == 3
+    assert ex.result.rounds == 2
+    assert np.isfinite(A(ex.result.w_hat)).all()
+    assert np.isfinite(A(ex.result.alpha)).all()
+
+
+def test_async_only_fault_degrades_to_sync():
+    """A fault that only bites while asynchrony is on: same-knob
+    replays keep tripping, the rung-1 synchronous retry survives, and
+    the rung stays latched for the rest of the solve."""
+    X, _ = _data()
+    r = solve_segmented(
+        X, Hinge(C=0.5), epochs=6, checkpoint_every=2, seed=3,
+        delay_rounds=1,
+        fault_plan=FaultPlan(nan_psum_epoch=3, persistent=True,
+                             async_only=True))
+    assert r.rung == 1 and r.rollbacks == 2 and r.health == 0
+    assert r.attempts == (1, 3, 1)
+    assert np.isfinite(A(r.result.w_hat)).all()
+
+
+def test_labels_fold_like_prefolded():
+    X, y = _data()
+    raw = X * y[:, None]  # unfold: _data returns y_i*x_i
+    base = sharded_passcode_solve(X, Hinge(C=0.5), epochs=3, seed=1)
+    r = sharded_passcode_solve(raw, Hinge(C=0.5), epochs=3, seed=1, y=y)
+    _bit_eq(base.w_hat, r.w_hat)
+    _bit_eq(base.alpha, r.alpha)
+
+
+def test_input_validation_rejects_garbage():
+    X, y = _data(n=32, d=4)
+
+    class BadC:
+        C = 0.0
+
+        def delta(self, *a):  # pragma: no cover - never reached
+            return 0.0
+
+    with pytest.raises(ValueError, match="C must be positive"):
+        sharded_passcode_solve(X, BadC(), epochs=1)
+    Xn = X.copy()
+    Xn[3, 1] = np.nan
+    with pytest.raises(ValueError, match="non-finite"):
+        sharded_passcode_solve(Xn, Hinge(C=1.0), epochs=1)
+    with pytest.raises(ValueError, match="labels"):
+        sharded_passcode_solve(X, Hinge(C=1.0), epochs=1,
+                               y=np.zeros(32, np.float32))
+    with pytest.raises(ValueError, match="32 rows"):
+        sharded_passcode_solve(X, Hinge(C=1.0), epochs=1, y=y[:10])
+    yb = y.copy()
+    yb[0] = np.inf
+    with pytest.raises(ValueError, match="non-finite"):
+        sharded_passcode_solve(X, Hinge(C=1.0), epochs=1, y=yb)
+    with pytest.raises(ValueError, match="non-finite"):
+        solve_segmented(Xn, Hinge(C=1.0), epochs=1)
+
+
+@pytest.mark.parametrize("delay", [0, 2])
+def test_cocoa_oracle_segment_replay(delay):
+    """The host-loop pod oracle replays in segments: chaining
+    (α, w, FIFO, key) through ``flush=False`` reproduces the whole
+    solve bit-for-bit — the reference semantics the segmented SPMD
+    rollback is checked against."""
+    X, _ = _data(n=64, d=8, seed=1)
+    loss = Hinge(C=0.5)
+    kw = dict(n_pods=2, seed=5, pod_delay_rounds=delay)
+    full = cocoa_pod_solve(jnp.asarray(X), loss, epochs=6, **kw)
+    st = None
+    for s in range(3):
+        seg = dict(kw, epochs=2, epoch_start=2 * s, total_epochs=6,
+                   flush=(s == 2))
+        if st is not None:
+            seg.update(alpha0=st.alpha, w0=st.w, fifo0=st.fifo,
+                       key0=st.key)
+        st = cocoa_pod_solve(jnp.asarray(X), loss, **seg)
+    _bit_eq(full.alpha, st.alpha)
+    _bit_eq(full.w, st.w)
