@@ -1,0 +1,165 @@
+"""Online serving engine benchmark (DESIGN.md §15): what the hardened
+scoring path delivers and what its robustness features cost.
+
+Section 1 (latency/QPS): a threaded engine under a sustained closed-
+loop load — p50/p99 end-to-end latency and sustained QPS at a batch
+size the ladder never degrades.
+
+Section 2 (overload shedding): a flood far past queue + deadline
+capacity against a deliberately tiny queue — shed rate by reason and
+the terminal-outcome invariant (a row where served + shed ≠ submitted
+is a correctness regression, not a perf number).
+
+Section 3 (hot-swap pause): mid-stream snapshot publishes under live
+traffic — the grace-drain pause per swap and the zero-drop check.
+
+``main()`` returns rows for benchmarks/run.py to persist as
+BENCH_serve.json; ``--smoke`` shrinks everything to a CI-budget pass.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.serve import (
+    RequestShed,
+    ScoreOutcome,
+    ServeEngine,
+    SnapshotStore,
+    make_snapshot,
+)
+
+D = 256
+K_MAX = 16
+
+
+def _store(version: int = 1) -> SnapshotStore:
+    rng = np.random.default_rng(0)
+    return SnapshotStore(
+        make_snapshot(rng.standard_normal(D).astype(np.float32), version))
+
+
+def _payloads(rng, n):
+    out = []
+    for _ in range(n):
+        k = int(rng.integers(1, K_MAX + 1))
+        cols = rng.choice(D, size=k, replace=False)
+        out.append((cols, rng.standard_normal(k).astype(np.float32)))
+    return out
+
+
+def _bench_latency(rows, *, smoke: bool):
+    n_req = 400 if smoke else 5000
+    eng = ServeEngine(_store(), k_max=K_MAX, max_batch=64,
+                      queue_depth=512, default_deadline_s=30.0,
+                      batch_wait_s=0.0005)
+    rng = np.random.default_rng(1)
+    payloads = _payloads(rng, n_req)
+    eng.start()
+    t0 = time.perf_counter()
+    tickets = []
+    try:
+        for cols, vals in payloads:
+            t = eng.submit(cols=cols, vals=vals)
+            tickets.append(t)
+            if len(eng.queue) > 128:  # closed loop: don't outrun shed-free
+                time.sleep(0.0005)
+        outs = [t.result(30.0) for t in tickets]
+    finally:
+        eng.stop()
+    wall = time.perf_counter() - t0
+    served = sum(isinstance(o, ScoreOutcome) for o in outs)
+    h = eng.health()
+    rows.append({
+        "name": f"serve/latency/n={n_req},batch=64",
+        "us_per_call": wall / n_req * 1e6,
+        "derived": (f"qps={served / wall:.0f},"
+                    f"p50_ms={h.get('p50_ms', 0):.3f},"
+                    f"p99_ms={h.get('p99_ms', 0):.3f},"
+                    f"served={served},shed={h['shed_total']},"
+                    f"batches={h['batches']}"),
+    })
+
+
+def _bench_overload(rows, *, smoke: bool):
+    n_req = 300 if smoke else 3000
+    eng = ServeEngine(_store(), k_max=K_MAX, max_batch=8,
+                      queue_depth=32, default_deadline_s=0.01,
+                      batch_wait_s=0.0005)
+    rng = np.random.default_rng(2)
+    payloads = _payloads(rng, n_req)
+    eng.start()
+    t0 = time.perf_counter()
+    tickets = []
+    try:
+        for cols, vals in payloads:
+            tickets.append(eng.submit(cols=cols, vals=vals))
+        outs = [t.result(30.0) for t in tickets]
+    finally:
+        eng.stop()
+    wall = time.perf_counter() - t0
+    served = sum(isinstance(o, ScoreOutcome) for o in outs)
+    shed = [o for o in outs if isinstance(o, RequestShed)]
+    terminal_ok = served + len(shed) == n_req
+    by_reason = {}
+    for o in shed:
+        by_reason[o.reason] = by_reason.get(o.reason, 0) + 1
+    rows.append({
+        "name": f"serve/overload/n={n_req},depth=32,deadline=10ms",
+        "us_per_call": wall / n_req * 1e6,
+        "derived": (f"shed_rate={len(shed) / n_req:.3f},"
+                    f"deadline={by_reason.get('deadline', 0)},"
+                    f"backpressure={by_reason.get('backpressure', 0)},"
+                    f"all_terminal={terminal_ok}"),
+    })
+
+
+def _bench_hot_swap(rows, *, smoke: bool):
+    n_req = 400 if smoke else 4000
+    swaps = 3 if smoke else 10
+    eng = ServeEngine(_store(), k_max=K_MAX, max_batch=32,
+                      queue_depth=max(n_req, 64), swap_grace_s=1.0,
+                      default_deadline_s=30.0, batch_wait_s=0.0005)
+    rng = np.random.default_rng(3)
+    payloads = _payloads(rng, n_req)
+    swap_at = set(np.linspace(0, n_req, swaps + 2, dtype=int)[1:-1])
+    eng.start()
+    tickets, pauses = [], []
+    version = 1
+    try:
+        for i, (cols, vals) in enumerate(payloads):
+            tickets.append(eng.submit(cols=cols, vals=vals))
+            if i in swap_at:
+                version += 1
+                pauses.append(eng.publish(make_snapshot(
+                    rng.standard_normal(D).astype(np.float32), version)))
+        outs = [t.result(30.0) for t in tickets]
+    finally:
+        eng.stop()
+    served = sum(isinstance(o, ScoreOutcome) for o in outs)
+    versions = {o.version for o in outs if isinstance(o, ScoreOutcome)}
+    rows.append({
+        "name": f"serve/hot_swap/n={n_req},swaps={len(pauses)}",
+        "us_per_call": float(np.mean(pauses)) * 1e6 if pauses else 0.0,
+        "derived": (f"pause_max_ms={max(pauses) * 1e3:.3f},"
+                    f"zero_drop={served == n_req},"
+                    f"versions_seen={len(versions)}"),
+    })
+
+
+def main(smoke: bool = False) -> list:
+    rows: list = []
+    _bench_latency(rows, smoke=smoke)
+    _bench_overload(rows, smoke=smoke)
+    _bench_hot_swap(rows, smoke=smoke)
+    for r in rows:
+        emit(r["name"], r["us_per_call"], r["derived"])
+    return rows
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv)

@@ -14,7 +14,9 @@ wall-clock-to-ε of shrinking/adaptive vs the static schedules;
 the pod double-async section → BENCH_pod.json, convergence-vs-staleness
 sweep + pod-axis mesh overhead; the resilient solver section →
 BENCH_resilience.json, checkpoint overhead per segment + recovery
-cost/epochs-lost per fault class).
+cost/epochs-lost per fault class; the serving engine section →
+BENCH_serve.json, p50/p99 latency + sustained QPS, shed rate under
+overload, hot-swap pause).
 """
 
 from __future__ import annotations
@@ -64,6 +66,7 @@ def main() -> None:
         bench_resilience,
         bench_roofline,
         bench_scaling,
+        bench_serve,
         bench_sparse,
         bench_speedup,
     )
@@ -80,6 +83,7 @@ def main() -> None:
         ("Adaptive self-tuning solver", bench_adaptive, "adaptive"),
         ("Pod double-async solver", bench_pod, "pod"),
         ("Resilient solver", bench_resilience, "resilience"),
+        ("Online serving engine", bench_serve, "serve"),
         ("Roofline (dry-run artifacts)", bench_roofline, None),
     ]
     print("name,us_per_call,derived")

@@ -1894,13 +1894,17 @@ def _init_alpha_w(setup: SolverSetup, alpha0=None, w0=None):
     """Global padded (α, w) for a solve — zeros, or the PR-7 warm-start
     re-blocking of carried state onto whatever layout ``setup`` has
     (the elastic pod join/leave path, reused verbatim by checkpoint
-    restore across changed meshes)."""
+    restore across changed meshes).  A carried ``alpha0``/``w0``
+    *shorter* than the setup's n/d is the streaming-append warm start
+    (DESIGN.md §15): old coordinates keep their duals, freshly appended
+    rows enter at α = 0 (their optimal start — they have made no
+    contribution to w yet)."""
     n, n_pad, d = setup.n, setup.n_pad, setup.d
     if alpha0 is None:
         alpha = jnp.zeros((n_pad,), jnp.float32)
     else:
-        a_full = jnp.zeros((n + 1,), jnp.float32).at[:n].set(
-            jnp.asarray(alpha0, jnp.float32).reshape(-1)[:n])
+        a0 = jnp.asarray(alpha0, jnp.float32).reshape(-1)[:n]
+        a_full = jnp.zeros((n + 1,), jnp.float32).at[: a0.shape[0]].set(a0)
         alpha = (a_full[setup.ridx] if setup.pod_on else jnp.concatenate(
             [a_full[:n], jnp.zeros((n_pad - n,), jnp.float32)]))
     if setup.two_d:
@@ -1909,15 +1913,16 @@ def _init_alpha_w(setup: SolverSetup, alpha0=None, w0=None):
         # w[j·d₁_loc : (j+1)·d₁_loc), dummy slot at local index d_loc
         w = jnp.zeros((m * d1_loc,), jnp.float32)
         if w0 is not None:
-            wp = jnp.zeros((m * d_loc,), jnp.float32).at[:d].set(
-                jnp.asarray(w0, jnp.float32).reshape(-1)[:d]
-            ).reshape(m, d_loc)
+            v0 = jnp.asarray(w0, jnp.float32).reshape(-1)[:d]
+            wp = jnp.zeros((m * d_loc,), jnp.float32).at[
+                : v0.shape[0]].set(v0).reshape(m, d_loc)
             w = jnp.zeros((m, d1_loc), jnp.float32).at[:, :d_loc].set(
                 wp).reshape(-1)
     else:
         w = jnp.zeros((setup.w_len,), jnp.float32)
         if w0 is not None:
-            w = w.at[:d].set(jnp.asarray(w0, jnp.float32).reshape(-1)[:d])
+            v0 = jnp.asarray(w0, jnp.float32).reshape(-1)[:d]
+            w = w.at[: v0.shape[0]].set(v0)
     return alpha, w
 
 

@@ -74,6 +74,105 @@ def dense_to_ell(dense, k_max: int | None = None) -> EllMatrix:
     return EllMatrix(jnp.asarray(indices), jnp.asarray(values), d)
 
 
+# ---------------------------------------------- streaming row append ---
+
+
+def ell_row_nnz(mat: EllMatrix) -> np.ndarray:
+    """Per-row count of real (non-padding) entries, host numpy."""
+    return (np.asarray(mat.indices) < mat.n_features).sum(axis=1)
+
+
+def ell_repack(mat: EllMatrix, k_max: int) -> EllMatrix:
+    """Re-pack an ``EllMatrix`` to a different ``k_max`` (host-side).
+
+    Real entries are compacted to the front of each row (stable — the
+    within-row entry order is preserved) and the tail refilled with the
+    ``index == n_features`` / ``value == 0`` sentinel, the same padding
+    convention ``pod_row_layout`` uses for whole rows.  Like
+    ``dense_to_ell``, shrinking below a row's nonzero count raises —
+    truncation would silently corrupt X.
+    """
+    idx = np.asarray(mat.indices)
+    val = np.asarray(mat.values)
+    n, k = idx.shape
+    d = mat.n_features
+    k_max = max(int(k_max), 1)
+    nnz = (idx < d).sum(axis=1)
+    need = int(nnz.max()) if n else 0
+    if k_max < need:
+        raise ValueError(f"k_max={k_max} < max per-row nnz {need}")
+    # stable sort on the padding mask floats real entries to the front
+    order = np.argsort(idx >= d, axis=1, kind="stable")
+    idx_c = np.take_along_axis(idx, order, axis=1)[:, :min(k, k_max)]
+    val_c = np.take_along_axis(val, order, axis=1)[:, :min(k, k_max)]
+    out_idx = np.full((n, k_max), d, dtype=np.int32)
+    out_val = np.zeros((n, k_max), dtype=np.float32)
+    out_idx[:, : idx_c.shape[1]] = idx_c
+    out_val[:, : idx_c.shape[1]] = val_c
+    return EllMatrix(jnp.asarray(out_idx), jnp.asarray(out_val), d)
+
+
+def ell_append(mat: EllMatrix, rows: EllMatrix,
+               k_max: int | None = None) -> EllMatrix:
+    """Append ``rows`` below ``mat`` (host-side) — the streaming-ingest
+    path of the serving engine (DESIGN.md §15): fresh labeled rows get
+    ELL-packed and stacked under the carried block structure, and the
+    warm-start re-solve resumes with the old duals in place and the new
+    rows entering at α = 0.
+
+    Both operands must share ``n_features``.  ``k_max`` defaults to
+    ``max(mat.k_max, rows.k_max)`` — never lossy; forcing it smaller
+    raises inside ``ell_repack`` if any row would truncate.
+    """
+    if rows.n_features != mat.n_features:
+        raise ValueError(
+            f"n_features mismatch: have {mat.n_features}, "
+            f"appending {rows.n_features}")
+    if k_max is None:
+        k_max = max(mat.k_max, rows.k_max)
+    a = ell_repack(mat, k_max)
+    b = ell_repack(rows, k_max)
+    return EllMatrix(
+        jnp.concatenate([a.indices, b.indices], axis=0),
+        jnp.concatenate([a.values, b.values], axis=0),
+        mat.n_features,
+    )
+
+
+def ell_from_rows(rows, d: int, k_max: int | None = None) -> EllMatrix:
+    """Pack a list of sparse rows ``[(cols, vals), ...]`` into an
+    ``EllMatrix`` (host-side) without densifying — the request/ingest
+    format of the serving engine.
+
+    Every ``cols`` must hold ids in [0, d) matching ``vals`` in length;
+    ``k_max`` defaults to the longest row (≥ 1), forcing it smaller
+    raises like ``dense_to_ell``.
+    """
+    d = int(d)
+    packed = []
+    for i, (cols, vals) in enumerate(rows):
+        c = np.asarray(cols, dtype=np.int64).reshape(-1)
+        v = np.asarray(vals, dtype=np.float32).reshape(-1)
+        if c.shape[0] != v.shape[0]:
+            raise ValueError(
+                f"row {i}: {c.shape[0]} ids vs {v.shape[0]} values")
+        if c.size and (c.min() < 0 or c.max() >= d):
+            raise ValueError(f"row {i}: column id out of range [0, {d})")
+        packed.append((c, v))
+    need = max([len(c) for c, _ in packed], default=0) or 1
+    if k_max is None:
+        k_max = need
+    elif k_max < need:
+        raise ValueError(f"k_max={k_max} < max per-row nnz {need}")
+    n = len(packed)
+    indices = np.full((n, k_max), d, dtype=np.int32)
+    values = np.zeros((n, k_max), dtype=np.float32)
+    for i, (c, v) in enumerate(packed):
+        indices[i, : len(c)] = c
+        values[i, : len(c)] = v
+    return EllMatrix(jnp.asarray(indices), jnp.asarray(values), d)
+
+
 def ell_row_dot(mat: EllMatrix, w_pad: jnp.ndarray, i) -> jnp.ndarray:
     """w·x_i against a (d+1,) padded primal vector. O(k_max)."""
     idx = mat.indices[i]

@@ -443,3 +443,104 @@ def dcd_block_rows(d: int, *, vmem_bytes: int = VMEM_BYTES,
     while b > 8 and 4 * (b * dp + 2 * dp + 3 * b) > headroom * vmem_bytes:
         b //= 2
     return b
+
+
+# --- serving admission / degradation policy (DESIGN.md §15) ----------
+#
+# Like the VMEM admission predicates above, *what load the serving
+# engine may admit and how it backs off under pressure* is distribution
+# policy: it decides how much work reaches the mesh per dispatch.  The
+# engine in ``repro.serve`` only consumes these rules.
+
+
+def serve_admission_policy(*, queue_depth: int, max_batch: int,
+                           deadline_s: float, swap_grace_s: float) -> dict:
+    """Validate and normalise the serving admission knobs
+    (DESIGN.md §15).
+
+    ``queue_depth`` bounds the request queue — beyond it, offers are
+    refused and the caller sheds with a backpressure outcome instead of
+    growing an unbounded backlog.  ``max_batch`` is the scoring
+    dispatch's compiled batch shape (the degrade ladder only lowers the
+    *live* count, never the shape, so overload can't trigger a
+    recompile storm).  ``deadline_s`` is the default per-request
+    deadline; ``swap_grace_s`` bounds how long a hot-swap publish waits
+    for pinned readers to drain before returning with stragglers still
+    in flight (they finish on the old snapshot — drained late beats
+    dropped)."""
+    depth, batch = int(queue_depth), int(max_batch)
+    if depth < 1:
+        raise ValueError(f"queue_depth must be >= 1, got {queue_depth}")
+    if batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    if not (float(deadline_s) > 0.0):
+        raise ValueError(f"deadline_s must be > 0, got {deadline_s}")
+    if float(swap_grace_s) < 0.0:
+        raise ValueError(
+            f"swap_grace_s must be >= 0, got {swap_grace_s}")
+    return {"queue_depth": depth, "max_batch": batch,
+            "deadline_s": float(deadline_s),
+            "swap_grace_s": float(swap_grace_s)}
+
+
+def serve_rung(occupancy: float, prev_rung: int = 0, *,
+               up: tuple = (0.5, 0.85),
+               down: tuple = (0.2, 0.6)) -> int:
+    """Occupancy-driven rung selector for ``serve_degrade_ladder``
+    (DESIGN.md §15), with hysteresis so a queue hovering at a threshold
+    doesn't flap the ladder every step.
+
+    ``occupancy`` is queue fill ∈ [0, 1].  Climb to rung r+1 while
+    occupancy ≥ ``up[r]``; descend to rung r−1 only once occupancy has
+    fallen below ``down[r−1]`` (< the matching ``up``, giving the dead
+    band).  Unlike the solver's recovery ladder this one is *not*
+    sticky — overload is a load condition, not a fault, and the engine
+    should return to full service when the flood passes."""
+    occ = float(occupancy)
+    r = int(prev_rung)
+    if not (0 <= r <= len(up)):
+        raise ValueError(f"prev_rung out of range: {prev_rung}")
+    while r < len(up) and occ >= up[r]:
+        r += 1
+    while r > 0 and occ < down[r - 1]:
+        r -= 1
+    return r
+
+
+def serve_degrade_ladder(rung: int, *, max_batch: int) -> dict:
+    """Overload-degradation ladder for the serving engine
+    (DESIGN.md §15) — the serve-side mirror of the solver's
+    ``degrade_ladder``: which throughput knobs each pressure rung
+    keeps.
+
+    Rung 0 is full service: score at the full compiled ``max_batch``
+    and let incremental training run.  Rung 1 shrinks the *live* batch
+    to ``max_batch // 4`` (the compiled shape is unchanged) so each
+    dispatch returns sooner and deadline-expired requests are shed at a
+    finer cadence — bounding tail latency at the cost of peak
+    throughput.  Rung 2 additionally pauses incremental training
+    (``train=False``): the engine answers from the last healthy
+    snapshot only, spending every cycle draining the queue — the
+    stale-model-only mode the paper's staleness tolerance makes safe.
+    Rungs above 2 clamp to 2."""
+    r = max(0, min(int(rung), 2))
+    if int(max_batch) < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    live = int(max_batch) if r == 0 else max(1, int(max_batch) // 4)
+    return {"rung": r, "max_batch": live, "train": r < 2}
+
+
+def drift_trip(err_base, err_new, *, ratio: float = 2.0,
+               floor: float = 0.05):
+    """Distribution-drift trigger for the warm-start re-solve
+    (DESIGN.md §15) — the serve-side sibling of ``watchdog_trip``:
+    where the watchdog reads the solver's own health trend, this reads
+    the *model-vs-stream* trend, the misclassification rate of the
+    published snapshot on freshly ingested labeled rows.
+
+    Trips (returns 1) when the fresh error exceeds ``ratio`` × the
+    error the snapshot had on the data it was trained against plus an
+    absolute ``floor`` — the floor keeps small-sample noise on a
+    near-perfect baseline (err_base ≈ 0) from tripping on one bad row.
+    jnp-traceable and device-uniform like the watchdog."""
+    return (err_new > ratio * err_base + floor).astype(jnp.int32)

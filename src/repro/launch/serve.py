@@ -52,7 +52,11 @@ def main(argv=None):
     decode = jax.jit(make_decode_step(cfg))
     tok = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1).astype(
         jnp.int32)
-    toks = [np.asarray(tok)]
+    # keep the loop free of per-token host syncs: positions come from a
+    # host-side counter (cache.length == S after prefill, +1 per step)
+    # and tokens stay on device until one device_get at the end
+    toks = [tok]
+    pos = S
     t0 = time.time()
     for _ in range(args.gen - 1):
         step_in = {}
@@ -61,12 +65,13 @@ def main(argv=None):
         else:
             step_in["tokens"] = tok[:, None]
         if cfg.mrope_sections:
-            step_in["positions"] = jnp.full((3, B, 1), int(cache.length),
-                                            jnp.int32)
+            step_in["positions"] = jnp.full((3, B, 1), pos, jnp.int32)
         tok, _, cache = decode(params, step_in, cache)
-        toks.append(np.asarray(tok))
+        pos += 1
+        toks.append(tok)
+    jax.block_until_ready(tok)  # the loop above is fully async now
     dt = (time.time() - t0) / max(args.gen - 1, 1)
-    out = np.stack(toks, 1)
+    out = np.stack(jax.device_get(toks), 1)
     print(f"decode {dt*1e3:.1f} ms/token/batch")
     for b in range(min(B, 3)):
         print(f"  req{b}: {out[b][:10].tolist()}")

@@ -8,6 +8,7 @@ from repro.resilience.segmented import ResilientResult, solve_segmented
 from repro.resilience.state import (
     SolverDiverged,
     drain_state,
+    load_newest_solver_state,
     load_solver_state,
 )
 
@@ -17,6 +18,7 @@ __all__ = [
     "SolverDiverged",
     "corrupt_payload",
     "drain_state",
+    "load_newest_solver_state",
     "load_solver_state",
     "solve_segmented",
 ]

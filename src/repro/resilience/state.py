@@ -57,6 +57,38 @@ def load_solver_state(ckpt_dir: str, step: int, *,
             for key, meta in manifest["leaves"].items()}
 
 
+def load_newest_solver_state(ckpt_dir: str, *, validate: bool = True,
+                             attempts: int = 8):
+    """GC-tolerant restore: load the newest loadable solver checkpoint,
+    returning ``(state, step)``.
+
+    The serve hot-swap loader races the trainer's ``gc_checkpoints``
+    (DESIGN.md §15): a step listed by ``available_steps`` can vanish —
+    whole dir, or just ``manifest.json``/``arrays.npz`` mid-rename —
+    between listing and open.  That surfaces as ``FileNotFoundError``;
+    this walks newest → oldest, falling back to the next-older step on
+    every miss, and re-lists (the snapshot itself is stale the moment
+    GC runs) up to ``attempts`` times before giving up.  Integrity
+    failures (a genuinely corrupt payload) still raise immediately —
+    falling back silently past corruption would mask real damage."""
+    from repro.train.checkpoint import available_steps
+
+    last_err: Exception | None = None
+    for _ in range(max(int(attempts), 1)):
+        steps = available_steps(ckpt_dir)
+        if not steps:
+            break
+        for step in reversed(steps):
+            try:
+                return load_solver_state(
+                    ckpt_dir, step, validate=validate), int(step)
+            except FileNotFoundError as e:  # GC won the race; next-older
+                last_err = e
+    raise FileNotFoundError(
+        f"no loadable checkpoint in {ckpt_dir!r}"
+    ) from last_err
+
+
 def drain_state(state: dict, target_keys) -> dict:
     """Convert a carried SolverState to a degraded-knob key set (the
     rung-1 ladder step, DESIGN.md §14): land every in-flight aggregate

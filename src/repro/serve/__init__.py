@@ -1,5 +1,42 @@
-"""Serving: KV/state caches, prefill + decode steps, batching."""
+"""Serving: KV/state caches, prefill + decode steps, batching — and the
+hardened online scoring engine for the linear models (DESIGN.md §15):
+bounded request queue with backpressure + deadline shedding, versioned
+zero-drop snapshot hot-swap, occupancy degrade ladder, and
+drift-triggered warm-start incremental training."""
 
+from repro.serve.engine import ServeEngine
+from repro.serve.metrics import ServeMetrics
+from repro.serve.queue import (
+    BoundedRequestQueue,
+    Request,
+    RequestShed,
+    ScoreOutcome,
+    Ticket,
+)
+from repro.serve.snapshot import (
+    ModelSnapshot,
+    SnapshotStore,
+    load_snapshot,
+    make_snapshot,
+    snapshot_from_result,
+)
 from repro.serve.step import make_decode_step, make_prefill_step
+from repro.serve.trainer import IncrementalTrainer
 
-__all__ = ["make_prefill_step", "make_decode_step"]
+__all__ = [
+    "BoundedRequestQueue",
+    "IncrementalTrainer",
+    "ModelSnapshot",
+    "Request",
+    "RequestShed",
+    "ScoreOutcome",
+    "ServeEngine",
+    "ServeMetrics",
+    "SnapshotStore",
+    "Ticket",
+    "load_snapshot",
+    "make_decode_step",
+    "make_prefill_step",
+    "make_snapshot",
+    "snapshot_from_result",
+]

@@ -1,0 +1,306 @@
+"""The hardened online scoring engine (DESIGN.md §15).
+
+One continuously-running loop batches queued requests into a single
+jitted sparse-dot dispatch against the pinned model snapshot — the
+serving analogue of the paper's stale-read tolerance: scorers read a
+(possibly slightly stale) published w while warm-start incremental
+solves run beside them, just as PASSCoDe threads read a stale shared
+primal.
+
+Robustness surface, in request order:
+
+  * the *mouth* validates every payload (finite values, shape/k_max
+    bounds, column ids in range) — a bad request is shed with a
+    structured ``RequestShed("invalid")`` instead of poisoning the
+    shared batch (the serve-side twin of ``_validate_solver_inputs``);
+  * admission is deadline-aware and backpressured: an already-expired
+    deadline sheds immediately, a full ``BoundedRequestQueue`` sheds
+    with ``"backpressure"`` — the queue never grows without bound;
+  * the loop walks the ``serve_degrade_ladder`` on queue occupancy
+    (with ``serve_rung`` hysteresis): full batch → quarter batch →
+    stale-model-only while the trainer catches up;
+  * scoring pins a snapshot version per batch (``SnapshotStore``), so a
+    concurrent ``publish`` (pointer flip + grace drain) neither drops
+    nor version-mixes in-flight requests;
+  * every request reaches exactly one terminal outcome — ``stop``
+    drains the queue and sheds leftovers with ``"shutdown"``.
+
+The scoring dispatch has a *fixed* compiled shape (max_batch, k_max):
+the ladder only lowers the live row count and the sentinel padding
+(column id d → dummy slot, the ELL convention) inerts unused slots, so
+overload can never trigger a recompile storm.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.mesh import (
+    serve_admission_policy,
+    serve_degrade_ladder,
+    serve_rung,
+)
+from repro.serve.metrics import ServeMetrics
+from repro.serve.queue import (
+    BoundedRequestQueue,
+    Request,
+    RequestShed,
+    ScoreOutcome,
+    Ticket,
+)
+from repro.serve.snapshot import ModelSnapshot, SnapshotStore
+
+
+def _score_fn(k_max: int):
+    """Jitted batched sparse dot: (d+1,) padded w against fixed-shape
+    (B, k_max) ELL rows.  One compile per engine (shapes never vary)."""
+
+    @jax.jit
+    def score(w_pad, cols, vals):
+        return jnp.sum(w_pad[cols] * vals, axis=1)
+
+    return score
+
+
+class ServeEngine:
+    """Batched scoring over a ``SnapshotStore``, with an optional
+    ``IncrementalTrainer`` for drift-triggered warm-start re-solves."""
+
+    def __init__(self, store: SnapshotStore, *, k_max: int,
+                 max_batch: int = 64, queue_depth: int = 256,
+                 default_deadline_s: float = 0.5,
+                 swap_grace_s: float = 0.5, trainer=None,
+                 batch_wait_s: float = 0.002, auto_train: bool = False):
+        knobs = serve_admission_policy(
+            queue_depth=queue_depth, max_batch=max_batch,
+            deadline_s=default_deadline_s, swap_grace_s=swap_grace_s)
+        self.store = store
+        self.k_max = int(k_max)
+        if self.k_max < 1:
+            raise ValueError(f"k_max must be >= 1, got {k_max}")
+        self.max_batch = knobs["max_batch"]
+        self.default_deadline_s = knobs["deadline_s"]
+        self.swap_grace_s = knobs["swap_grace_s"]
+        self.queue = BoundedRequestQueue(knobs["queue_depth"])
+        self.metrics = ServeMetrics()
+        self.trainer = trainer
+        self.batch_wait_s = float(batch_wait_s)
+        self.auto_train = bool(auto_train)
+        self._score = _score_fn(self.k_max)
+        # reusable host staging buffers (engine loop only)
+        self._cols = np.empty((self.max_batch, self.k_max), np.int32)
+        self._vals = np.empty((self.max_batch, self.k_max), np.float32)
+        self._rung = 0
+        self._rid = 0
+        self._rid_lock = threading.Lock()
+        self._work = threading.Event()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._accepting = True
+
+    # ------------------------------------------------- admission ----
+
+    def _next_rid(self) -> int:
+        with self._rid_lock:
+            self._rid += 1
+            return self._rid
+
+    def _pack(self, d: int, features, cols, vals):
+        """Validate one payload into (cols, vals) ≤ k_max entries.
+        Raises ``ValueError`` with the shed detail on anything that
+        would poison the shared batch."""
+        if features is not None:
+            f = np.asarray(features, np.float32).reshape(-1)
+            if f.shape[0] != d:
+                raise ValueError(
+                    f"expected {d} features, got {f.shape[0]}")
+            if not np.all(np.isfinite(f)):
+                raise ValueError("non-finite feature values")
+            (c,) = np.nonzero(f)
+            if c.shape[0] > self.k_max:
+                raise ValueError(
+                    f"{c.shape[0]} nonzeros > k_max={self.k_max}")
+            return c.astype(np.int32), f[c]
+        c = np.asarray(cols, np.int64).reshape(-1)
+        v = np.asarray(vals, np.float32).reshape(-1)
+        if c.shape[0] != v.shape[0]:
+            raise ValueError(f"{c.shape[0]} ids vs {v.shape[0]} values")
+        if c.shape[0] > self.k_max:
+            raise ValueError(f"{c.shape[0]} nonzeros > k_max={self.k_max}")
+        if c.size and (c.min() < 0 or c.max() >= d):
+            raise ValueError(f"column id out of range [0, {d})")
+        if not np.all(np.isfinite(v)):
+            raise ValueError("non-finite feature values")
+        return c.astype(np.int32), v
+
+    def submit(self, features=None, *, cols=None, vals=None,
+               deadline_s: Optional[float] = None) -> Ticket:
+        """Admit one scoring request.  Always returns a ``Ticket`` that
+        reaches a terminal outcome; invalid / expired / overload
+        requests are shed immediately with the structured reason."""
+        rid = self._next_rid()
+        ticket = Ticket()
+        if not self._accepting:
+            ticket.resolve(RequestShed(rid, "shutdown", "engine stopped"))
+            self.metrics.record_shed("shutdown")
+            return ticket
+        d = self.store.current().d
+        try:
+            c, v = self._pack(d, features, cols, vals)
+        except ValueError as e:
+            ticket.resolve(RequestShed(rid, "invalid", str(e)))
+            self.metrics.record_shed("invalid")
+            return ticket
+        ttl = self.default_deadline_s if deadline_s is None else float(
+            deadline_s)
+        now = time.monotonic()
+        req = Request(rid, c, v, now + ttl, ticket)
+        if ttl <= 0:
+            ticket.resolve(RequestShed(rid, "deadline",
+                                       "expired before admission"))
+            self.metrics.record_shed("deadline")
+            return ticket
+        if not self.queue.offer(req):
+            ticket.resolve(RequestShed(rid, "backpressure", "queue full"))
+            self.metrics.record_shed("backpressure")
+            return ticket
+        self._work.set()
+        return ticket
+
+    # ------------------------------------------------ engine loop ----
+
+    def step(self, now: Optional[float] = None) -> int:
+        """One engine iteration: walk the degrade ladder, shed the
+        expired, score one pinned batch.  Synchronous — the background
+        loop is just this on a thread; tests drive it directly for
+        determinism.  Returns the number of requests scored."""
+        self._rung = serve_rung(self.queue.occupancy(), self._rung)
+        knobs = serve_degrade_ladder(self._rung, max_batch=self.max_batch)
+        now = time.monotonic() if now is None else now
+        live, expired = self.queue.take(knobs["max_batch"], now)
+        for req in expired:
+            req.ticket.resolve(RequestShed(req.rid, "deadline",
+                                           "expired in queue"))
+        if expired:
+            self.metrics.record_shed("deadline", len(expired))
+        if not live:
+            return 0
+        snap = self.store.pin()
+        try:
+            cols, vals = self._cols, self._vals
+            cols[:] = snap.d  # sentinel: unused slots hit the dummy slot
+            vals[:] = 0.0
+            for i, req in enumerate(live):
+                k = req.cols.shape[0]
+                cols[i, :k] = req.cols
+                vals[i, :k] = req.vals
+            scores = np.asarray(
+                self._score(jnp.asarray(snap.w_pad), jnp.asarray(cols),
+                            jnp.asarray(vals)))
+            done = time.monotonic()
+            lats = []
+            for i, req in enumerate(live):
+                lat = done - req.enqueued
+                req.ticket.resolve(ScoreOutcome(
+                    req.rid, float(scores[i]), snap.version, lat))
+                lats.append(lat)
+            self.metrics.record_batch(lats, self._rung)
+        finally:
+            self.store.unpin(snap.version)
+        return len(live)
+
+    def _loop(self):
+        while not self._stop.is_set():
+            n = self.step()
+            if n == 0:
+                if self.auto_train and self.trainer is not None:
+                    self.train_if_drifted()
+                self._work.clear()
+                self._work.wait(self.batch_wait_s)
+
+    def start(self):
+        if self._thread is not None:
+            raise RuntimeError("engine already started")
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._loop,
+                                        name="serve-engine", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self, drain: bool = True):
+        """Stop the loop.  ``drain`` scores what is queued; anything
+        still left afterwards is shed with ``"shutdown"`` — every
+        admitted request still reaches a terminal outcome."""
+        self._accepting = False
+        self._stop.set()
+        self._work.set()
+        if self._thread is not None:
+            self._thread.join(timeout=10.0)
+            self._thread = None
+        if drain:
+            while len(self.queue):
+                self.step()
+        leftovers = self.queue.drain()
+        for req in leftovers:
+            req.ticket.resolve(RequestShed(req.rid, "shutdown",
+                                           "engine stopped"))
+        if leftovers:
+            self.metrics.record_shed("shutdown", len(leftovers))
+
+    # -------------------------------------------- train / publish ----
+
+    def publish(self, snapshot: ModelSnapshot) -> float:
+        """Hot-swap to ``snapshot``; returns the drain pause (s)."""
+        pause = self.store.publish(snapshot, grace_s=self.swap_grace_s)
+        self.metrics.record_swap(pause)
+        return pause
+
+    def ingest(self, rows, y) -> int:
+        """Stream freshly labeled rows to the trainer's buffer."""
+        if self.trainer is None:
+            raise RuntimeError("engine has no trainer attached")
+        return self.trainer.add_labeled(rows, y)
+
+    def train_if_drifted(self, force: bool = False,
+                         epochs: Optional[int] = None):
+        """Warm-start re-solve + hot-swap when the drift statistic
+        trips (or ``force``).  Blocked at ladder rung 2 (stale-model-
+        only).  A failed solve (retry budget exhausted) publishes
+        nothing — serving stays on the last healthy snapshot."""
+        if self.trainer is None:
+            return None
+        knobs = serve_degrade_ladder(self._rung, max_batch=self.max_batch)
+        if not knobs["train"] and not force:
+            return None
+        if not force and not self.trainer.drifted():
+            return None
+        res = self.trainer.resolve(epochs=epochs)
+        if res is None:
+            return None
+        from repro.serve.snapshot import snapshot_from_result
+
+        self.publish(snapshot_from_result(res, self.store.version + 1))
+        return res
+
+    # ----------------------------------------------------- health ----
+
+    def health(self) -> dict:
+        out = self.metrics.snapshot()
+        out.update({
+            "queue_len": len(self.queue),
+            "occupancy": self.queue.occupancy(),
+            "rung": self._rung,
+            "version": self.store.version,
+            "accepting": self._accepting,
+        })
+        if self.trainer is not None:
+            out["trainer"] = dict(self.trainer.ledger)
+            out["pending_rows"] = self.trainer.pending_rows
+        return out

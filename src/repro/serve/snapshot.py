@@ -1,0 +1,136 @@
+"""Versioned model snapshots + zero-drop hot-swap (DESIGN.md §15).
+
+A ``ModelSnapshot`` is the immutable published unit: the padded primal
+``w_pad`` (dummy slot at index d, matching the ELL padding convention
+of ``repro.data.sparse``), the carried duals for the next warm start,
+and a monotonically increasing version.  ``SnapshotStore`` is the swap
+protocol: scoring batches *pin* the current version for their lifetime,
+``publish`` flips the pointer first (new pins immediately see the new
+version) and then grace-drains the old version's pins — in-flight
+batches finish on the snapshot they pinned, so a swap can neither drop
+nor version-mix a batch.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+
+class ModelSnapshot(NamedTuple):
+    """One published model version (host arrays — the engine moves
+    ``w_pad`` on device once per jitted call)."""
+
+    w_pad: np.ndarray          # (d + 1,) float32, dummy slot at d
+    version: int
+    d: int
+    alpha: Optional[np.ndarray] = None   # carried duals (warm start)
+    meta: Optional[dict] = None
+
+
+def make_snapshot(w, version: int, *, alpha=None,
+                  meta: Optional[dict] = None) -> ModelSnapshot:
+    """Build a snapshot from an unpadded (d,) primal."""
+    w = np.asarray(w, np.float32).reshape(-1)
+    d = int(w.shape[0])
+    w_pad = np.zeros((d + 1,), np.float32)
+    w_pad[:d] = w
+    a = None if alpha is None else np.asarray(alpha, np.float32).reshape(-1)
+    return ModelSnapshot(w_pad, int(version), d, a, meta)
+
+
+def snapshot_from_result(result, version: int,
+                         meta: Optional[dict] = None) -> ModelSnapshot:
+    """Snapshot a solver result — accepts a ``ShardedResult`` or a
+    ``ResilientResult`` (unwrapped via its ``.result``)."""
+    inner = getattr(result, "result", result)
+    return make_snapshot(np.asarray(inner.w_hat), version,
+                         alpha=np.asarray(inner.alpha), meta=meta)
+
+
+def load_snapshot(ckpt_dir: str, version: int = 0) -> ModelSnapshot:
+    """Boot a snapshot from the newest loadable solver checkpoint —
+    the GC-race-tolerant hot-swap loader (``load_newest_solver_state``
+    walks past steps the trainer's ``gc_checkpoints`` deleted
+    mid-read)."""
+    from repro.resilience import load_newest_solver_state
+
+    state, step = load_newest_solver_state(ckpt_dir)
+    return make_snapshot(
+        state["w_canon"], version, alpha=state.get("alpha_canon"),
+        meta={"ckpt_step": int(step)})
+
+
+class SnapshotStore:
+    """Atomic publish + per-version pin refcounts.
+
+    Readers: ``snap = store.pin()`` … score … ``store.unpin(
+    snap.version)`` (the engine does this in a ``finally``).  Writer:
+    ``store.publish(new, grace_s=...)`` — pointer flip under the lock,
+    then a condition wait until every pin of *older* versions drains or
+    the grace elapses.  Stragglers past the grace still complete on
+    their pinned snapshot (kept alive by their refcount) — drained late
+    beats dropped.
+    """
+
+    def __init__(self, snapshot: ModelSnapshot):
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._current = snapshot
+        self._pins: dict = {}
+
+    @property
+    def version(self) -> int:
+        with self._lock:
+            return self._current.version
+
+    def current(self) -> ModelSnapshot:
+        with self._lock:
+            return self._current
+
+    def pin(self) -> ModelSnapshot:
+        """Pin the current version for the life of one batch."""
+        with self._lock:
+            snap = self._current
+            self._pins[snap.version] = self._pins.get(snap.version, 0) + 1
+            return snap
+
+    def unpin(self, version: int) -> None:
+        with self._cond:
+            n = self._pins.get(version, 0) - 1
+            if n <= 0:
+                self._pins.pop(version, None)
+            else:
+                self._pins[version] = n
+            self._cond.notify_all()
+
+    def pinned(self, version: int) -> int:
+        with self._lock:
+            return self._pins.get(version, 0)
+
+    def publish(self, snapshot: ModelSnapshot, *,
+                grace_s: float = 1.0) -> float:
+        """Swap to ``snapshot``; returns the drain wait in seconds (the
+        hot-swap pause the benchmark records).  Rejects non-increasing
+        versions — publishing stale state would silently roll the model
+        back under live traffic."""
+        with self._cond:
+            if snapshot.version <= self._current.version:
+                raise ValueError(
+                    f"version must increase: have {self._current.version}, "
+                    f"got {snapshot.version}")
+            self._current = snapshot  # flip: new pins see it immediately
+            t0 = time.monotonic()
+            deadline = t0 + max(float(grace_s), 0.0)
+
+            def _drained():
+                return not any(v < snapshot.version for v in self._pins)
+
+            while not _drained():
+                left = deadline - time.monotonic()
+                if left <= 0 or not self._cond.wait(timeout=left):
+                    break
+            return time.monotonic() - t0

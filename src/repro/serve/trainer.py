@@ -1,0 +1,186 @@
+"""Incremental warm-start training for the serving engine
+(DESIGN.md §15).
+
+The trainer carries the label-folded training matrix as an
+``EllMatrix`` plus the last solve's (α, w).  Fresh labeled rows are
+validated and buffered (``add_labeled``); a re-solve (``resolve``)
+appends them through ``repro.data.sparse.ell_append`` and dispatches
+``solve_segmented`` warm-started from the carried duals — old
+coordinates keep their α, appended rows enter at α = 0 via the PR-7
+re-blocking, which is why the resumed gap beats a from-scratch solve at
+equal epochs.
+
+Robustness: the solve runs under the resilience layer's watchdog, and
+the trainer adds an *outer* retry-with-backoff — a ``SolverDiverged``
+escape rolls the trainer back to its last healthy (X, α, w) and retries
+after an exponential backoff; if every attempt fails, ``resolve``
+returns None and the serving path keeps answering from the last
+published snapshot.  The drift trigger (``drift_trip``) compares the
+published model's error on freshly ingested rows against its error on
+the data it was trained on.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.data.sparse import EllMatrix, ell_append
+from repro.dist.mesh import drift_trip
+from repro.resilience import FaultPlan, SolverDiverged, solve_segmented
+
+
+def ell_scores(X: EllMatrix, w) -> np.ndarray:
+    """Host-side w·x_i for every row of a (label-folded) ELL matrix —
+    a correct classification has score > 0."""
+    idx = np.asarray(X.indices)
+    val = np.asarray(X.values)
+    w = np.asarray(w, np.float32).reshape(-1)
+    w_pad = np.zeros((X.n_features + 1,), np.float32)
+    w_pad[: w.shape[0]] = w[: X.n_features]
+    return (w_pad[idx] * val).sum(axis=1)
+
+
+def fold_labels(rows: EllMatrix, y) -> EllMatrix:
+    """Label-fold raw feature rows (x_i ← y_i·x_i) after validating the
+    labels the same way the solver mouth does: finite, ±1."""
+    y = np.asarray(y, np.float32).reshape(-1)
+    if y.shape[0] != rows.n_rows:
+        raise ValueError(f"{rows.n_rows} rows but {y.shape[0]} labels")
+    if not np.all(np.isfinite(y)):
+        raise ValueError("labels must be finite")
+    if not np.all(np.abs(y) == 1.0):
+        raise ValueError("labels must be +/-1")
+    return EllMatrix(rows.indices,
+                     np.asarray(rows.values) * y[:, None],
+                     rows.n_features)
+
+
+class IncrementalTrainer:
+    """Carries (X, α, w) across streaming warm-start re-solves."""
+
+    def __init__(self, X0: EllMatrix, loss, *, epochs: int = 4,
+                 drift_ratio: float = 2.0, drift_floor: float = 0.05,
+                 min_new_rows: int = 8, retries: int = 2,
+                 backoff_s: float = 0.05,
+                 fault_plan: Optional[FaultPlan] = None,
+                 solver_kwargs: Optional[dict] = None):
+        self.X = X0
+        self.loss = loss
+        self.epochs = int(epochs)
+        self.drift_ratio = float(drift_ratio)
+        self.drift_floor = float(drift_floor)
+        self.min_new_rows = int(min_new_rows)
+        self.retries = int(retries)
+        self.backoff_s = float(backoff_s)
+        self.fault_plan = fault_plan
+        self.solver_kwargs = dict(solver_kwargs or {})
+        self.alpha: Optional[np.ndarray] = None
+        self.w: Optional[np.ndarray] = None
+        self.err_base: Optional[float] = None
+        self._pending: list = []
+        self.ledger = {"solves": 0, "diverged": 0, "retries": 0,
+                       "gave_up": 0, "drift_trips": 0}
+
+    # ---------------------------------------------------- ingest ----
+
+    @property
+    def pending_rows(self) -> int:
+        return sum(c.n_rows for c in self._pending)
+
+    def add_labeled(self, rows: EllMatrix, y) -> int:
+        """Buffer freshly labeled rows (validated + label-folded).
+        Returns the pending count."""
+        if rows.n_features != self.X.n_features:
+            raise ValueError(
+                f"n_features mismatch: have {self.X.n_features}, "
+                f"got {rows.n_features}")
+        if not np.all(np.isfinite(np.asarray(rows.values))):
+            raise ValueError("ingested features must be finite")
+        self._pending.append(fold_labels(rows, y))
+        return self.pending_rows
+
+    def _pending_matrix(self) -> Optional[EllMatrix]:
+        if not self._pending:
+            return None
+        merged = self._pending[0]
+        for chunk in self._pending[1:]:
+            merged = ell_append(merged, chunk)
+        return merged
+
+    # ----------------------------------------------------- drift ----
+
+    def error_on(self, X: EllMatrix, w) -> float:
+        """Misclassification fraction of ``w`` on label-folded rows."""
+        return float(np.mean(ell_scores(X, w) <= 0.0))
+
+    def drifted(self, w=None) -> bool:
+        """Has the stream drifted away from the published model?
+        Compares the error on the pending rows against the baseline
+        error via ``drift_trip``; needs ``min_new_rows`` pending and an
+        established baseline (a solve must have run)."""
+        w = self.w if w is None else w
+        if w is None or self.err_base is None:
+            return False
+        if self.pending_rows < self.min_new_rows:
+            return False
+        pend = self._pending_matrix()
+        err_new = self.error_on(pend, w)
+        trip = bool(int(drift_trip(
+            np.float32(self.err_base), np.float32(err_new),
+            ratio=self.drift_ratio, floor=self.drift_floor)))
+        if trip:
+            self.ledger["drift_trips"] += 1
+        return trip
+
+    # ----------------------------------------------------- solve ----
+
+    def _solve(self, X: EllMatrix, epochs: int, alpha0, w0, plan):
+        kw = dict(epochs=epochs, alpha0=alpha0, w0=w0,
+                  fault_plan=plan, record=True)
+        kw.update(self.solver_kwargs)
+        return solve_segmented(X, self.loss, **kw)
+
+    def fit(self, epochs: Optional[int] = None):
+        """Initial (or forced full) solve on the carried matrix."""
+        return self.resolve(epochs=epochs, require_pending=False)
+
+    def resolve(self, epochs: Optional[int] = None, *,
+                require_pending: bool = True):
+        """Merge pending rows and warm-start re-solve.  Returns the
+        ``ResilientResult`` on success and commits (X, α, w, baseline);
+        returns None once the retry budget is exhausted — the carried
+        state is untouched and serving continues on the last healthy
+        snapshot."""
+        if require_pending and not self._pending:
+            return None
+        epochs = self.epochs if epochs is None else int(epochs)
+        pend = self._pending_matrix()
+        X_new = self.X if pend is None else ell_append(self.X, pend)
+        plan = self.fault_plan
+        for attempt in range(self.retries + 1):
+            try:
+                res = self._solve(X_new, epochs, self.alpha, self.w, plan)
+            except SolverDiverged:
+                self.ledger["diverged"] += 1
+                # transient-fault assumption: disarm a non-persistent
+                # plan on retry (its injection already fired); a
+                # persistent fault keeps tripping until the budget ends
+                if plan is not None and not plan.persistent:
+                    plan = None
+                if attempt >= self.retries:
+                    self.ledger["gave_up"] += 1
+                    return None
+                self.ledger["retries"] += 1
+                time.sleep(self.backoff_s * (2 ** attempt))
+                continue
+            self.X = X_new
+            self.alpha = np.asarray(res.result.alpha)
+            self.w = np.asarray(res.result.w_hat)
+            self.err_base = self.error_on(self.X, self.w)
+            self._pending = []
+            self.ledger["solves"] += 1
+            return res
+        return None

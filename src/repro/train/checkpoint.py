@@ -108,6 +108,18 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def available_steps(ckpt_dir: str) -> list:
+    """All checkpoint steps present, sorted ascending.  A *snapshot*:
+    under a concurrent ``gc_checkpoints`` a listed step may vanish
+    before it is opened — loaders that race GC (the serve hot-swap
+    loader) must catch ``FileNotFoundError`` and fall back to an older
+    step (see ``repro.resilience.load_newest_solver_state``)."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    return sorted(s for s in map(_step_of, os.listdir(ckpt_dir))
+                  if s is not None)
+
+
 def restore_checkpoint(ckpt_dir: str, step: int, state_template,
                        shardings=None, *, validate: bool = True):
     """Load ``ckpt_<step>`` into the template's structure.  If

@@ -179,3 +179,59 @@ def test_straggler_detection(tmp_path):
         log=lambda *_: None)
     assert rep.n_stragglers == 3  # every step misses a 1 ns deadline
     assert seen == [0, 1, 2]
+
+
+def test_available_steps_lists_sorted(tmp_path):
+    from repro.train.checkpoint import available_steps
+
+    assert available_steps(str(tmp_path / "missing")) == []
+    state = _state()
+    for s in (12, 3, 7):
+        save_checkpoint(str(tmp_path), s, state)
+    os.makedirs(tmp_path / "ckpt_5_old")  # lister must skip this
+    (tmp_path / "notes.txt").write_text("x")
+    assert available_steps(str(tmp_path)) == [3, 7, 12]
+
+
+def test_load_newest_falls_back_past_gc_race(tmp_path):
+    """The serve hot-swap loader vs concurrent gc_checkpoints: a listed
+    step whose payload vanished mid-read (dir gone, or arrays.npz gone)
+    falls back to the next-older step instead of raising."""
+    import shutil
+
+    from repro.resilience import load_newest_solver_state
+
+    state = {"w_canon": np.arange(4.0, dtype=np.float32),
+             "meta_epoch": np.int32(2)}
+    for s in (2, 4, 6):
+        save_checkpoint(str(tmp_path), s, state)
+    # simulate GC winning the race on the newest step two ways
+    os.remove(tmp_path / "ckpt_6" / "manifest.json")
+    shutil.rmtree(tmp_path / "ckpt_6")
+    loaded, step = load_newest_solver_state(str(tmp_path))
+    assert step == 4
+    np.testing.assert_array_equal(loaded["w_canon"], state["w_canon"])
+    # half-vanished newest (manifest there, arrays.npz gone): same
+    save_checkpoint(str(tmp_path), 8, state)
+    os.remove(tmp_path / "ckpt_8" / "arrays.npz")
+    loaded, step = load_newest_solver_state(str(tmp_path))
+    assert step == 4
+    # nothing loadable at all -> FileNotFoundError, not a hang
+    for entry in os.listdir(tmp_path):
+        shutil.rmtree(tmp_path / entry, ignore_errors=True)
+    with pytest.raises(FileNotFoundError):
+        load_newest_solver_state(str(tmp_path / "empty"))
+
+
+def test_load_newest_does_not_mask_corruption(tmp_path):
+    """Integrity failures are not GC races: a corrupt newest checkpoint
+    raises instead of silently serving an older model."""
+    state = {"w_canon": np.arange(4.0, dtype=np.float32)}
+    save_checkpoint(str(tmp_path), 1, state)
+    save_checkpoint(str(tmp_path), 2, state)
+    arr = str(tmp_path / "ckpt_2" / "arrays.npz")
+    np.savez(arr, leaf_0=np.full(4, 7.0, dtype=np.float32))
+    from repro.resilience import load_newest_solver_state
+
+    with pytest.raises(ValueError, match="integrity"):
+        load_newest_solver_state(str(tmp_path))

@@ -84,3 +84,69 @@ def test_lane_pad_public_and_overlap_policy():
     assert pipeline_overlap(True, two_d=True, fused=True, delay_rounds=1)
     assert not pipeline_overlap(False, two_d=True, fused=True,
                                 delay_rounds=1)
+
+
+def test_serve_admission_policy_validates():
+    import pytest
+
+    from repro.dist.mesh import serve_admission_policy
+
+    ok = serve_admission_policy(queue_depth=8, max_batch=4,
+                                deadline_s=0.5, swap_grace_s=0.0)
+    assert ok == {"queue_depth": 8, "max_batch": 4, "deadline_s": 0.5,
+                  "swap_grace_s": 0.0}
+    for bad in (dict(queue_depth=0, max_batch=4, deadline_s=1.0,
+                     swap_grace_s=1.0),
+                dict(queue_depth=8, max_batch=0, deadline_s=1.0,
+                     swap_grace_s=1.0),
+                dict(queue_depth=8, max_batch=4, deadline_s=0.0,
+                     swap_grace_s=1.0),
+                dict(queue_depth=8, max_batch=4, deadline_s=1.0,
+                     swap_grace_s=-1.0)):
+        with pytest.raises(ValueError):
+            serve_admission_policy(**bad)
+
+
+def test_serve_degrade_ladder_rungs():
+    from repro.dist.mesh import serve_degrade_ladder
+
+    r0 = serve_degrade_ladder(0, max_batch=64)
+    assert r0 == {"rung": 0, "max_batch": 64, "train": True}
+    r1 = serve_degrade_ladder(1, max_batch=64)
+    assert r1 == {"rung": 1, "max_batch": 16, "train": True}
+    r2 = serve_degrade_ladder(2, max_batch=64)
+    assert r2 == {"rung": 2, "max_batch": 16, "train": False}
+    # above-top rungs clamp; the live batch never drops below 1
+    assert serve_degrade_ladder(9, max_batch=64)["rung"] == 2
+    assert serve_degrade_ladder(1, max_batch=2)["max_batch"] == 1
+
+
+def test_serve_rung_hysteresis():
+    from repro.dist.mesh import serve_rung
+
+    # climbs at the up thresholds
+    assert serve_rung(0.0, 0) == 0
+    assert serve_rung(0.5, 0) == 1
+    assert serve_rung(0.9, 0) == 2
+    # dead band: once at rung 1, 0.4 (>= down[0]=0.2) holds rung 1
+    assert serve_rung(0.4, 1) == 1
+    assert serve_rung(0.1, 1) == 0  # below down[0] -> descend
+    # once at rung 2, 0.7 (>= down[1]=0.6) holds; 0.3 drops to 1
+    assert serve_rung(0.7, 2) == 2
+    assert serve_rung(0.3, 2) == 1
+    assert serve_rung(0.05, 2) == 0  # falls through both bands
+
+
+def test_drift_trip_thresholds():
+    import jax.numpy as jnp
+
+    from repro.dist.mesh import drift_trip
+
+    # below ratio*base+floor: no trip; monotone in err_new
+    assert int(drift_trip(jnp.float32(0.1), jnp.float32(0.2))) == 0
+    assert int(drift_trip(jnp.float32(0.1), jnp.float32(0.26))) == 1
+    # the floor absorbs small-sample noise on a perfect baseline
+    assert int(drift_trip(jnp.float32(0.0), jnp.float32(0.04))) == 0
+    assert int(drift_trip(jnp.float32(0.0), jnp.float32(0.06))) == 1
+    assert int(drift_trip(jnp.float32(0.0), jnp.float32(0.5),
+                          ratio=2.0, floor=0.6)) == 0

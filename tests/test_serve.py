@@ -1,0 +1,391 @@
+"""Hardened serving engine (DESIGN.md §15) — the chaos-style
+acceptance spine: every admitted request reaches exactly one terminal
+outcome under overload (deadline/backpressure sheds are structured,
+the queue never grows past its bound), a mid-stream hot-swap drops
+zero in-flight requests and never version-mixes a batch, a
+watchdog-tripped incremental solve leaves serving on the last healthy
+snapshot, and the drift scenario triggers a warm-start re-solve whose
+resumed gap beats from-scratch at equal epochs.
+
+Determinism model: the engine's background loop is just ``step()`` on
+a thread, so every policy decision is tested synchronously; the
+threaded tests assert only scheduling-independent invariants
+(all-terminal, zero-drop, version monotonicity).
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.duals import Hinge
+from repro.data.sparse import dense_to_ell
+from repro.resilience import FaultPlan, solve_segmented
+from repro.serve import (
+    IncrementalTrainer,
+    RequestShed,
+    ScoreOutcome,
+    ServeEngine,
+    SnapshotStore,
+    load_snapshot,
+    make_snapshot,
+    snapshot_from_result,
+)
+
+
+D = 12
+
+
+@pytest.fixture()
+def store():
+    rng = np.random.default_rng(0)
+    return SnapshotStore(make_snapshot(rng.standard_normal(D), 1))
+
+
+def _engine(store, **kw):
+    kw.setdefault("k_max", 6)
+    kw.setdefault("max_batch", 8)
+    kw.setdefault("queue_depth", 16)
+    kw.setdefault("default_deadline_s", 30.0)
+    return ServeEngine(store, **kw)
+
+
+# ------------------------------------------------------ scoring ------
+
+
+def test_scoring_dense_and_sparse_agree(store):
+    eng = _engine(store)
+    w = store.current().w_pad[:D]
+    f = np.zeros(D, np.float32)
+    f[2], f[7] = 1.5, -2.0
+    t_dense = eng.submit(f)
+    t_sparse = eng.submit(cols=[2, 7], vals=[1.5, -2.0])
+    assert eng.step() == 2
+    o1, o2 = t_dense.result(1.0), t_sparse.result(1.0)
+    want = 1.5 * w[2] - 2.0 * w[7]
+    assert isinstance(o1, ScoreOutcome) and isinstance(o2, ScoreOutcome)
+    np.testing.assert_allclose([o1.score, o2.score], [want, want],
+                               atol=1e-5)
+    assert o1.version == o2.version == 1
+
+
+@pytest.mark.parametrize("bad", [
+    dict(features=np.full(D, np.nan)),                  # non-finite
+    dict(features=np.ones(D + 3)),                      # shape mismatch
+    dict(features=np.ones(D)),                          # nnz > k_max
+    dict(cols=[0, 1], vals=[1.0]),                      # ragged payload
+    dict(cols=[D], vals=[1.0]),                         # id out of range
+    dict(cols=[0], vals=[np.inf]),                      # non-finite val
+], ids=["nan", "shape", "kmax", "ragged", "range", "inf"])
+def test_invalid_payload_shed_does_not_poison_batch(store, bad):
+    eng = _engine(store)
+    t_bad = eng.submit(**bad)
+    t_good = eng.submit(cols=[0], vals=[1.0])
+    shed = t_bad.result(0.0)  # shed at the mouth, before any step
+    assert isinstance(shed, RequestShed) and shed.reason == "invalid"
+    assert shed.detail
+    eng.step()
+    good = t_good.result(1.0)
+    assert isinstance(good, ScoreOutcome)
+    assert np.isfinite(good.score)
+
+
+# ----------------------------------------- deadlines / backpressure --
+
+
+def test_deadline_shed_deterministic(store):
+    eng = _engine(store)
+    t_live = eng.submit(cols=[0], vals=[1.0], deadline_s=60.0)
+    t_dead = eng.submit(cols=[0], vals=[1.0], deadline_s=1e-4)
+    t_pre = eng.submit(cols=[0], vals=[1.0], deadline_s=0.0)
+    assert t_pre.result(0.0).reason == "deadline"  # expired at the mouth
+    time.sleep(0.01)  # let t_dead expire in the queue
+    assert eng.step() == 1
+    assert isinstance(t_live.result(1.0), ScoreOutcome)
+    shed = t_dead.result(1.0)
+    assert isinstance(shed, RequestShed) and shed.reason == "deadline"
+    assert eng.health()["shed"]["deadline"] == 2
+
+
+def test_backpressure_shed_at_bound(store):
+    eng = _engine(store, queue_depth=4)
+    tickets = [eng.submit(cols=[0], vals=[1.0]) for _ in range(6)]
+    assert len(eng.queue) == 4  # the bound held
+    for t in tickets[4:]:
+        out = t.result(0.0)
+        assert isinstance(out, RequestShed)
+        assert out.reason == "backpressure"
+    while len(eng.queue):
+        eng.step()
+    for t in tickets[:4]:
+        assert isinstance(t.result(1.0), ScoreOutcome)
+
+
+def test_shutdown_leaves_no_request_unresolved(store):
+    eng = _engine(store)
+    tickets = [eng.submit(cols=[0], vals=[1.0]) for _ in range(5)]
+    eng.stop(drain=False)  # no drain: leftovers shed as shutdown
+    outcomes = [t.result(1.0) for t in tickets]
+    assert all(o is not None for o in outcomes)
+    assert {type(o) for o in outcomes} <= {ScoreOutcome, RequestShed}
+    post = eng.submit(cols=[0], vals=[1.0])  # post-stop submit sheds too
+    assert post.result(0.0).reason == "shutdown"
+
+
+# ----------------------------------------------------- overload ------
+
+
+def test_overload_flood_every_request_terminal(store):
+    """The headline chaos invariant: a flood beyond queue + deadline
+    capacity ends with every single request carrying a terminal
+    outcome and the queue empty — nothing silently dropped, nothing
+    unbounded."""
+    eng = _engine(store, queue_depth=8, max_batch=4,
+                  default_deadline_s=0.05, batch_wait_s=0.001)
+    eng.start()
+    tickets = []
+    try:
+        for _ in range(300):
+            tickets.append(eng.submit(cols=[0], vals=[1.0]))
+            assert len(eng.queue) <= 8
+    finally:
+        eng.stop()
+    outcomes = [t.result(2.0) for t in tickets]
+    assert len(outcomes) == 300
+    served = sum(isinstance(o, ScoreOutcome) for o in outcomes)
+    shed = [o for o in outcomes if isinstance(o, RequestShed)]
+    assert served + len(shed) == 300
+    assert served == eng.health()["served"]
+    h = eng.health()
+    assert h["shed_total"] == len(shed)
+    # under this flood some backpressure or deadline shedding must
+    # have happened — the queue bound is 8 and the flood is 300
+    assert len(shed) > 0
+    for o in shed:
+        assert o.reason in ("deadline", "backpressure", "shutdown")
+
+
+def test_degrade_ladder_engages_under_occupancy(store):
+    eng = _engine(store, queue_depth=8, max_batch=8)
+    for _ in range(8):  # occupancy 1.0 → rung 2 (stale-model-only)
+        eng.submit(cols=[0], vals=[1.0])
+    eng.step()
+    assert eng._rung == 2
+    h = eng.health()
+    assert h["rung_steps"][2] >= 1
+    while len(eng.queue):
+        eng.step()
+    eng.step()  # empty queue → occupancy 0 → back to rung 0
+    assert eng._rung == 0  # serve ladder is not sticky
+
+
+# ----------------------------------------------------- hot swap ------
+
+
+def test_publish_requires_increasing_version(store):
+    with pytest.raises(ValueError, match="version must increase"):
+        store.publish(make_snapshot(np.zeros(D), 1))
+
+
+def test_publish_waits_for_pinned_reader(store):
+    snap = store.pin()
+    new = make_snapshot(np.ones(D), 2)
+    t0 = time.monotonic()
+    done = threading.Event()
+
+    def unpin_later():
+        time.sleep(0.15)
+        store.unpin(snap.version)
+        done.set()
+
+    threading.Thread(target=unpin_later, daemon=True).start()
+    pause = store.publish(new, grace_s=5.0)
+    assert done.is_set()  # returned only after the pin drained
+    assert 0.1 <= pause <= 5.0
+    assert time.monotonic() - t0 < 4.0  # drained, not grace-expired
+    assert store.version == 2
+    # a reader that pins now sees the new version immediately
+    assert store.pin().version == 2
+
+
+def test_publish_grace_expiry_keeps_straggler_alive(store):
+    snap = store.pin()
+    pause = store.publish(make_snapshot(np.ones(D), 2), grace_s=0.05)
+    assert pause >= 0.05  # grace expired with the pin still held
+    assert store.version == 2
+    assert store.pinned(snap.version) == 1  # straggler still valid
+    store.unpin(snap.version)
+
+
+def test_hot_swap_zero_drop_and_post_swap_version(store):
+    """Mid-stream swap: no request is dropped, no outcome carries a
+    version that was never published, and everything scored after the
+    swap's drain uses the new version."""
+    eng = _engine(store, max_batch=4, queue_depth=256,
+                  batch_wait_s=0.001)
+    eng.start()
+    tickets = []
+    try:
+        for i in range(100):
+            tickets.append(eng.submit(cols=[0], vals=[1.0]))
+            if i == 50:
+                eng.publish(make_snapshot(np.ones(D), 2))
+        post_swap = [eng.submit(cols=[0], vals=[1.0]) for _ in range(10)]
+    finally:
+        eng.stop()
+    outcomes = [t.result(2.0) for t in tickets + post_swap]
+    assert all(isinstance(o, ScoreOutcome) for o in outcomes)
+    assert {o.version for o in outcomes} <= {1, 2}
+    # versions are monotone in resolution order per batch, and the
+    # post-swap tail (admitted after publish returned, i.e. after the
+    # grace drain) must be entirely on the new version
+    for o in (t.result(0.0) for t in post_swap):
+        assert o.version == 2
+        np.testing.assert_allclose(o.score, 1.0, atol=1e-5)
+    assert eng.health()["swaps"] == 1
+    assert eng.health()["swap_pause_max_s"] >= 0.0
+
+
+# ------------------------------------- trainer / drift / watchdog ----
+
+
+def _labeled_stream(rng, n, wstar, flip=False):
+    X = rng.standard_normal((n, D)).astype(np.float32)
+    y = np.where(X @ wstar > 0, 1.0, -1.0).astype(np.float32)
+    return X, (-y if flip else y)
+
+
+def _trainer(X0, **kw):
+    kw.setdefault("epochs", 4)
+    kw.setdefault("min_new_rows", 4)
+    kw.setdefault("backoff_s", 0.001)
+    solver = kw.pop("solver_kwargs", {})
+    solver.setdefault("block_size", 16)
+    solver.setdefault("seed", 0)
+    return IncrementalTrainer(X0, Hinge(C=1.0), solver_kwargs=solver, **kw)
+
+
+def test_drift_triggers_warm_start_resolve_and_swap():
+    rng = np.random.default_rng(5)
+    wstar = rng.standard_normal(D)
+    X, y = _labeled_stream(rng, 48, wstar)
+    tr = _trainer(dense_to_ell(X * y[:, None]), drift_floor=0.25)
+    res0 = tr.fit()
+    store = SnapshotStore(snapshot_from_result(res0, 1))
+    eng = _engine(store, trainer=tr)
+    # in-distribution rows: no drift, no publish (the 0.25 floor keeps
+    # small-sample noise on a near-perfect baseline from tripping)
+    Xs, ys = _labeled_stream(rng, 8, wstar)
+    eng.ingest(dense_to_ell(Xs, k_max=tr.X.k_max), ys)
+    assert eng.train_if_drifted() is None
+    assert store.version == 1
+    # flipped-label shift: drift trips, warm-start re-solve publishes
+    Xf, yf = _labeled_stream(rng, 16, wstar, flip=True)
+    eng.ingest(dense_to_ell(Xf, k_max=tr.X.k_max), yf)
+    res = eng.train_if_drifted()
+    assert res is not None
+    assert store.version == 2
+    assert tr.ledger["drift_trips"] >= 1
+    assert tr.X.n_rows == 48 + 8 + 16  # both chunks merged
+    t = eng.submit(cols=[0], vals=[1.0])
+    eng.step()
+    assert t.result(1.0).version == 2
+
+
+def test_warm_start_beats_scratch_at_equal_epochs():
+    """The point of carrying (α, w): after an append, the resumed
+    solve's duality gap beats a from-scratch solve at equal epochs."""
+    rng = np.random.default_rng(7)
+    wstar = rng.standard_normal(D)
+    X, y = _labeled_stream(rng, 64, wstar)
+    tr = _trainer(dense_to_ell(X * y[:, None]), epochs=6)
+    tr.fit()
+    Xs, ys = _labeled_stream(rng, 16, wstar)
+    tr.add_labeled(dense_to_ell(Xs, k_max=tr.X.k_max), ys)
+    res_warm = tr.resolve(epochs=3)
+    assert res_warm is not None
+    gap_warm = float(np.asarray(res_warm.result.gaps)[-1])
+    res_scratch = solve_segmented(tr.X, Hinge(C=1.0), epochs=3,
+                                  block_size=16, seed=0, record=True)
+    gap_scratch = float(np.asarray(res_scratch.result.gaps)[-1])
+    assert gap_warm < gap_scratch
+
+
+def test_watchdog_tripped_solve_keeps_last_healthy_snapshot():
+    """A persistent fault exhausts the trainer's retry budget; serving
+    stays on the old snapshot and the carried state is untouched."""
+    rng = np.random.default_rng(9)
+    wstar = rng.standard_normal(D)
+    X, y = _labeled_stream(rng, 48, wstar)
+    tr = _trainer(dense_to_ell(X * y[:, None]), retries=1,
+                  solver_kwargs={"max_retries": 0})
+    res0 = tr.fit()
+    w_before = tr.w.copy()
+    n_before = tr.X.n_rows
+    store = SnapshotStore(snapshot_from_result(res0, 1))
+    eng = _engine(store, trainer=tr)
+    Xs, ys = _labeled_stream(rng, 8, wstar)
+    eng.ingest(dense_to_ell(Xs, k_max=tr.X.k_max), ys)
+    tr.fault_plan = FaultPlan(nan_psum_epoch=1, persistent=True)
+    assert eng.train_if_drifted(force=True) is None
+    assert store.version == 1                      # nothing published
+    assert tr.X.n_rows == n_before                 # no commit
+    assert tr.pending_rows == 8                    # rows still pending
+    np.testing.assert_array_equal(tr.w, w_before)
+    assert tr.ledger["gave_up"] == 1
+    assert tr.ledger["diverged"] == 2              # initial + 1 retry
+    t = eng.submit(cols=[0], vals=[1.0])           # still serving
+    eng.step()
+    assert t.result(1.0).version == 1
+
+
+def test_transient_fault_recovers_via_retry_backoff():
+    rng = np.random.default_rng(11)
+    wstar = rng.standard_normal(D)
+    X, y = _labeled_stream(rng, 48, wstar)
+    tr = _trainer(dense_to_ell(X * y[:, None]), retries=2,
+                  solver_kwargs={"max_retries": 0},
+                  fault_plan=FaultPlan(nan_psum_epoch=1))
+    res = tr.fit()  # attempt 0 trips; retry disarms the transient plan
+    assert res is not None
+    assert tr.ledger["diverged"] == 1
+    assert tr.ledger["retries"] == 1
+    assert tr.ledger["solves"] == 1
+
+
+def test_train_blocked_at_rung_2():
+    rng = np.random.default_rng(13)
+    wstar = rng.standard_normal(D)
+    X, y = _labeled_stream(rng, 48, wstar)
+    tr = _trainer(dense_to_ell(X * y[:, None]))
+    res0 = tr.fit()
+    store = SnapshotStore(snapshot_from_result(res0, 1))
+    eng = _engine(store, trainer=tr, queue_depth=8, max_batch=8)
+    Xf, yf = _labeled_stream(rng, 16, wstar, flip=True)
+    eng.ingest(dense_to_ell(Xf, k_max=tr.X.k_max), yf)
+    for _ in range(8):
+        eng.submit(cols=[0], vals=[1.0])
+    eng._rung = 2  # saturated queue put the ladder at stale-model-only
+    assert eng.train_if_drifted() is None
+    assert store.version == 1
+
+
+# ------------------------------------------------ checkpoint boot ----
+
+
+def test_load_snapshot_from_checkpoint(tmp_path, tiny_dense):
+    X = np.asarray(tiny_dense)[:48]
+    res = solve_segmented(X, Hinge(C=1.0), epochs=4, checkpoint_every=2,
+                          ckpt_dir=str(tmp_path), block_size=16, seed=0)
+    snap = load_snapshot(str(tmp_path), version=1)
+    assert snap.version == 1
+    assert snap.meta["ckpt_step"] == 4
+    np.testing.assert_allclose(snap.w_pad[:X.shape[1]],
+                               np.asarray(res.result.w_hat), atol=1e-6)
+    assert snap.alpha is not None
+    store = SnapshotStore(snap)
+    eng = ServeEngine(store, k_max=4, max_batch=4, queue_depth=8)
+    t = eng.submit(cols=[0], vals=[1.0])
+    eng.step()
+    assert isinstance(t.result(1.0), ScoreOutcome)

@@ -1,0 +1,172 @@
+"""Streaming ELL row-append path (DESIGN.md §15): append must be a
+lossless layout operation — ``ell_append`` then ``to_dense`` equals the
+dense vstack for arbitrary ragged operands and any k_max widening —
+must reject lossy re-packs exactly like ``dense_to_ell``, and must
+train the n%p tail correctly after an append changes n (the solve over
+an appended matrix matches the solve over the same rows packed fresh).
+The shorter-``alpha0`` warm start the append feeds (new rows at α = 0)
+must agree with explicitly zero-extended duals.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import sharded_passcode_solve
+from repro.core.duals import Hinge
+from repro.data.sparse import (
+    dense_to_ell,
+    ell_append,
+    ell_from_rows,
+    ell_repack,
+    ell_row_nnz,
+)
+
+
+def _ragged(rng, n, d, density):
+    X = rng.standard_normal((n, d)).astype(np.float32)
+    X[rng.random((n, d)) > density] = 0.0
+    return X
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n1=st.integers(1, 12), n2=st.integers(1, 12),
+    d=st.integers(2, 16), seed=st.integers(0, 2**31 - 1),
+    pad=st.integers(0, 3),
+)
+def test_append_round_trip(n1, n2, d, seed, pad):
+    rng = np.random.default_rng(seed)
+    A = _ragged(rng, n1, d, 0.5)
+    B = _ragged(rng, n2, d, 0.3)
+    a, b = dense_to_ell(A), dense_to_ell(B)
+    out = ell_append(a, b, k_max=max(a.k_max, b.k_max) + pad)
+    assert out.k_max == max(a.k_max, b.k_max) + pad
+    np.testing.assert_array_equal(
+        np.asarray(out.to_dense()), np.vstack([A, B]))
+    # padding convention preserved: sentinel id == d, sentinel value 0
+    idx, val = np.asarray(out.indices), np.asarray(out.values)
+    np.testing.assert_array_equal(val[idx == d], 0.0)
+    np.testing.assert_array_equal(
+        ell_row_nnz(out), np.concatenate([(A != 0).sum(1), (B != 0).sum(1)]))
+
+
+def test_repack_lossy_rejection_parity():
+    """Shrinking k_max below a row's nnz raises, with the same message
+    shape as ``dense_to_ell`` — never silent truncation."""
+    rng = np.random.default_rng(0)
+    X = _ragged(rng, 8, 16, 0.6)
+    need = int((X != 0).sum(1).max())
+    with pytest.raises(ValueError, match="max per-row nnz"):
+        ell_repack(dense_to_ell(X), need - 1)
+    with pytest.raises(ValueError, match="max per-row nnz"):
+        dense_to_ell(X, k_max=need - 1)
+    with pytest.raises(ValueError, match="max per-row nnz"):
+        ell_append(dense_to_ell(X), dense_to_ell(X), k_max=need - 1)
+    # widening then narrowing back to the true need is lossless
+    wide = ell_repack(dense_to_ell(X), need + 5)
+    np.testing.assert_array_equal(
+        np.asarray(ell_repack(wide, need).to_dense()), X)
+
+
+def test_append_feature_mismatch_raises():
+    a = dense_to_ell(np.eye(4, dtype=np.float32))
+    b = dense_to_ell(np.eye(5, dtype=np.float32))
+    with pytest.raises(ValueError, match="n_features"):
+        ell_append(a, b)
+
+
+def test_ell_from_rows():
+    m = ell_from_rows([([0, 3], [1.0, 2.0]), ([], []), ([2], [-1.0])], 5)
+    dense = np.asarray(m.to_dense())
+    want = np.zeros((3, 5), np.float32)
+    want[0, 0], want[0, 3], want[2, 2] = 1.0, 2.0, -1.0
+    np.testing.assert_array_equal(dense, want)
+    with pytest.raises(ValueError, match="out of range"):
+        ell_from_rows([([5], [1.0])], 5)
+    with pytest.raises(ValueError, match="ids vs"):
+        ell_from_rows([([0, 1], [1.0])], 5)
+    with pytest.raises(ValueError, match="max per-row nnz"):
+        ell_from_rows([([0, 1], [1.0, 2.0])], 5, k_max=1)
+
+
+def test_append_solve_matches_fresh_pack(tiny_dense, hinge):
+    """An appended matrix and the same rows packed fresh are the same
+    solver input: identical blocking, identical result."""
+    X = np.asarray(tiny_dense)[:40]
+    app = ell_append(dense_to_ell(X[:28]), dense_to_ell(X[28:]))
+    fresh = dense_to_ell(X, k_max=app.k_max)
+    np.testing.assert_array_equal(np.asarray(app.indices),
+                                  np.asarray(fresh.indices))
+    kw = dict(epochs=2, block_size=8, seed=0, record=False)
+    ra = sharded_passcode_solve(app, hinge, **kw)
+    rf = sharded_passcode_solve(fresh, hinge, **kw)
+    np.testing.assert_array_equal(np.asarray(ra.alpha),
+                                  np.asarray(rf.alpha))
+    np.testing.assert_array_equal(np.asarray(ra.w_hat),
+                                  np.asarray(rf.w_hat))
+
+
+def test_short_alpha0_warm_start_matches_zero_extended(tiny_dense, hinge):
+    """A carried alpha0 shorter than n (the streaming append warm
+    start) is exactly a zero-extension: appended rows enter at α = 0."""
+    X = np.asarray(tiny_dense)[:40]
+    ell = dense_to_ell(X)
+    r0 = sharded_passcode_solve(dense_to_ell(X[:32]), hinge, epochs=2,
+                                block_size=8, seed=0, record=False)
+    a_short = np.asarray(r0.alpha)
+    a_ext = np.concatenate([a_short, np.zeros(8, np.float32)])
+    kw = dict(epochs=2, block_size=8, seed=0, record=False,
+              w0=r0.w_hat)
+    r1 = sharded_passcode_solve(ell, hinge, alpha0=a_short, **kw)
+    r2 = sharded_passcode_solve(ell, hinge, alpha0=a_ext, **kw)
+    np.testing.assert_array_equal(np.asarray(r1.alpha),
+                                  np.asarray(r2.alpha))
+    np.testing.assert_array_equal(np.asarray(r1.w_hat),
+                                  np.asarray(r2.w_hat))
+
+
+_SUBPROCESS = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, {src!r})
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import sharded_passcode_solve
+    from repro.core.duals import Hinge
+    from repro.data.sparse import dense_to_ell, ell_append
+    from repro.data.synthetic import make_dataset
+
+    assert len(jax.devices()) == 8
+    # 90 + 13 = 103: 103 % 8 != 0 — append lands on the masked-tail path
+    X = np.asarray(make_dataset("tiny").dense_train())[:103]
+    app = ell_append(dense_to_ell(X[:90]), dense_to_ell(X[90:]))
+    fresh = dense_to_ell(X, k_max=app.k_max)
+    mesh = jax.make_mesh((8,), ("data",))
+    kw = dict(mesh=mesh, epochs=3, block_size=8, record=False, seed=0)
+    ra = sharded_passcode_solve(app, Hinge(C=1.0), **kw)
+    rf = sharded_passcode_solve(fresh, Hinge(C=1.0), **kw)
+    assert ra.alpha.shape == (103,)
+    assert float(jnp.sum(jnp.abs(ra.alpha[96:]))) > 0  # tail trained
+    assert np.array_equal(np.asarray(ra.alpha), np.asarray(rf.alpha))
+    assert np.array_equal(np.asarray(ra.w_hat), np.asarray(rf.w_hat))
+    print("SUBPROCESS_OK")
+""")
+
+
+def test_append_tail_multi_device_subprocess():
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    code = _SUBPROCESS.format(src=src)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SUBPROCESS_OK" in out.stdout
