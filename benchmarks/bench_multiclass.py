@@ -1,0 +1,96 @@
+"""Multi-task one-vs-rest solver benchmark (DESIGN.md §16): what the
+batched task axis buys over the obvious alternative.
+
+K-sweep: solve K one-vs-rest heads over one shared X either as ONE
+pipelined multi-task dispatch (``sharded_passcode_solve(X, loss, y=Y)``,
+the vmapped (K,) task axis) or as a Python loop of K independent binary
+solves (fold → solve → next class — K dispatches, K× the fixed pipeline
+overhead).  Both paths produce the same heads (the test suite pins them
+at atol 1e-5), so the row is a pure wall-clock comparison, plus the
+argmax agreement recorded as a sanity stamp.
+
+``main()`` returns rows for benchmarks/run.py to persist as
+BENCH_multiclass.json; ``--smoke`` shrinks the sweep to a CI-budget
+pass.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import predict_multiclass, sharded_passcode_solve
+from repro.core.duals import Hinge
+from repro.data import ovr_labels
+
+
+def _problem(n, d, n_classes, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    y = rng.integers(0, n_classes, size=n).astype(np.int32)
+    X[np.arange(n), y % d] += 2.0
+    return X, y
+
+
+def _wall(fn, warmup=1, iters=3):
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def _bench_k(rows, K, *, n, d, epochs, block_size):
+    X, y_int = _problem(n, d, K, seed=K)
+    Y = np.asarray(ovr_labels(y_int, K))
+    loss = Hinge(C=1.0)
+    kw = dict(epochs=epochs, block_size=block_size, record=False)
+
+    def batched():
+        r = sharded_passcode_solve(X, loss, y=Y, **kw)
+        return np.asarray(r.w_hat)
+
+    def loop():
+        return np.stack([
+            np.asarray(sharded_passcode_solve(X * Y[k][:, None], loss,
+                                              **kw).w_hat)
+            for k in range(K)
+        ])
+
+    t_batched = _wall(batched)
+    t_loop = _wall(loop)
+    W_b, W_l = batched(), loop()
+    agree = float(np.mean(
+        np.asarray(predict_multiclass(W_b, X))
+        == np.asarray(predict_multiclass(W_l, X))))
+    rows.append({
+        "name": f"multiclass/K={K}/n={n},d={d},epochs={epochs}",
+        "us_per_call": t_batched * 1e6,
+        "derived": (f"loop_us={t_loop * 1e6:.0f},"
+                    f"speedup={t_loop / t_batched:.2f}x,"
+                    f"argmax_agree={agree:.3f}"),
+    })
+
+
+def main(smoke: bool = False) -> list:
+    rows: list = []
+    if smoke:
+        sweep, n, d, epochs = (2, 4), 96, 24, 2
+    else:
+        sweep, n, d, epochs = (4, 16, 64), 512, 64, 5
+    for K in sweep:
+        _bench_k(rows, K, n=n, d=d, epochs=epochs, block_size=16)
+    for r in rows:
+        emit(r["name"], r["us_per_call"], r["derived"])
+    return rows
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv)

@@ -16,7 +16,9 @@ sweep + pod-axis mesh overhead; the resilient solver section →
 BENCH_resilience.json, checkpoint overhead per segment + recovery
 cost/epochs-lost per fault class; the serving engine section →
 BENCH_serve.json, p50/p99 latency + sustained QPS, shed rate under
-overload, hot-swap pause).
+overload, hot-swap pause; the multi-task OvR section →
+BENCH_multiclass.json, batched-task-axis vs loop-over-K wall clock
+across the K-sweep).
 """
 
 from __future__ import annotations
@@ -61,6 +63,7 @@ def main() -> None:
         bench_convergence,
         bench_feature,
         bench_kernel,
+        bench_multiclass,
         bench_pipeline,
         bench_pod,
         bench_resilience,
@@ -84,6 +87,7 @@ def main() -> None:
         ("Pod double-async solver", bench_pod, "pod"),
         ("Resilient solver", bench_resilience, "resilience"),
         ("Online serving engine", bench_serve, "serve"),
+        ("Multi-task OvR solver", bench_multiclass, "multiclass"),
         ("Roofline (dry-run artifacts)", bench_roofline, None),
     ]
     print("name,us_per_call,derived")

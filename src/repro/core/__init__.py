@@ -17,7 +17,9 @@ from repro.core.duals import Hinge, Logistic, SquaredHinge
 from repro.core.objective import (
     dual_objective,
     duality_gap,
+    multiclass_accuracy,
     predict_accuracy,
+    predict_multiclass,
     primal_objective,
 )
 from repro.core.dcd import dcd_epoch, dcd_solve
@@ -35,6 +37,8 @@ __all__ = [
     "primal_objective",
     "duality_gap",
     "predict_accuracy",
+    "predict_multiclass",
+    "multiclass_accuracy",
     "dcd_epoch",
     "dcd_solve",
     "passcode_epoch",

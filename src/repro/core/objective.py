@@ -1,12 +1,16 @@
 """Primal/dual objectives, duality gap, prediction accuracy.
 
 Works on dense (n, d) data or ``EllMatrix``. Since rows are label-folded
-(x_i = y_i·ẋ_i), classification is correct iff wᵀx_i > 0, so accuracy
-needs no separate label vector.
+(x_i = y_i·ẋ_i), classification is correct iff wᵀx_i > 0, so binary
+accuracy needs no separate label vector.  The multiclass helpers
+(``predict_multiclass``/``multiclass_accuracy``) instead take a (K, d)
+one-vs-rest weight stack over *unfolded* rows and integer class ids —
+the shapes the multi-task solver path produces (DESIGN.md §16).
 """
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.data.sparse import EllMatrix, ell_matvec, ell_rmatvec
@@ -59,3 +63,23 @@ def predict_accuracy(w, X):
     """Fraction of rows with wᵀx_i > 0 (x_i is label-folded)."""
     z = _matvec(X, w)
     return jnp.mean((z > 0).astype(jnp.float32))
+
+
+def predict_multiclass(W, X):
+    """Argmax class ids over a (K, d) one-vs-rest weight stack.
+
+    ``X`` holds *unfolded* rows (multi-task solves share one X, so no
+    label ever folded into it).  Returns (n,) int32 — row i is assigned
+    to the head with the largest margin w_kᵀx_i.
+    """
+    W = jnp.asarray(W)
+    if W.ndim != 2:
+        raise ValueError(f"expected a (K, d) weight stack, got {W.shape}")
+    scores = jax.vmap(lambda w: _matvec(X, w))(W)  # (K, n)
+    return jnp.argmax(scores, axis=0).astype(jnp.int32)
+
+
+def multiclass_accuracy(W, X, y_int):
+    """Top-1 accuracy of the (K, d) stack against integer class ids."""
+    pred = predict_multiclass(W, X)
+    return jnp.mean((pred == jnp.asarray(y_int)).astype(jnp.float32))

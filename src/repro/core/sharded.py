@@ -120,6 +120,7 @@ from repro.dist.mesh import (
     solver_mesh,
     solver_mesh_2d,
     solver_mesh_3d,
+    task_axis_policy,
     watchdog_trip,
 )
 from repro.dist.sharding import named, replicated
@@ -147,20 +148,28 @@ class ShardedResult(NamedTuple):
 
 
 def _local_block_update(X_loc, sq_loc, alpha_loc, w, idx_block, loss,
-                        act=None):
+                        act=None, y=None):
     """B sequential DCD updates on this device's shard, locally-fresh w.
     ``act`` (optional (n_loc,) bool) freezes shrunk coordinates to
     zero-delta updates — the same gate as the serial reference's masked
-    epoch."""
+    epoch.  ``y`` (optional (n_loc,) ±1 labels) folds each row on read —
+    wᵀ(y_i·x_i) = y_i·wᵀx_i and the rank-1 update adds (δ·y_i)·x_i — so
+    multi-task solves can share one unfolded X; ``y=None`` is the
+    pre-folded binary convention, bit-identical to the historical
+    engine."""
 
     def body(t, carry):
         alpha_loc, w_loc = carry
         i = idx_block[t]
         x = X_loc[i]
-        delta = loss.delta(alpha_loc[i], jnp.dot(w_loc, x), sq_loc[i])
+        wx = jnp.dot(w_loc, x)
+        if y is not None:
+            wx = y[i] * wx
+        delta = loss.delta(alpha_loc[i], wx, sq_loc[i])
         if act is not None:
             delta = jnp.where(act[i], delta, 0.0)
-        return alpha_loc.at[i].add(delta), w_loc + delta * x
+        dscale = delta if y is None else delta * y[i]
+        return alpha_loc.at[i].add(delta), w_loc + dscale * x
 
     alpha_loc, w_new = jax.lax.fori_loop(
         0, idx_block.shape[0], body, (alpha_loc, w)
@@ -169,12 +178,13 @@ def _local_block_update(X_loc, sq_loc, alpha_loc, w, idx_block, loss,
 
 
 def _local_block_update_ell(cols_loc, vals_loc, sq_loc, alpha_loc, w_pad,
-                            idx_block, loss, act=None):
+                            idx_block, loss, act=None, y=None):
     """B sequential DCD updates on this device's ELL shard: O(k_max)
     gather-dot and dummy-slot scatter per update.  ``w_pad`` carries the
     padded primal (slot d — and any lane padding above it — always 0,
     since padding ids scatter δ·0 there).  ``act`` freezes shrunk
-    coordinates to zero-delta updates."""
+    coordinates to zero-delta updates.  ``y`` folds rows on read like
+    ``_local_block_update``."""
 
     def body(t, carry):
         alpha_loc, w_loc = carry
@@ -182,10 +192,13 @@ def _local_block_update_ell(cols_loc, vals_loc, sq_loc, alpha_loc, w_pad,
         c = cols_loc[i]
         v = vals_loc[i]
         wx = jnp.sum(w_loc[c] * v)
+        if y is not None:
+            wx = y[i] * wx
         delta = loss.delta(alpha_loc[i], wx, sq_loc[i])
         if act is not None:
             delta = jnp.where(act[i], delta, 0.0)
-        return alpha_loc.at[i].add(delta), w_loc.at[c].add(delta * v)
+        dscale = delta if y is None else delta * y[i]
+        return alpha_loc.at[i].add(delta), w_loc.at[c].add(dscale * v)
 
     alpha_loc, w_new = jax.lax.fori_loop(
         0, idx_block.shape[0], body, (alpha_loc, w_pad)
@@ -194,7 +207,7 @@ def _local_block_update_ell(cols_loc, vals_loc, sq_loc, alpha_loc, w_pad,
 
 
 def _local_block_update_feature(cols_loc, vals_loc, sq_loc, alpha_loc,
-                                w_loc, idx_block, loss, act=None):
+                                w_loc, idx_block, loss, act=None, y=None):
     """B sequential DCD updates on this device's (row-block × feature-
     shard) slice.  ``cols_loc``/``vals_loc`` hold *local* column ids
     into the (d_loc+1)-slot primal shard ``w_loc`` (per-shard dummy slot
@@ -205,7 +218,9 @@ def _local_block_update_feature(cols_loc, vals_loc, sq_loc, alpha_loc,
     on every feature shard and α stays replicated along ``model``.
     ``act`` freezes shrunk coordinates to zero-delta updates (the mask
     is replicated along ``model`` like α, so every shard gates
-    identically)."""
+    identically).  ``y`` folds rows on read like
+    ``_local_block_update`` — the psummed partial dot is y-free, so
+    folding after the collective keeps every shard's δ identical."""
 
     def body(t, carry):
         alpha_loc, w_cur = carry
@@ -213,10 +228,13 @@ def _local_block_update_feature(cols_loc, vals_loc, sq_loc, alpha_loc,
         c = cols_loc[i]
         v = vals_loc[i]
         wx = jax.lax.psum(jnp.sum(w_cur[c] * v), "model")
+        if y is not None:
+            wx = y[i] * wx
         delta = loss.delta(alpha_loc[i], wx, sq_loc[i])
         if act is not None:
             delta = jnp.where(act[i], delta, 0.0)
-        return alpha_loc.at[i].add(delta), w_cur.at[c].add(delta * v)
+        dscale = delta if y is None else delta * y[i]
+        return alpha_loc.at[i].add(delta), w_cur.at[c].add(dscale * v)
 
     alpha_loc, w_new = jax.lax.fori_loop(
         0, idx_block.shape[0], body, (alpha_loc, w_loc)
@@ -467,11 +485,12 @@ def _overlap_round_fns(cols_loc, vals_loc, sq_loc, loss, interpret):
     def corr_fn(dvec, idx):
         return dcd_feature_base_correction(cols_loc, vals_loc, dvec, idx)
 
-    def update_fn(alpha_loc, w_ref, idx, base, gram, act=None):
+    def update_fn(alpha_loc, w_ref, idx, base, gram, act=None, y=None):
         return dcd_feature_update_pallas(cols_loc, vals_loc, sq_loc,
                                          alpha_loc, w_ref, idx, base,
                                          gram, loss=loss,
-                                         interpret=interpret, active=act)
+                                         interpret=interpret, active=act,
+                                         y=y)
 
     return gram_fn, corr_fn, update_fn
 
@@ -589,13 +608,19 @@ def _make_gap_1d(loss, X_loc, ell: bool, axes=("data",)):
         def mv(wa):
             return X_loc @ wa
 
-    def gap(rec, alpha_loc, mask, d_run, w_view):
+    def gap(rec, alpha_loc, mask, d_run, w_view, y=None):
         am = jnp.where(mask, alpha_loc, 0.0)
 
         def compute(args):
             am, w_view = args
-            wa = jax.lax.psum(rmv(am, d_run), axes)  # w(α), replicated
+            # multi-task (unfolded X): w(α) = Σ α_i·y_i·x_i and the
+            # primal margin is y_i·wᵀx_i, while ℓ*(−α) reads raw α —
+            # the exact folded-row algebra, applied on read
+            ay = am if y is None else am * y
+            wa = jax.lax.psum(rmv(ay, d_run), axes)  # w(α), replicated
             z = mv(wa)
+            if y is not None:
+                z = y * z
             s = jnp.sum(jnp.where(
                 mask, loss.primal_loss(z) + loss.conj(am), 0.0))
             g = jnp.dot(wa, wa) + jax.lax.psum(s, axes)
@@ -620,7 +645,7 @@ def _make_gap_2d(loss, cols_loc, vals_loc, d1_loc: int, axes=("data",)):
     backward-error metric ‖w(α) − ŵ‖ likewise reduces shard-local
     squared distances over ``model``."""
 
-    def gap(rec, alpha_loc, mask, w_view):
+    def gap(rec, alpha_loc, mask, w_view, y=None):
         am = jnp.where(mask, alpha_loc, 0.0)
 
         def rmv(a):
@@ -629,9 +654,12 @@ def _make_gap_2d(loss, cols_loc, vals_loc, d1_loc: int, axes=("data",)):
 
         def compute(args):
             am, w_view = args
-            wa = jax.lax.psum(rmv(am), axes)  # this shard's w(α) slice
+            ay = am if y is None else am * y  # fold on read (multi-task)
+            wa = jax.lax.psum(rmv(ay), axes)  # this shard's w(α) slice
             z = jax.lax.psum(jnp.sum(wa[cols_loc] * vals_loc, axis=1),
                              "model")
+            if y is not None:
+                z = y * z
             s = jnp.sum(jnp.where(
                 mask, loss.primal_loss(z) + loss.conj(am), 0.0))
             g = (jax.lax.psum(jnp.dot(wa, wa), "model")
@@ -663,8 +691,11 @@ def _make_shrink_1d(loss, X_loc, ell: bool, shrink_tol: float, valid):
         def mv(wv):
             return X_loc @ wv
 
-    def mask_fn(alpha_loc, w_view):
-        return active_mask_from_w(loss, alpha_loc, mv(w_view),
+    def mask_fn(alpha_loc, w_view, y=None):
+        wx = mv(w_view)
+        if y is not None:
+            wx = y * wx  # fold on read (multi-task unfolded X)
+        return active_mask_from_w(loss, alpha_loc, wx,
                                   shrink_tol) & valid
 
     return mask_fn
@@ -676,9 +707,11 @@ def _make_shrink_2d(loss, cols_loc, vals_loc, shrink_tol: float, valid):
     as the solve's own per-update read), so the mask — like α — comes
     out replicated along ``model``."""
 
-    def mask_fn(alpha_loc, w_view):
+    def mask_fn(alpha_loc, w_view, y=None):
         wx = jax.lax.psum(
             jnp.sum(w_view[cols_loc] * vals_loc, axis=1), "model")
+        if y is not None:
+            wx = y * wx  # fold on read (multi-task unfolded X)
         return active_mask_from_w(loss, alpha_loc, wx, shrink_tol) & valid
 
     return mask_fn
@@ -694,25 +727,27 @@ def _block_update_1d(loss, use_kernel: bool, interpret: bool, ell: bool):
     f32 active operand, to the jnp engines as the bool gate."""
 
     def block_update(X_loc, sq_loc, alpha_loc, w_eff, idx_block,
-                     act=None):
+                     act=None, y=None):
         if ell:
             cols_loc, vals_loc = X_loc
             if use_kernel:
                 return dcd_ell_block_update_pallas(
                     cols_loc, vals_loc, sq_loc, alpha_loc, w_eff,
                     idx_block, loss=loss, interpret=interpret, active=act,
+                    y=y,
                 )
             return _local_block_update_ell(
                 cols_loc, vals_loc, sq_loc, alpha_loc, w_eff, idx_block,
-                loss, act=act,
+                loss, act=act, y=y,
             )
         if use_kernel:
             return dcd_block_update_pallas(
                 X_loc, sq_loc, alpha_loc, w_eff, idx_block, loss=loss,
-                interpret=interpret, active=act,
+                interpret=interpret, active=act, y=y,
             )
         return _local_block_update(
-            X_loc, sq_loc, alpha_loc, w_eff, idx_block, loss, act=act
+            X_loc, sq_loc, alpha_loc, w_eff, idx_block, loss, act=act,
+            y=y,
         )
 
     return block_update
@@ -724,15 +759,15 @@ def _block_update_2d(loss, use_kernel: bool, interpret: bool):
     freezes shrunk coordinates like the 1-D engine."""
 
     def block_update(cols_loc, vals_loc, sq_loc, alpha_loc, w_eff,
-                     idx_block, act=None):
+                     idx_block, act=None, y=None):
         if use_kernel:
             return dcd_feature_block_update_pallas(
                 cols_loc, vals_loc, sq_loc, alpha_loc, w_eff, idx_block,
-                loss=loss, interpret=interpret, active=act,
+                loss=loss, interpret=interpret, active=act, y=y,
             )
         return _local_block_update_feature(
             cols_loc, vals_loc, sq_loc, alpha_loc, w_eff, idx_block,
-            loss, act=act,
+            loss, act=act, y=y,
         )
 
     return block_update
@@ -1137,38 +1172,55 @@ def pipeline_state_keys(*, dyn: bool, shrink_on: bool, adaptive: bool,
 
 def _fresh_carry(alpha_loc, w_loc, dw_prev, key, n_gaps, *, n_blocks,
                  dyn, shrink_on, adaptive, delay0, pod_fifo=0,
-                 watchdog=False):
+                 watchdog=False, n_tasks=0):
     """Epoch-0 carried state for ``_epoch_scan`` — the one place the
     scan state's initial values live, shared by the legacy whole-solve
     entry points and ``init_pipeline_state``.  The shrink ``act`` mask
     is NOT seeded here: inside a shard_map body the caller seeds it
     from its device-local ``valid`` (the global-state path seeds the
-    global mask instead)."""
+    global mask instead).
+
+    ``n_tasks > 0`` is the multi-task layout (DESIGN.md §16): the
+    caller hands in (α, w, dw, key) already stacked with a leading
+    (K,) task axis, and every *other* leaf — record buffers, slot,
+    per-task self-tuning latches — is tiled here, EXCEPT ``epoch``,
+    which stays an unbatched shared scalar: the epoch counter drives
+    the scan's ``xs`` and the record/shrink/final predicates, which
+    must stay uniform across tasks so ``lax.cond`` stays a cond (not a
+    select) under the task vmap and skipped epochs stay
+    collective-free."""
+    K = int(n_tasks)
+    t = ((lambda x: jnp.broadcast_to(x, (K,) + x.shape)) if K
+         else (lambda x: x))
     carry = {"alpha": alpha_loc, "w": w_loc, "dw": dw_prev, "key": key,
-             "gaps": jnp.zeros((n_gaps,), jnp.float32),
-             "epsb": jnp.zeros((n_gaps,), jnp.float32),
-             "actb": jnp.zeros((n_gaps,), jnp.float32),
-             "delayb": jnp.zeros((n_gaps,), jnp.float32),
-             "slot": jnp.int32(0), "epoch": jnp.int32(0)}
+             "gaps": t(jnp.zeros((n_gaps,), jnp.float32)),
+             "epsb": t(jnp.zeros((n_gaps,), jnp.float32)),
+             "actb": t(jnp.zeros((n_gaps,), jnp.float32)),
+             "delayb": t(jnp.zeros((n_gaps,), jnp.float32)),
+             "slot": t(jnp.int32(0)), "epoch": jnp.int32(0)}
     if dyn:
-        # the dyn delayed mode's own-updates view (real stale reads)
+        # the dyn delayed mode's own-updates view (real stale reads);
+        # w_loc is already (K, d_run) on the multi-task layout
         carry["dwo"] = jnp.zeros_like(w_loc)
     if shrink_on:
-        carry["frac"] = jnp.float32(1.0)
-        carry["nrun"] = jnp.int32(n_blocks)
-        carry["rp"] = jnp.zeros((), bool)
+        carry["frac"] = t(jnp.float32(1.0))
+        carry["nrun"] = t(jnp.int32(n_blocks))
+        carry["rp"] = t(jnp.zeros((), bool))
     if adaptive:
-        carry["delay"] = jnp.int32(delay0)
-        carry["gapprev"] = jnp.float32(jnp.inf)
+        carry["delay"] = t(jnp.int32(delay0))
+        carry["gapprev"] = t(jnp.float32(jnp.inf))
         if shrink_on:
-            carry["rpok"] = jnp.int32(1)  # sticky repack guard
+            carry["rpok"] = t(jnp.int32(1))  # sticky repack guard
     if pod_fifo:
-        carry["pbuf"] = jnp.zeros((pod_fifo,) + w_loc.shape,
-                                  w_loc.dtype)
+        # (K, fifo, d_run) multi-task / (fifo, d_run) binary — the FIFO
+        # axis sits next to the primal so per-task views keep buf[0]
+        carry["pbuf"] = jnp.zeros(
+            w_loc.shape[:-1] + (pod_fifo,) + w_loc.shape[-1:],
+            w_loc.dtype)
     if watchdog:
-        carry["health"] = jnp.int32(0)
-        carry["gph"] = jnp.float32(jnp.inf)
-        carry["eph"] = jnp.float32(jnp.inf)
+        carry["health"] = t(jnp.int32(0))
+        carry["gph"] = t(jnp.float32(jnp.inf))
+        carry["eph"] = t(jnp.float32(jnp.inf))
     return carry
 
 
@@ -1298,28 +1350,16 @@ def make_sharded_pipeline(mesh: Mesh, loss, *, epochs: int,
     delay0 = int(pod_delay_rounds > 0) if pod_on else delay_rounds
     pod_fifo = pod_delay_rounds if (pod_on and pod_delay_rounds > 0) else 0
 
-    def device_body(X_loc, sq_loc, st):
+    def device_body(X_loc, sq_loc, st, y_loc=None):
         my = jax.lax.axis_index(axis)
-        n_loc = st["alpha"].shape[0]
-        d_run = st["w"].shape[0]
+        n_loc = st["alpha"].shape[-1]
+        d_run = st["w"].shape[-1]
         if pod_on:
             kp = jax.lax.axis_index("pod")
             npv = jnp.clip(n_rows - kp * n_pod_loc, 0, n_pod_loc)
         else:
             npv = n_rows
         valid = jnp.arange(n_loc) < (npv - my * n_loc)
-        if record:
-            gap_fn = _make_gap_1d(loss, X_loc, ell, axes=gap_axes)
-            gap = lambda rec, a, wv: gap_fn(rec, a, valid, d_run, wv)
-        else:
-            gap = None
-        bu = lambda a, w_eff, idx, act=None: block_update(
-            X_loc, sq_loc, a, w_eff, idx, act)
-        if dyn:
-            rounds = functools.partial(_scan_rounds_dyn, bu)
-        else:
-            rounds = functools.partial(_scan_rounds, bu,
-                                       delay_rounds=delay_rounds)
 
         def draw(sub, act=None, rp=False):
             if act is None:
@@ -1334,64 +1374,126 @@ def make_sharded_pipeline(mesh: Mesh, loss, *, epochs: int,
                                              n_blocks, block_size,
                                              act, rp)
 
-        shrink = None
-        if shrink_on:
-            shrink = (_make_shrink_1d(loss, X_loc, ell, shrink_tol,
-                                      valid),
-                      shrink_every, repack_threshold, n_rows,
-                      block_size)
+        # one task's whole epoch scan, with its (n_loc,) label row bound
+        # into every closure that reads X (DESIGN.md §16).  Binary calls
+        # it once with y=None — bit-identical to the pre-task-axis body;
+        # multi-task vmaps it over the leading (K,) axis of every state
+        # leaf EXCEPT the epoch counter, which was popped off above so
+        # the scan xs and the record/shrink/final predicates stay
+        # unbatched (conds stay conds under the vmap).
+        def run_task(carry, y):
+            if record:
+                gap_fn = _make_gap_1d(loss, X_loc, ell, axes=gap_axes)
+                gap = lambda rec, a, wv: gap_fn(rec, a, valid, d_run,
+                                                wv, y)
+            else:
+                gap = None
+            bu = lambda a, w_eff, idx, act=None: block_update(
+                X_loc, sq_loc, a, w_eff, idx, act, y)
+            if dyn:
+                rounds = functools.partial(_scan_rounds_dyn, bu)
+            else:
+                rounds = functools.partial(_scan_rounds, bu,
+                                           delay_rounds=delay_rounds)
+            shrink = None
+            if shrink_on:
+                mfn = _make_shrink_1d(loss, X_loc, ell, shrink_tol,
+                                      valid)
+                shrink = ((lambda a, wv: mfn(a, wv, y)),
+                          shrink_every, repack_threshold, n_rows,
+                          block_size)
+                if "act" not in carry:
+                    carry = dict(carry)
+                    carry["act"] = valid
+            return _epoch_scan(rounds, gap, carry, draw, epochs=epochs,
+                               total_epochs=total, e0=e0, n_gaps=n_gaps,
+                               gap_every=gap_every, record=record,
+                               n_blocks=n_blocks, valid=valid,
+                               shrink=shrink, adaptive=adaptive,
+                               adaptive_ratio=adaptive_ratio,
+                               delay0=delay0,
+                               pod=((pods, pod_delay_rounds)
+                                    if pod_on else None),
+                               watchdog=((_make_badcount(gap_axes,
+                                                         False),
+                                          watchdog_blowup,
+                                          watchdog_floor)
+                                         if watchdog else None),
+                               fault=fault)
+
         carry = dict(st)
         e0 = carry.pop("epoch")
-        if shrink_on and "act" not in carry:
-            carry["act"] = valid
-        out = _epoch_scan(rounds, gap, carry, draw, epochs=epochs,
-                          total_epochs=total, e0=e0, n_gaps=n_gaps,
-                          gap_every=gap_every, record=record,
-                          n_blocks=n_blocks, valid=valid, shrink=shrink,
-                          adaptive=adaptive,
-                          adaptive_ratio=adaptive_ratio, delay0=delay0,
-                          pod=((pods, pod_delay_rounds)
-                               if pod_on else None),
-                          watchdog=((_make_badcount(gap_axes, False),
-                                     watchdog_blowup, watchdog_floor)
-                                    if watchdog else None),
-                          fault=fault)
+        out = (run_task(carry, None) if y_loc is None
+               else jax.vmap(run_task)(carry, y_loc))
         out["epoch"] = e0 + jnp.int32(epochs)
         return out
 
+    tax = "task" if "task" in mesh.axis_names else None
+
     if segmented:
-        def solve_seg(X, sq_norms, st):
-            st_specs = {k: P(row_ax) if k in ("alpha", "act") else P()
-                        for k in st}
+        def st_spec(k, multitask):
+            if not multitask:
+                return P(row_ax) if k in ("alpha", "act") else P()
+            if k == "epoch":
+                return P()  # shared scalar — drives the scan xs
+            if k in ("alpha", "act"):
+                return P(tax, row_ax)
+            if k == "pbuf":
+                return P(tax, None)
+            return P(tax)
+
+        def solve_seg(X, sq_norms, st, y=None):
+            st_specs = {k: st_spec(k, y is not None) for k in st}
+            if y is None:
+                return shard_map(
+                    device_body,
+                    mesh=mesh,
+                    in_specs=(x_spec, P(row_ax), st_specs),
+                    out_specs=st_specs,
+                    check_vma=False,
+                )(X, sq_norms, st)
             return shard_map(
                 device_body,
                 mesh=mesh,
-                in_specs=(x_spec, P(row_ax), st_specs),
+                in_specs=(x_spec, P(row_ax), st_specs, P(tax, row_ax)),
                 out_specs=st_specs,
                 check_vma=False,
-            )(X, sq_norms, st)
+            )(X, sq_norms, st, y)
 
         return jax.jit(solve_seg)
 
-    def solve(X, sq_norms, alpha, w, key, carry_dw):
-        def device_fn(X_loc, sq_loc, alpha_loc, w_rep, key, dw_prev):
+    def solve(X, sq_norms, alpha, w, key, carry_dw, y=None):
+        def device_fn(X_loc, sq_loc, alpha_loc, w_rep, key, dw_prev,
+                      y_loc=None):
             st = _fresh_carry(alpha_loc, w_rep, dw_prev, key, n_gaps,
                               n_blocks=n_blocks, dyn=dyn,
                               shrink_on=shrink_on, adaptive=adaptive,
                               delay0=delay0, pod_fifo=pod_fifo,
-                              watchdog=watchdog)
-            out = device_body(X_loc, sq_loc, st)
-            dw_out = out["pbuf"].sum(0) if pod_fifo else out["dw"]
+                              watchdog=watchdog,
+                              n_tasks=(alpha_loc.shape[0]
+                                       if y_loc is not None else 0))
+            out = device_body(X_loc, sq_loc, st, y_loc)
+            dw_out = out["pbuf"].sum(-2) if pod_fifo else out["dw"]
             return (out["alpha"], out["w"], dw_out, out["gaps"],
                     out["epsb"], out["actb"], out["delayb"])
 
+        if y is None:
+            return shard_map(
+                device_fn,
+                mesh=mesh,
+                in_specs=(x_spec, P(row_ax), P(row_ax), P(), P(), P()),
+                out_specs=(P(row_ax), P(), P(), P(), P(), P(), P()),
+                check_vma=False,  # carries flip replicated→varying
+            )(X, sq_norms, alpha, w, key, carry_dw)
         return shard_map(
             device_fn,
             mesh=mesh,
-            in_specs=(x_spec, P(row_ax), P(row_ax), P(), P(), P()),
-            out_specs=(P(row_ax), P(), P(), P(), P(), P(), P()),
-            check_vma=False,  # carries flip replicated→varying across psum
-        )(X, sq_norms, alpha, w, key, carry_dw)
+            in_specs=(x_spec, P(row_ax), P(tax, row_ax), P(tax), P(tax),
+                      P(tax), P(tax, row_ax)),
+            out_specs=(P(tax, row_ax), P(tax), P(tax), P(tax), P(tax),
+                      P(tax), P(tax)),
+            check_vma=False,  # carries flip replicated→varying
+        )(X, sq_norms, alpha, w, key, carry_dw, y)
 
     return jax.jit(solve)
 
@@ -1462,23 +1564,18 @@ def make_sharded_pipeline_2d(mesh: Mesh, loss, *, epochs: int,
     delay0 = int(pod_delay_rounds > 0) if pod_on else delay_rounds
     pod_fifo = pod_delay_rounds if (pod_on and pod_delay_rounds > 0) else 0
 
-    def device_body(cols4, vals4, sq_loc, st):
+    def device_body(cols4, vals4, sq_loc, st, y_loc=None):
         cols_loc = cols4[:, 0]  # (n_loc, 1, k) → (n_loc, k)
         vals_loc = vals4[:, 0]
         my = jax.lax.axis_index("data")
-        n_loc = st["alpha"].shape[0]
+        n_loc = st["alpha"].shape[-1]
+        d1_run = st["w"].shape[-1]
         if pod_on:
             kp = jax.lax.axis_index("pod")
             npv = jnp.clip(n_rows - kp * n_pod_loc, 0, n_pod_loc)
         else:
             npv = n_rows
         valid = jnp.arange(n_loc) < (npv - my * n_loc)
-        if record:
-            gap_fn = _make_gap_2d(loss, cols_loc, vals_loc,
-                                  st["w"].shape[0], axes=gap_axes)
-            gap = lambda rec, a, wv: gap_fn(rec, a, valid, wv)
-        else:
-            gap = None
 
         def draw(sub, act=None, rp=False):
             if act is None:
@@ -1493,102 +1590,161 @@ def make_sharded_pipeline_2d(mesh: Mesh, loss, *, epochs: int,
                                              n_blocks, block_size,
                                              act, rp)
 
+        # per-task epoch scan (see the 1-D builder): binary runs it once
+        # with y=None, multi-task vmaps it over the leading (K,) state
+        # axis with the shared epoch counter popped off beforehand.  The
+        # overlap prologue lives INSIDE so each task's in-flight (base,
+        # Gram) aggregate follows its own PRNG chain.
+        def run_task(carry, y):
+            if record:
+                gap_fn = _make_gap_2d(loss, cols_loc, vals_loc,
+                                      d1_run, axes=gap_axes)
+                gap = lambda rec, a, wv: gap_fn(rec, a, valid, wv, y)
+            else:
+                gap = None
+            if shrink_on and "act" not in carry:
+                carry = dict(carry)
+                carry["act"] = valid
+            if overlap:
+                gram_fn, corr_fn, update_fn = _overlap_round_fns(
+                    cols_loc, vals_loc, sq_loc, loss, interpret)
+                ufn = lambda a, w_ref, idx, base, gram, act=None: (
+                    update_fn(a, w_ref, idx, base, gram, act, y))
+                rounds = functools.partial(_scan_rounds_overlap,
+                                           gram_fn, corr_fn, ufn)
+                # prologue: the NEXT epoch's first block, referenced to
+                # the entering primal shard — the split below is exactly
+                # what the first scan iteration will consume, so a fresh
+                # solve pays its one up-front gram here and a RESUMED
+                # segment reconstructs the carried-out in-flight
+                # aggregate of the previous segment bit-exactly (it
+                # never hits the disk).  The Gram is label-free, so the
+                # multi-task prologue needs no fold.
+                _, sub0 = jax.random.split(carry["key"])
+                b0 = (draw(sub0, valid) if shrink_on else draw(sub0))[0]
+                carry = dict(carry)
+                carry["inflight"] = gram_fn(carry["w"], b0)
+            else:
+                bu = lambda a, w_eff, idx, act=None: block_update(
+                    cols_loc, vals_loc, sq_loc, a, w_eff, idx, act, y)
+                if dyn:
+                    rounds = functools.partial(_scan_rounds_dyn, bu)
+                else:
+                    rounds = functools.partial(_scan_rounds, bu,
+                                               delay_rounds=delay_rounds)
+            shrink = None
+            if shrink_on:
+                mfn = _make_shrink_2d(loss, cols_loc, vals_loc,
+                                      shrink_tol, valid)
+                shrink = ((lambda a, wv: mfn(a, wv, y)),
+                          shrink_every, repack_threshold, n_rows,
+                          block_size)
+            out = _epoch_scan(rounds, gap, carry, draw, epochs=epochs,
+                              total_epochs=total, e0=e0, n_gaps=n_gaps,
+                              gap_every=gap_every, record=record,
+                              n_blocks=n_blocks, valid=valid,
+                              shrink=shrink, adaptive=adaptive,
+                              adaptive_ratio=adaptive_ratio,
+                              delay0=delay0, overlap=overlap,
+                              pod=((pods, pod_delay_rounds)
+                                   if pod_on else None),
+                              watchdog=((_make_badcount(gap_axes, True),
+                                         watchdog_blowup,
+                                         watchdog_floor)
+                                        if watchdog else None),
+                              fault=fault)
+            out.pop("inflight", None)
+            return out
+
         carry = dict(st)
         e0 = carry.pop("epoch")
-        if shrink_on and "act" not in carry:
-            carry["act"] = valid
-        if overlap:
-            gram_fn, corr_fn, update_fn = _overlap_round_fns(
-                cols_loc, vals_loc, sq_loc, loss, interpret)
-            rounds = functools.partial(_scan_rounds_overlap, gram_fn,
-                                       corr_fn, update_fn)
-            # prologue: the NEXT epoch's first block, referenced to the
-            # entering primal shard — the split below is exactly what
-            # the first scan iteration will consume, so a fresh solve
-            # pays its one up-front gram here and a RESUMED segment
-            # reconstructs the carried-out in-flight aggregate of the
-            # previous segment bit-exactly (it never hits the disk)
-            _, sub0 = jax.random.split(carry["key"])
-            b0 = (draw(sub0, valid) if shrink_on else draw(sub0))[0]
-            carry["inflight"] = gram_fn(carry["w"], b0)
-        else:
-            bu = lambda a, w_eff, idx, act=None: block_update(
-                cols_loc, vals_loc, sq_loc, a, w_eff, idx, act)
-            if dyn:
-                rounds = functools.partial(_scan_rounds_dyn, bu)
-            else:
-                rounds = functools.partial(_scan_rounds, bu,
-                                           delay_rounds=delay_rounds)
-        shrink = None
-        if shrink_on:
-            shrink = (_make_shrink_2d(loss, cols_loc, vals_loc,
-                                      shrink_tol, valid),
-                      shrink_every, repack_threshold, n_rows,
-                      block_size)
-        out = _epoch_scan(rounds, gap, carry, draw, epochs=epochs,
-                          total_epochs=total, e0=e0, n_gaps=n_gaps,
-                          gap_every=gap_every, record=record,
-                          n_blocks=n_blocks, valid=valid, shrink=shrink,
-                          adaptive=adaptive,
-                          adaptive_ratio=adaptive_ratio, delay0=delay0,
-                          overlap=overlap,
-                          pod=((pods, pod_delay_rounds)
-                               if pod_on else None),
-                          watchdog=((_make_badcount(gap_axes, True),
-                                     watchdog_blowup, watchdog_floor)
-                                    if watchdog else None),
-                          fault=fault)
-        out.pop("inflight", None)
+        out = (run_task(carry, None) if y_loc is None
+               else jax.vmap(run_task)(carry, y_loc))
         out["epoch"] = e0 + jnp.int32(epochs)
         return out
 
-    if segmented:
-        def spec_of(k):
-            if k in ("alpha", "act"):
-                return P(row_ax)
-            if k in ("w", "dw", "dwo"):
-                return P("model")
-            if k == "pbuf":
-                return P(None, "model")
-            return P()
+    tax = "task" if "task" in mesh.axis_names else None
 
-        def solve_seg(X, sq_norms, st):
-            st_specs = {k: spec_of(k) for k in st}
+    if segmented:
+        def spec_of(k, multitask):
+            if not multitask:
+                if k in ("alpha", "act"):
+                    return P(row_ax)
+                if k in ("w", "dw", "dwo"):
+                    return P("model")
+                if k == "pbuf":
+                    return P(None, "model")
+                return P()
+            if k == "epoch":
+                return P()  # shared scalar — drives the scan xs
+            if k in ("alpha", "act"):
+                return P(tax, row_ax)
+            if k in ("w", "dw", "dwo"):
+                return P(tax, "model")
+            if k == "pbuf":
+                return P(tax, None, "model")
+            return P(tax)
+
+        def solve_seg(X, sq_norms, st, y=None):
+            st_specs = {k: spec_of(k, y is not None) for k in st}
             cols, vals = X
+            if y is None:
+                return shard_map(
+                    device_body,
+                    mesh=mesh,
+                    in_specs=(P(row_ax, "model"), P(row_ax, "model"),
+                              P(row_ax), st_specs),
+                    out_specs=st_specs,
+                    check_vma=False,
+                )(cols, vals, sq_norms, st)
             return shard_map(
                 device_body,
                 mesh=mesh,
                 in_specs=(P(row_ax, "model"), P(row_ax, "model"),
-                          P(row_ax), st_specs),
+                          P(row_ax), st_specs, P(tax, row_ax)),
                 out_specs=st_specs,
                 check_vma=False,
-            )(cols, vals, sq_norms, st)
+            )(cols, vals, sq_norms, st, y)
 
         return jax.jit(solve_seg)
 
-    def solve(X, sq_norms, alpha, w, key, carry_dw):
+    def solve(X, sq_norms, alpha, w, key, carry_dw, y=None):
         def device_fn(cols4, vals4, sq_loc, alpha_loc, w_loc, key,
-                      dw_prev):
+                      dw_prev, y_loc=None):
             st = _fresh_carry(alpha_loc, w_loc, dw_prev, key, n_gaps,
                               n_blocks=n_blocks, dyn=dyn,
                               shrink_on=shrink_on, adaptive=adaptive,
                               delay0=delay0, pod_fifo=pod_fifo,
-                              watchdog=watchdog)
-            out = device_body(cols4, vals4, sq_loc, st)
-            dw_out = out["pbuf"].sum(0) if pod_fifo else out["dw"]
+                              watchdog=watchdog,
+                              n_tasks=(alpha_loc.shape[0]
+                                       if y_loc is not None else 0))
+            out = device_body(cols4, vals4, sq_loc, st, y_loc)
+            dw_out = out["pbuf"].sum(-2) if pod_fifo else out["dw"]
             return (out["alpha"], out["w"], dw_out, out["gaps"],
                     out["epsb"], out["actb"], out["delayb"])
 
         cols, vals = X
+        if y is None:
+            return shard_map(
+                device_fn,
+                mesh=mesh,
+                in_specs=(P(row_ax, "model"), P(row_ax, "model"),
+                          P(row_ax), P(row_ax), P("model"), P(),
+                          P("model")),
+                out_specs=(P(row_ax), P("model"), P("model"), P(), P(),
+                           P(), P()),
+                check_vma=False,  # carries flip replicated→varying
+            )(cols, vals, sq_norms, alpha, w, key, carry_dw)
         return shard_map(
             device_fn,
             mesh=mesh,
             in_specs=(P(row_ax, "model"), P(row_ax, "model"), P(row_ax),
-                      P(row_ax), P("model"), P(), P("model")),
-            out_specs=(P(row_ax), P("model"), P("model"), P(), P(), P(),
-                      P()),
-            check_vma=False,  # carries flip replicated→varying across psum
-        )(cols, vals, sq_norms, alpha, w, key, carry_dw)
+                      P(tax, row_ax), P(tax, "model"), P(tax),
+                      P(tax, "model"), P(tax, row_ax)),
+            out_specs=(P(tax, row_ax), P(tax, "model"), P(tax, "model"),
+                       P(tax), P(tax), P(tax), P(tax)),
+            check_vma=False,  # carries flip replicated→varying
+        )(cols, vals, sq_norms, alpha, w, key, carry_dw, y)
 
     return jax.jit(solve)
 
@@ -1671,6 +1827,25 @@ class SolverSetup(NamedTuple):
     repack_threshold: float
     adaptive_ratio: float
     seed: int
+    n_tasks: int = 0     # multi-task K (0 = binary, DESIGN.md §16)
+    Y: object = None     # placed (K, n_pad) ±1 label matrix (None = binary)
+
+
+def _place_labels(mesh, y, *, n, n_pad, ridx, pod_on):
+    """Pad a host (K, n) ±1 label matrix to the solve's row layout —
+    padding slots get +1.0 (inert: their rows are all-zero and masked
+    out of every sum, the fold just has to stay finite) — and place it
+    replicated over the row axes with the leading task axis on the
+    ``task`` mesh axis when one exists.  Returns ``(K, Y_placed)``."""
+    Y = jnp.asarray(y, jnp.float32)
+    K = int(Y.shape[0])
+    if pod_on:
+        Yp = jnp.concatenate([Y, jnp.ones((K, 1), jnp.float32)],
+                             axis=1)[:, ridx]
+    else:
+        Yp = jnp.ones((K, n_pad), jnp.float32).at[:, :n].set(Y)
+    tax = "task" if "task" in mesh.axis_names else None
+    return K, jax.device_put(Yp, named(mesh, tax, data_axes(mesh)))
 
 
 def prepare_solver(
@@ -1679,6 +1854,7 @@ def prepare_solver(
     *,
     mesh: Mesh | None = None,
     mesh_axes: tuple = ("data",),
+    y=None,
     block_size: int = 64,
     delay_rounds: int = 0,
     pod_delay_rounds: int = 0,
@@ -1701,7 +1877,13 @@ def prepare_solver(
     ``pipeline_overlap``, ``resolve_self_tuning``) happens here, so the
     segmented resilience layer inherits it for free."""
     if mesh is None:
-        if "pod" in mesh_axes:
+        if "task" in mesh_axes:
+            n_dev = len(jax.devices())
+            t_ax = 2 if n_dev % 2 == 0 else 1
+            m_ax = (2 if "model" in mesh_axes
+                    and (n_dev // t_ax) % 2 == 0 else 1)
+            mesh = solver_mesh_tasks(task=t_ax, model=m_ax)
+        elif "pod" in mesh_axes:
             n_dev = len(jax.devices())
             pods = 2 if n_dev % 2 == 0 else 1
             if "model" in mesh_axes:
@@ -1727,6 +1909,13 @@ def prepare_solver(
     elif pod_delay_rounds:
         raise ValueError(
             "pod_delay_rounds needs a mesh with a 'pod' axis")
+    if y is not None:
+        task_axis_policy(jnp.asarray(y).shape[0], mesh=mesh,
+                         pipeline=pipeline)
+    elif "task" in mesh.axis_names:
+        raise ValueError(
+            "a 'task' mesh axis needs a (K, n) label matrix y "
+            "(DESIGN.md §16)")
     two_d = "model" in mesh.axis_names
     gap_every = max(int(gap_every), 1)
     p = mesh.shape["data"]
@@ -1790,6 +1979,8 @@ def prepare_solver(
                 fse.row_sq_norms())
         x_sh = named(mesh, data_axes(mesh), "model", None)
         X = (jax.device_put(cols, x_sh), jax.device_put(vals, x_sh))
+        n_tasks, Y = ((0, None) if y is None else _place_labels(
+            mesh, y, n=n, n_pad=n_pad, ridx=ridx, pod_on=pod_on))
         return SolverSetup(
             mesh=mesh, loss=loss, two_d=True, pod_on=pod_on, pods=pods,
             p=p, m=m, n=n, d=d, n_loc=n_loc, n_pad=n_pad,
@@ -1800,7 +1991,8 @@ def prepare_solver(
             delay_rounds=delay_rounds, pod_delay_rounds=pod_delay_rounds,
             gap_every=gap_every, record=record, tuning=tuning,
             shrink_tol=shrink_tol, repack_threshold=repack_threshold,
-            adaptive_ratio=adaptive_ratio, seed=seed)
+            adaptive_ratio=adaptive_ratio, seed=seed,
+            n_tasks=n_tasks, Y=Y)
 
     is_ell = isinstance(X_host, EllMatrix)
     if is_ell:
@@ -1877,6 +2069,8 @@ def prepare_solver(
             if n_pad != n:
                 sq_norms = sq_norms.at[n:].set(1.0)
         X = jax.device_put(X, row_sh)
+    n_tasks, Y = ((0, None) if y is None else _place_labels(
+        mesh, y, n=n, n_pad=n_pad, ridx=ridx, pod_on=pod_on))
     return SolverSetup(
         mesh=mesh, loss=loss, two_d=False, pod_on=pod_on, pods=pods,
         p=p, m=1, n=n, d=d, n_loc=n_loc, n_pad=n_pad,
@@ -1887,7 +2081,8 @@ def prepare_solver(
         delay_rounds=delay_rounds, pod_delay_rounds=pod_delay_rounds,
         gap_every=gap_every, record=record, tuning=tuning,
         shrink_tol=shrink_tol, repack_threshold=repack_threshold,
-        adaptive_ratio=adaptive_ratio, seed=seed)
+        adaptive_ratio=adaptive_ratio, seed=seed,
+        n_tasks=n_tasks, Y=Y)
 
 
 def _init_alpha_w(setup: SolverSetup, alpha0=None, w0=None):
@@ -1898,7 +2093,33 @@ def _init_alpha_w(setup: SolverSetup, alpha0=None, w0=None):
     *shorter* than the setup's n/d is the streaming-append warm start
     (DESIGN.md §15): old coordinates keep their duals, freshly appended
     rows enter at α = 0 (their optimal start — they have made no
-    contribution to w yet)."""
+    contribution to w yet).
+
+    On a multi-task setup the carried state is a (K, n')/(K, d') stack
+    and the same re-blocking runs vmapped over the task rows, so the
+    elastic/warm-start semantics are per-class identical to K
+    independent binary restores."""
+    if setup.n_tasks:
+        K = setup.n_tasks
+        if alpha0 is None and w0 is None:
+            return (jnp.zeros((K, setup.n_pad), jnp.float32),
+                    jnp.zeros((K, setup.w_len), jnp.float32))
+        a2 = (None if alpha0 is None
+              else jnp.asarray(alpha0, jnp.float32).reshape(K, -1))
+        w2 = (None if w0 is None
+              else jnp.asarray(w0, jnp.float32).reshape(K, -1))
+        if a2 is None:
+            return jax.vmap(
+                lambda wv: _init_alpha_w_single(setup, None, wv))(w2)
+        if w2 is None:
+            return jax.vmap(
+                lambda av: _init_alpha_w_single(setup, av, None))(a2)
+        return jax.vmap(
+            lambda av, wv: _init_alpha_w_single(setup, av, wv))(a2, w2)
+    return _init_alpha_w_single(setup, alpha0, w0)
+
+
+def _init_alpha_w_single(setup: SolverSetup, alpha0=None, w0=None):
     n, n_pad, d = setup.n, setup.n_pad, setup.d
     if alpha0 is None:
         alpha = jnp.zeros((n_pad,), jnp.float32)
@@ -1989,17 +2210,25 @@ def init_pipeline_state(setup: SolverSetup, *, total_epochs: int,
     alpha, w = _init_alpha_w(setup, alpha0, w0)
     delay0 = int(pdr > 0) if setup.pod_on else dr
     pod_fifo = pdr if (setup.pod_on and pdr > 0) else 0
-    state = _fresh_carry(alpha, w, jnp.zeros_like(w),
-                         jax.random.PRNGKey(setup.seed), n_gaps,
+    key = jax.random.PRNGKey(setup.seed)
+    if setup.n_tasks:
+        # every task starts on the SAME chain — matching K independent
+        # binary solves at this seed, which is what the loop-over-K
+        # reference (and the K=1 bit-identity contract) compares against
+        key = jnp.broadcast_to(key, (setup.n_tasks,) + key.shape)
+    state = _fresh_carry(alpha, w, jnp.zeros_like(w), key, n_gaps,
                          n_blocks=setup.n_blocks, dyn=dyn,
                          shrink_on=shrink_on, adaptive=st.adaptive,
                          delay0=delay0, pod_fifo=pod_fifo,
-                         watchdog=watchdog)
+                         watchdog=watchdog, n_tasks=setup.n_tasks)
     if shrink_on:
         # global view of the device-local ``valid`` masks (the padding
         # rows of every pod tail excluded)
-        state["act"] = (setup.ridx < setup.n if setup.pod_on
-                        else jnp.arange(setup.n_pad) < setup.n)
+        act = (setup.ridx < setup.n if setup.pod_on
+               else jnp.arange(setup.n_pad) < setup.n)
+        state["act"] = (jnp.broadcast_to(act, (setup.n_tasks,)
+                                         + act.shape)
+                        if setup.n_tasks else act)
     return device_put_state(setup, state)
 
 
@@ -2011,20 +2240,35 @@ def device_put_state(setup: SolverSetup, state: dict) -> dict:
     This is the elastic-resharding point: restored host arrays re-shard
     here onto whatever mesh ``setup`` carries."""
     mesh = setup.mesh
-    data_sh = named(mesh, data_axes(mesh))
-    w_sh = named(mesh, "model") if setup.two_d else replicated(mesh)
-    pbuf_sh = (named(mesh, None, "model") if setup.two_d
-               else replicated(mesh))
     rep_sh = replicated(mesh)
+    if setup.n_tasks:
+        # multi-task layout: every leaf except the shared epoch scalar
+        # carries the leading (K,) axis — placed on the 'task' mesh
+        # axis when one exists, unsharded otherwise
+        tax = "task" if "task" in mesh.axis_names else None
+        data_sh = named(mesh, tax, data_axes(mesh))
+        w_sh = (named(mesh, tax, "model") if setup.two_d
+                else named(mesh, tax))
+        pbuf_sh = (named(mesh, tax, None, "model") if setup.two_d
+                   else named(mesh, tax))
+        task_sh = named(mesh, tax)
+    else:
+        data_sh = named(mesh, data_axes(mesh))
+        w_sh = named(mesh, "model") if setup.two_d else replicated(mesh)
+        pbuf_sh = (named(mesh, None, "model") if setup.two_d
+                   else replicated(mesh))
+        task_sh = rep_sh
 
     def place(k, v):
+        if k == "epoch":
+            return jax.device_put(v, rep_sh)
         if k in ("alpha", "act"):
             return jax.device_put(v, data_sh)
         if k in ("w", "dw", "dwo"):
             return jax.device_put(v, w_sh)
         if k == "pbuf":
             return jax.device_put(v, pbuf_sh)
-        return jax.device_put(v, rep_sh)
+        return jax.device_put(v, task_sh)
 
     return {k: place(k, v) for k, v in state.items()}
 
@@ -2035,7 +2279,7 @@ def finalize_state(setup: SolverSetup, state: dict,
     flush the in-flight aggregate (exact zeros when the run ended
     synchronous — the add is then inert), drain the pod FIFO, and
     un-pad exactly like the whole-solve entry point."""
-    dw = state["pbuf"].sum(0) if "pbuf" in state else state["dw"]
+    dw = state["pbuf"].sum(-2) if "pbuf" in state else state["dw"]
     w = state["w"] + dw
     return _finalize(setup, state["alpha"], w, state["gaps"], epochs,
                      state["epsb"], state["actb"], state["delayb"])
@@ -2046,8 +2290,25 @@ def _finalize(setup: SolverSetup, alpha, w, gaps_arr, epochs,
     """Un-pad a finished solve back to user coordinates: invert the pod
     rowmap gather (padding slots all land on the sliced-off index n),
     stitch the true primal out of the 2-D per-shard padded slices, and
-    slice off row/lane padding."""
+    slice off row/lane padding.  On a multi-task setup every step runs
+    over the trailing axes of the (K, …) stacks, so the result carries
+    (K, n) duals / (K, d) weights / (K, n_gaps) records."""
     n, d = setup.n, setup.d
+    if setup.n_tasks:
+        if setup.pod_on:
+            alpha = jax.vmap(
+                lambda a: jnp.zeros((n + 1,), jnp.float32)
+                .at[setup.ridx].set(a))(alpha)
+        if setup.two_d:
+            w = w.reshape(setup.n_tasks, setup.m,
+                          setup.d1_loc)[:, :, :setup.d_loc]
+            w = w.reshape(setup.n_tasks, -1)[:, :d]
+        else:
+            w = w[:, :d]
+        if eps_arr is None:
+            return ShardedResult(alpha[:, :n], w, gaps_arr, epochs)
+        return ShardedResult(alpha[:, :n], w, gaps_arr, epochs, eps_arr,
+                             act_arr, delay_arr)
     if setup.pod_on:
         alpha = jnp.zeros((n + 1,), jnp.float32).at[setup.ridx].set(alpha)
     if setup.two_d:
@@ -2092,6 +2353,31 @@ def _validate_solver_inputs(X_host, y, loss):
                          np.asarray(X_host.values) * y[:, None],
                          X_host.n_features)
     return np.asarray(X_host) * y[:, None]
+
+
+def _validate_multitask_labels(X_host, Y):
+    """The multi-task mouth (DESIGN.md §16): a (K, n) ±1 one-vs-rest
+    label matrix — validated, NOT folded into X.  Shared-X tasks cannot
+    pre-fold (each class flips a different row subset), so the engines
+    fold on read instead; the returned float32 matrix is what
+    ``prepare_solver`` pads and places."""
+    Y = np.asarray(jax.device_get(Y), np.float32)
+    if Y.ndim != 2 or Y.shape[0] < 1:
+        raise ValueError(
+            f"multi-task labels must be a (K, n) matrix, got shape "
+            f"{Y.shape}")
+    n = (X_host.n_rows if isinstance(X_host, EllMatrix)
+         else X_host.shape[0])
+    if Y.shape[1] != n:
+        raise ValueError(
+            f"label matrix has {Y.shape[1]} columns for {n} rows")
+    if not np.all(np.isfinite(Y)):
+        raise ValueError("Y contains non-finite entries (NaN/Inf)")
+    if not np.all(np.isin(Y, (-1.0, 1.0))):
+        raise ValueError(
+            "multi-task labels must be in {-1, +1} (see "
+            "repro.data.ovr_labels)")
+    return Y
 
 
 def sharded_passcode_solve(
@@ -2202,9 +2488,21 @@ def sharded_passcode_solve(
     (DESIGN.md §14); the segmented fault-tolerant variant of this
     entry point lives in ``repro.resilience.solve_segmented``.
     """
-    X_host = _validate_solver_inputs(X_host, y, loss)
+    y_host = None if y is None else np.asarray(jax.device_get(y))
+    if y_host is not None and y_host.ndim == 2:
+        # multi-task mouth: (K, n) one-vs-rest label matrix — validated
+        # but NOT folded (shared X), threaded to the engines instead
+        Y_host = _validate_multitask_labels(X_host, y_host)
+        X_host = _validate_solver_inputs(X_host, None, loss)
+        if not pipeline:
+            raise ValueError(
+                "a multi-task solve needs pipeline=True (see "
+                "repro.dist.mesh.task_axis_policy)")
+    else:
+        Y_host = None
+        X_host = _validate_solver_inputs(X_host, y, loss)
     setup = prepare_solver(
-        X_host, loss, mesh=mesh, mesh_axes=mesh_axes,
+        X_host, loss, mesh=mesh, mesh_axes=mesh_axes, y=Y_host,
         block_size=block_size, delay_rounds=delay_rounds,
         pod_delay_rounds=pod_delay_rounds, seed=seed, record=record,
         use_kernel=use_kernel, gap_every=gap_every, pipeline=pipeline,
@@ -2213,22 +2511,32 @@ def sharded_passcode_solve(
         repack_threshold=repack_threshold, adaptive=adaptive,
         adaptive_ratio=adaptive_ratio)
     st = setup.tuning
-    data_sh = named(setup.mesh, data_axes(setup.mesh))
-    w_sh = (named(setup.mesh, "model") if setup.two_d
-            else replicated(setup.mesh))
+    tax = "task" if "task" in setup.mesh.axis_names else None
+    if setup.n_tasks:
+        data_sh = named(setup.mesh, tax, data_axes(setup.mesh))
+        w_sh = (named(setup.mesh, tax, "model") if setup.two_d
+                else named(setup.mesh, tax))
+    else:
+        data_sh = named(setup.mesh, data_axes(setup.mesh))
+        w_sh = (named(setup.mesh, "model") if setup.two_d
+                else replicated(setup.mesh))
     alpha, w = _init_alpha_w(setup, alpha0, w0)
     alpha = jax.device_put(alpha, data_sh)
     w = jax.device_put(w, w_sh)
-    carry_dw = jax.device_put(jnp.zeros((setup.w_len,), jnp.float32),
-                              w_sh)
+    carry_dw = jax.device_put(jnp.zeros_like(w), w_sh)
     key = jax.random.PRNGKey(setup.seed)  # one chain for both paths
+    if setup.n_tasks:
+        # identical per-task chains: each class replays the binary
+        # solve's draws exactly, matching the loop-over-K reference
+        key = jnp.broadcast_to(key, (setup.n_tasks,) + key.shape)
 
     if pipeline:
         solve_fn = build_pipeline(setup, epochs=epochs)
         # identical block draws on the 1-D and 2-D paths at equal p and
         # seed, so the two engines run the same update sequence
         alpha, w, carry_dw, gaps_arr, eps_arr, act_arr, delay_arr = (
-            solve_fn(setup.X, setup.sq_norms, alpha, w, key, carry_dw))
+            solve_fn(setup.X, setup.sq_norms, alpha, w, key, carry_dw,
+                     setup.Y))
         if (setup.delay_rounds > 0 or st.shrink_every or st.adaptive
                 or setup.pod_delay_rounds > 0):
             w = w + carry_dw  # flush in-flight aggregate (0 when sync)

@@ -1,5 +1,11 @@
 """Data substrate: JAX-native sparse matrices and synthetic datasets."""
 
+from repro.data.labels import (
+    MultitaskLabels,
+    multitask_labels,
+    ovr_decode,
+    ovr_labels,
+)
 from repro.data.sparse import EllMatrix, dense_to_ell, ell_matvec, ell_row_dot
 from repro.data.synthetic import (
     DATASET_RECIPES,
@@ -12,6 +18,10 @@ __all__ = [
     "dense_to_ell",
     "ell_matvec",
     "ell_row_dot",
+    "MultitaskLabels",
+    "multitask_labels",
+    "ovr_labels",
+    "ovr_decode",
     "SyntheticDataset",
     "make_dataset",
     "DATASET_RECIPES",

@@ -24,6 +24,8 @@ from repro.dist.mesh import (
     make_production_mesh,
     solver_mesh,
     solver_mesh_2d,
+    solver_mesh_tasks,
+    task_axis_policy,
 )
 from repro.dist.sharding import (
     NO_RULES,
@@ -56,5 +58,7 @@ __all__ = [
     "shard_map",
     "solver_mesh",
     "solver_mesh_2d",
+    "solver_mesh_tasks",
+    "task_axis_policy",
     "token_sharding",
 ]

@@ -63,6 +63,70 @@ def solver_mesh_3d(pod: int = 2, data: int | None = None, model: int = 1,
     return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
 
 
+def solver_mesh_tasks(task: int = 2, data: int | None = None,
+                      model: int = 1, n_devices: int | None = None):
+    """Mesh with a leading ``task`` axis for the multi-task one-vs-rest
+    solver (DESIGN.md §16): each of K one-vs-rest problems shares one X
+    (replicated along ``task`` — no spec names the axis for it) while
+    the per-class (α, w) stacks shard their leading (K,) axis over it.
+    Use when K is large enough that a replicated (K, n)+(K, d) state
+    stack stops fitting per-device; for small K the plain meshes with
+    the vmapped task axis are strictly cheaper (no extra collectives).
+    ``data`` defaults to all remaining devices; ``model > 1`` appends
+    the feature-sharding axis like ``solver_mesh_2d``."""
+    n = n_devices or len(jax.devices())
+    if data is None:
+        data = max(n // (task * model), 1)
+    if model > 1:
+        return jax.make_mesh((task, data, model),
+                             ("task", "data", "model"))
+    return jax.make_mesh((task, data), ("task", "data"))
+
+
+def task_axis_policy(n_tasks: int, *, mesh, pipeline: bool = True) -> int:
+    """Admission rule for the multi-task (one-vs-rest) task axis
+    (DESIGN.md §16) — which knob combinations admit a leading (K,) task
+    axis is *distribution* policy, so it lives here next to
+    ``solver_mesh_tasks``.
+
+    The vmapped task axis (no ``task`` mesh axis) composes with every
+    existing knob — pod merges, shrinking, adaptive delay, overlap,
+    segmented resume — because each task carries its own latches and
+    the shared epoch counter stays an unbatched scalar.  Restrictions:
+
+      * ``pipeline=False`` — the host driver has no per-task carry; the
+        multi-task solve only exists as the single-dispatch epoch scan;
+      * a ``task`` mesh axis needs ``n_tasks`` divisible by its size
+        (the per-class state stack shards evenly, no padding classes);
+      * ``task`` + ``pod`` on one mesh is rejected: the cross-pod merge
+        scan assumes the pod axis is the outermost parallelism and the
+        per-pod row layout is task-uniform — shard K over pods instead
+        by running one multi-task solve per pod.
+
+    Returns the validated ``n_tasks``."""
+    K = int(n_tasks)
+    if K < 1:
+        raise ValueError(f"n_tasks must be >= 1, got {n_tasks}")
+    if not pipeline:
+        raise ValueError(
+            "a multi-task solve needs pipeline=True — the per-task "
+            "state (α/w stacks, latches, record buffers) lives in the "
+            "on-device epoch-scan carry; the host driver path has no "
+            "carry to put it in")
+    if "task" in mesh.axis_names:
+        t = mesh.shape["task"]
+        if K % t:
+            raise ValueError(
+                f"n_tasks={K} does not divide over the task mesh axis "
+                f"of size {t} — the per-class state stack must shard "
+                "evenly (no padding classes)")
+        if "pod" in mesh.axis_names:
+            raise ValueError(
+                "a 'task' mesh axis does not compose with a 'pod' axis "
+                "— run one multi-task solve per pod instead")
+    return K
+
+
 def pod_merge_policy(pod_delay_rounds: int, *, n_pods: int,
                      pipeline: bool = True, record: bool = True,
                      shrink_every: int = 0, adaptive: bool = False,
@@ -154,26 +218,35 @@ def lane_pad(d: int, lanes: int = 128) -> int:
 _lane_pad = lane_pad
 
 
-def dcd_kernel_vmem_bytes(n_loc: int, d: int, *, itemsize: int = 4) -> int:
+def dcd_kernel_vmem_bytes(n_loc: int, d: int, *, itemsize: int = 4,
+                          n_tasks: int = 1) -> int:
     """Resident working set of the fused indexed-block DCD round: the
     whole (n_loc, d̃) local shard plus w in/out (2·d̃), α in/out + q +
     the active-set mask (4·n_loc f32 — the mask operand is always bound,
     all-ones when shrinking is off) and the int32 index block (n_loc
-    upper bound)."""
+    upper bound).  ``n_tasks > 1`` (the multi-task axis, DESIGN.md §16)
+    multiplies the per-task operands — w in/out, α in/out, and the
+    mask/label word — while X, q, and the index block stay shared across
+    the K one-vs-rest problems; ``n_tasks=1`` is today's binary formula
+    exactly."""
     dp = lane_pad(d)
-    return itemsize * (n_loc * dp + 2 * dp + 4 * n_loc) + 4 * n_loc
+    K = max(int(n_tasks), 1)
+    return (itemsize * (n_loc * dp + n_loc + K * (2 * dp + 3 * n_loc))
+            + 4 * n_loc)
 
 
 def dcd_kernel_fits(n_loc: int, d: int, *, vmem_bytes: int = VMEM_BYTES,
-                    headroom: float = 0.9) -> bool:
+                    headroom: float = 0.9, n_tasks: int = 1) -> bool:
     """True when a device's row shard can stay VMEM-resident for the fused
     kernel; otherwise ``sharded_passcode_solve(use_kernel="auto")`` keeps
     the pure-jnp block update."""
-    return dcd_kernel_vmem_bytes(n_loc, d) <= headroom * vmem_bytes
+    return dcd_kernel_vmem_bytes(n_loc, d, n_tasks=n_tasks) <= (
+        headroom * vmem_bytes)
 
 
 def dcd_ell_kernel_vmem_bytes(n_loc: int, k_max: int, d: int, *,
-                              itemsize: int = 4) -> int:
+                              itemsize: int = 4,
+                              n_tasks: int = 1) -> int:
     """Resident working set of the fused *ELL* indexed-block round
     (DESIGN.md §9): the (n_loc, k̃) column-id and value shards
     (2·n_loc·k̃ words, k̃ = k_max lane-padded), the padded primal in/out
@@ -183,27 +256,34 @@ def dcd_ell_kernel_vmem_bytes(n_loc: int, k_max: int, d: int, *,
 
     Independent of d except through the 2·d₁ primal term — this is what
     admits the large-d problems (rcv1 d≈47k, news20 d≈1.3M at paper
-    scale) whose dense n_loc·d̃ shard ``dcd_kernel_fits`` rejects."""
+    scale) whose dense n_loc·d̃ shard ``dcd_kernel_fits`` rejects.
+
+    ``n_tasks > 1`` multiplies the per-task operands (primal in/out,
+    α in/out, mask/label word) like ``dcd_kernel_vmem_bytes``; the ELL
+    shard, q, and the index block stay shared."""
     kp = lane_pad(k_max)
     d1 = lane_pad(d + 1)
-    return itemsize * (2 * n_loc * kp + 2 * d1 + 4 * n_loc) + 4 * n_loc
+    K = max(int(n_tasks), 1)
+    return (itemsize * (2 * n_loc * kp + n_loc + K * (2 * d1 + 3 * n_loc))
+            + 4 * n_loc)
 
 
 def dcd_ell_kernel_fits(n_loc: int, k_max: int, d: int, *,
                         vmem_bytes: int = VMEM_BYTES,
-                        headroom: float = 0.9) -> bool:
+                        headroom: float = 0.9, n_tasks: int = 1) -> bool:
     """True when a device's ELL row shard can stay VMEM-resident for the
     fused sparse kernel; otherwise
     ``sharded_passcode_solve(use_kernel="auto")`` keeps the unfused jnp
     ELL block update."""
-    return dcd_ell_kernel_vmem_bytes(n_loc, k_max, d) <= (
+    return dcd_ell_kernel_vmem_bytes(n_loc, k_max, d, n_tasks=n_tasks) <= (
         headroom * vmem_bytes
     )
 
 
 def dcd_feature_kernel_vmem_bytes(n_loc: int, k_loc: int, d_loc: int, *,
                                   block_size: int = 256,
-                                  itemsize: int = 4) -> int:
+                                  itemsize: int = 4,
+                                  n_tasks: int = 1) -> int:
     """Resident working set of the fused *2D feature-sharded* block round
     (DESIGN.md §10): the (n_loc, k̃_loc) local-column-id and value slices
     (2·n_loc·k̃_loc words, k̃_loc lane-padded), the device's own primal
@@ -215,24 +295,32 @@ def dcd_feature_kernel_vmem_bytes(n_loc: int, k_loc: int, d_loc: int, *,
 
     The only d-dependent term is 2·d₁_loc ≈ 2·d/m: at m = 16 this admits
     webspam/kddb-scale d ≈ 16.6M, where the dense policy's n_loc·d̃ and
-    the 1D ELL policy's 2·lane_pad(d+1) primal both exceed VMEM."""
+    the 1D ELL policy's 2·lane_pad(d+1) primal both exceed VMEM.
+
+    ``n_tasks > 1`` multiplies the per-task operands — primal-shard
+    in/out, α in/out, mask/label word, and the per-block Gram/base
+    exchange buffers (each task's split round carries its own) — while
+    the ELL slice, q, and the index block stay shared."""
     kp = lane_pad(k_loc)
     d1 = lane_pad(d_loc + 1)
     b = block_size
-    return (itemsize * (2 * n_loc * kp + 2 * d1 + 4 * n_loc + b * b + 3 * b)
+    K = max(int(n_tasks), 1)
+    return (itemsize * (2 * n_loc * kp + n_loc
+                        + K * (2 * d1 + 3 * n_loc + b * b + 3 * b))
             + 4 * n_loc + 4 * b)
 
 
 def dcd_feature_kernel_fits(n_loc: int, k_loc: int, d_loc: int, *,
                             block_size: int = 256,
                             vmem_bytes: int = VMEM_BYTES,
-                            headroom: float = 0.9) -> bool:
+                            headroom: float = 0.9,
+                            n_tasks: int = 1) -> bool:
     """True when a device's (row-block × feature-shard) slice can stay
     VMEM-resident for the fused 2D kernel; otherwise
     ``sharded_passcode_solve(use_kernel="auto")`` keeps the unfused jnp
     feature-sharded block update."""
     return dcd_feature_kernel_vmem_bytes(
-        n_loc, k_loc, d_loc, block_size=block_size
+        n_loc, k_loc, d_loc, block_size=block_size, n_tasks=n_tasks
     ) <= headroom * vmem_bytes
 
 

@@ -25,7 +25,12 @@ Two addressing modes share the δ machinery:
     is how ``repro.core.sharded`` fuses its per-device round
     (``make_sharded_epoch(use_kernel=True)``).  The VMEM feasibility
     policy for the resident shard lives in ``repro.dist.mesh``
-    (``dcd_kernel_fits`` / ``dcd_block_rows``).
+    (``dcd_kernel_fits`` / ``dcd_block_rows``).  Indexed mode also takes
+    an optional ``y`` (±1 per row) folded *on read* — wx ← y_i·(w·x_i),
+    scatter ← (δ·y_i)·x_i — so K one-vs-rest tasks can share one
+    unfolded X (DESIGN.md §16); ``y=None`` feeds an all-ones operand,
+    which is bit-identical to the pre-folded path (±1 multiplies only
+    flip the sign bit).
 
 The one-variable subproblem is solved by the *same* ``loss.delta`` the
 jnp solvers use (``repro.core.duals``: hinge and squared-hinge closed
@@ -98,6 +103,7 @@ def _dcd_indexed_kernel(
     alpha_ref,  # (n, 1)  duals — full vector (seeds the carried output)
     q_ref,  # (n, 1)  row squared norms
     act_ref,  # (n, 1)  active-set mask (f32 0/1; all-ones = no shrinking)
+    y_ref,  # (n, 1)  row labels (±1; all-ones = pre-folded rows)
     w_ref,  # (1, d)  primal (seeds the carried output)
     alpha_out,  # (n, 1)  carried across grid steps
     w_out,  # (1, d)  carried across grid steps
@@ -113,7 +119,8 @@ def _dcd_indexed_kernel(
     def body(t, w):
         i = idx_ref[t, 0]
         x = x_ref[pl.ds(i, 1), :].astype(jnp.float32)  # gather one row
-        wx = jnp.sum(w * x)
+        yi = y_ref[pl.ds(i, 1), :]  # (1, 1) ±1 — folds the row on read
+        wx = yi[0, 0] * jnp.sum(w * x)
         a = alpha_out[pl.ds(i, 1), :]  # read the running α, not the seed
         q = q_ref[pl.ds(i, 1), :]
         # frozen (shrunk) coordinates take the exact zero-delta update
@@ -121,7 +128,7 @@ def _dcd_indexed_kernel(
             act_ref[pl.ds(i, 1), :] > 0.0, loss.delta(a, wx, q), 0.0
         )
         alpha_out[pl.ds(i, 1), :] = a + delta  # scatter back
-        return w + delta * x
+        return w + (delta * yi) * x
 
     w = jax.lax.fori_loop(0, block_rows, body, w_out[...].astype(jnp.float32))
     w_out[...] = w
@@ -140,12 +147,15 @@ def dcd_epoch_pallas_call(
     block_rows: int = 256,
     interpret: bool = False,
     active=None,  # (n,) 0/1 active-set mask (indexed mode only)
+    y=None,  # (n,) ±1 labels folded on read (indexed mode only)
 ):
     n, d = X.shape
     if loss is None:
         loss = _legacy_loss(c, sq_hinge)
     assert active is None or idx is not None, (
         "active-set masking needs the indexed mode")
+    assert y is None or idx is not None, (
+        "in-kernel label folding needs the indexed mode")
     alpha2 = alpha.reshape(n, 1).astype(jnp.float32)
     q2 = sq_norms.reshape(n, 1).astype(jnp.float32)
     w2 = w.reshape(1, d).astype(jnp.float32)
@@ -185,6 +195,10 @@ def dcd_epoch_pallas_call(
         act2 = jnp.ones((n, 1), jnp.float32)
     else:
         act2 = active.reshape(n, 1).astype(jnp.float32)
+    if y is None:
+        y2 = jnp.ones((n, 1), jnp.float32)
+    else:
+        y2 = y.reshape(n, 1).astype(jnp.float32)
     kernel = functools.partial(
         _dcd_indexed_kernel, loss=loss, block_rows=block_rows
     )
@@ -197,6 +211,7 @@ def dcd_epoch_pallas_call(
             pl.BlockSpec((n, 1), lambda i: (0, 0)),  # alpha seed
             pl.BlockSpec((n, 1), lambda i: (0, 0)),  # sq norms
             pl.BlockSpec((n, 1), lambda i: (0, 0)),  # active mask
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),  # row labels
             pl.BlockSpec((1, d), lambda i: (0, 0)),  # w seed
         ],
         out_specs=[
@@ -208,5 +223,5 @@ def dcd_epoch_pallas_call(
             jax.ShapeDtypeStruct((1, d), jnp.float32),
         ],
         interpret=interpret,
-    )(idx2, X, alpha2, q2, act2, w2)
+    )(idx2, X, alpha2, q2, act2, y2, w2)
     return alpha_out.reshape(n), w_out.reshape(d)

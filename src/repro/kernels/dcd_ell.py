@@ -55,6 +55,7 @@ def _dcd_ell_indexed_kernel(
     alpha_ref,  # (n, 1)  duals — seeds the carried output
     q_ref,  # (n, 1)  row squared norms
     act_ref,  # (n, 1)  active-set mask (f32 0/1; all-ones = no shrinking)
+    y_ref,  # (n, 1)  row labels (±1; all-ones = pre-folded rows)
     w_ref,  # (1, d1) padded primal (dummy slot at d) — seeds the carry
     alpha_out,  # (n, 1)  carried across grid steps
     w_out,  # (1, d1) carried across grid steps
@@ -71,7 +72,8 @@ def _dcd_ell_indexed_kernel(
         i = idx_ref[t, 0]
         cols = col_ref[pl.ds(i, 1), :][0]  # (k,) int32 row gather
         vals = val_ref[pl.ds(i, 1), :].astype(jnp.float32)[0]  # (k,)
-        wx = jnp.sum(jnp.take(w[0], cols) * vals)  # O(k) lane gather
+        yi = y_ref[pl.ds(i, 1), :][0, 0]  # ±1 — folds the row on read
+        wx = yi * jnp.sum(jnp.take(w[0], cols) * vals)  # O(k) gather
         a = alpha_out[pl.ds(i, 1), :]  # running α, not the seed
         q = q_ref[pl.ds(i, 1), :]
         # frozen (shrunk) coordinates take the exact zero-delta update —
@@ -81,7 +83,7 @@ def _dcd_ell_indexed_kernel(
         )
         alpha_out[pl.ds(i, 1), :] = a + delta
         # rank-1 sparse axpy; padding ids scatter δ·0 into the dummy slot
-        return w.at[0, cols].add(delta[0, 0] * vals)
+        return w.at[0, cols].add((delta[0, 0] * yi) * vals)
 
     w = jax.lax.fori_loop(0, block_rows, body, w_out[...].astype(jnp.float32))
     w_out[...] = w
@@ -99,6 +101,7 @@ def dcd_ell_epoch_pallas_call(
     block_rows: int = 256,
     interpret: bool = False,
     active=None,  # (n,) 0/1 active-set mask; None = all active
+    y=None,  # (n,) ±1 labels folded on read; None = pre-folded rows
 ):
     n, k = cols.shape
     d1 = w_pad.shape[0]
@@ -112,6 +115,10 @@ def dcd_ell_epoch_pallas_call(
         act2 = jnp.ones((n, 1), jnp.float32)
     else:
         act2 = active.reshape(n, 1).astype(jnp.float32)
+    if y is None:
+        y2 = jnp.ones((n, 1), jnp.float32)
+    else:
+        y2 = y.reshape(n, 1).astype(jnp.float32)
     w2 = w_pad.reshape(1, d1).astype(jnp.float32)
     kernel = functools.partial(
         _dcd_ell_indexed_kernel, loss=loss, block_rows=block_rows
@@ -126,6 +133,7 @@ def dcd_ell_epoch_pallas_call(
             pl.BlockSpec((n, 1), lambda i: (0, 0)),  # alpha seed
             pl.BlockSpec((n, 1), lambda i: (0, 0)),  # sq norms
             pl.BlockSpec((n, 1), lambda i: (0, 0)),  # active mask
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),  # row labels
             pl.BlockSpec((1, d1), lambda i: (0, 0)),  # w seed
         ],
         out_specs=[
@@ -137,5 +145,5 @@ def dcd_ell_epoch_pallas_call(
             jax.ShapeDtypeStruct((1, d1), jnp.float32),
         ],
         interpret=interpret,
-    )(idx2, cols, vals, alpha2, q2, act2, w2)
+    )(idx2, cols, vals, alpha2, q2, act2, y2, w2)
     return alpha_out.reshape(n), w_out.reshape(d1)

@@ -110,9 +110,10 @@ def _update_kernel(
     alpha_ref,  # (n, 1)  duals — seeds the output
     q_ref,  # (n, 1)  FULL row squared norms (summed over shards)
     act_ref,  # (n, 1)  active-set mask (f32 0/1; all-ones = no shrinking)
+    y_ref,  # (n, 1)  row labels (±1; all-ones = pre-folded rows)
     w_ref,  # (1, d1) this shard's padded primal slice — seeds the output
-    base_ref,  # (B, 1)  psummed w₀ᵀx_t
-    gram_ref,  # (B, B)  psummed Gram
+    base_ref,  # (B, 1)  psummed w₀ᵀx_t (UNfolded — y applied below)
+    gram_ref,  # (B, B)  psummed Gram (unfolded x_s·x_t)
     alpha_out,  # (n, 1)
     w_out,  # (1, d1)
     *,
@@ -124,12 +125,16 @@ def _update_kernel(
     gram = gram_ref[...]
 
     def body(t, carry):
-        w, deltas = carry  # w: (1, d1), deltas: (B,) δ history (0 ahead)
+        # deltas is the FOLDED δ̃_s = δ_s·y_s history (0 ahead): with
+        # x̃ = y·x, wᵀx̃_t = y_t·(w₀ᵀx_t + Σ_{s<t} δ_s y_s · x_sᵀx_t),
+        # so base and Gram stay unfolded and y enters only here
+        w, deltas = carry  # w: (1, d1), deltas: (B,) δ̃ history
         i = idx_ref[t, 0]
         cols = col_ref[pl.ds(i, 1), :][0]
         vals = val_ref[pl.ds(i, 1), :].astype(jnp.float32)[0]
+        yi = y_ref[pl.ds(i, 1), :][0, 0]
         gcol = jax.lax.dynamic_slice_in_dim(gram, t, 1, axis=1)[:, 0]
-        wx = base[t, 0] + jnp.sum(deltas * gcol)
+        wx = yi * (base[t, 0] + jnp.sum(deltas * gcol))
         a = alpha_out[pl.ds(i, 1), :]  # running α, not the seed
         q = q_ref[pl.ds(i, 1), :]
         # frozen (shrunk) coordinates take the exact zero-delta update;
@@ -139,8 +144,9 @@ def _update_kernel(
             act_ref[pl.ds(i, 1), :] > 0.0, loss.delta(a, wx, q), 0.0
         )
         alpha_out[pl.ds(i, 1), :] = a + delta
-        w = w.at[0, cols].add(delta[0, 0] * vals)
-        return w, deltas.at[t].set(delta[0, 0])
+        dtil = delta[0, 0] * yi
+        w = w.at[0, cols].add(dtil * vals)
+        return w, deltas.at[t].set(dtil)
 
     w, _ = jax.lax.fori_loop(
         0, block_rows, body,
@@ -199,6 +205,7 @@ def dcd_feature_update_pallas_call(
     loss,
     interpret: bool = False,
     active=None,  # (n,) 0/1 active-set mask; None = all active
+    y=None,  # (n,) ±1 labels folded on read; None = pre-folded rows
 ):
     """B sequential δ-recursion updates; scatters only this shard."""
     n, k = cols.shape
@@ -208,6 +215,10 @@ def dcd_feature_update_pallas_call(
         act2 = jnp.ones((n, 1), jnp.float32)
     else:
         act2 = active.reshape(n, 1).astype(jnp.float32)
+    if y is None:
+        y2 = jnp.ones((n, 1), jnp.float32)
+    else:
+        y2 = y.reshape(n, 1).astype(jnp.float32)
     kernel = functools.partial(_update_kernel, loss=loss, block_rows=b)
     alpha_out, w_out = pl.pallas_call(
         kernel,
@@ -216,6 +227,7 @@ def dcd_feature_update_pallas_call(
             pl.BlockSpec((b, 1), lambda i: (0, 0)),
             pl.BlockSpec((n, k), lambda i: (0, 0)),
             pl.BlockSpec((n, k), lambda i: (0, 0)),
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
             pl.BlockSpec((n, 1), lambda i: (0, 0)),
             pl.BlockSpec((n, 1), lambda i: (0, 0)),
             pl.BlockSpec((n, 1), lambda i: (0, 0)),
@@ -234,7 +246,7 @@ def dcd_feature_update_pallas_call(
         interpret=interpret,
     )(idx.reshape(b, 1).astype(jnp.int32), cols, vals,
       alpha.reshape(n, 1).astype(jnp.float32),
-      sq_norms.reshape(n, 1).astype(jnp.float32), act2,
+      sq_norms.reshape(n, 1).astype(jnp.float32), act2, y2,
       w_loc.reshape(1, d1).astype(jnp.float32),
       base.reshape(b, 1).astype(jnp.float32), gram)
     return alpha_out.reshape(n), w_out.reshape(d1)

@@ -116,7 +116,8 @@ def dcd_epoch_pallas(
 
 
 def dcd_block_update_pallas(X, sq_norms, alpha, w, idx, *, loss,
-                            interpret: bool = False, active=None):
+                            interpret: bool = False, active=None,
+                            y=None):
     """One indexed block of B sequential DCD updates — the fused
     equivalent of ``repro.core.sharded._local_block_update``.
 
@@ -124,19 +125,21 @@ def dcd_block_update_pallas(X, sq_norms, alpha, w, idx, *, loss,
     this device's (n_loc, d) shard with d already lane-padded to 128 by
     the caller, ``idx`` the (B,) local row ids of the block.  ``active``
     (optional (n_loc,) 0/1 mask) freezes shrunk coordinates to
-    zero-delta updates.  Returns (updated α shard, local Δw) exactly
-    like the pure-jnp version.
+    zero-delta updates; ``y`` (optional (n_loc,) ±1 labels) folds rows
+    on read so multi-task solves can share an unfolded X.  Returns
+    (updated α shard, local Δw) exactly like the pure-jnp version.
     """
     a_new, w_new = dcd_epoch_pallas_call(
         X, alpha, w, sq_norms, loss=loss, idx=idx,
         block_rows=idx.shape[0], interpret=interpret, active=active,
+        y=y,
     )
     return a_new, w_new - w
 
 
 def dcd_ell_block_update_pallas(cols, vals, sq_norms, alpha, w_pad, idx, *,
                                 loss, interpret: bool = False,
-                                active=None):
+                                active=None, y=None):
     """One indexed block of B sequential DCD updates on an ELL shard —
     the fused equivalent of ``repro.core.sharded._local_block_update_ell``.
 
@@ -145,13 +148,15 @@ def dcd_ell_block_update_pallas(cols, vals, sq_norms, alpha, w_pad, idx, *,
     already lane-padded to 128 by the caller, ``w_pad`` the (d₁,) padded
     primal (dummy slot at index d, d₁ a multiple of 128), ``idx`` the
     (B,) local row ids of the block.  ``active`` (optional (n_loc,) 0/1
-    mask) freezes shrunk coordinates to zero-delta updates.  Returns
+    mask) freezes shrunk coordinates to zero-delta updates; ``y``
+    (optional (n_loc,) ±1 labels) folds rows on read.  Returns
     (updated α shard, local Δw_pad) exactly like the dense block
     engine — the padding slots of Δw_pad are identically zero.
     """
     a_new, w_new = dcd_ell_epoch_pallas_call(
         cols, vals, alpha, w_pad, sq_norms, loss=loss, idx=idx,
         block_rows=idx.shape[0], interpret=interpret, active=active,
+        y=y,
     )
     return a_new, w_new - w_pad
 
@@ -198,23 +203,26 @@ def dcd_feature_base_correction(cols, vals, dvec, idx, *,
 
 def dcd_feature_update_pallas(cols, vals, sq_norms, alpha, w_loc, idx, base,
                               gram, *, loss, interpret: bool = False,
-                              active=None):
+                              active=None, y=None):
     """Phase 2: the B-step δ recursion against a *reduced* (base, Gram);
     no collectives.  ``active`` (optional (n_loc,) 0/1 mask) freezes
     shrunk coordinates to zero-delta updates — legal here because a
     zero δ contributes nothing through the Gram recursion or the
-    scatter, so the gram phase needs no mask.  Returns (updated α
-    shard, updated primal shard)."""
+    scatter, so the gram phase needs no mask.  ``y`` (optional (n_loc,)
+    ±1 labels) folds rows on read: base and Gram stay unfolded (they
+    are y-free, so the gram phase and ``dcd_feature_base_correction``
+    need no labels) and the kernel's δ-history carries δ̃ = δ·y.
+    Returns (updated α shard, updated primal shard)."""
     return dcd_feature_update_pallas_call(
         cols, vals, alpha, sq_norms, w_loc, idx, base, gram, loss=loss,
-        interpret=interpret, active=active,
+        interpret=interpret, active=active, y=y,
     )
 
 
 def dcd_feature_block_update_pallas(cols, vals, sq_norms, alpha, w_loc, idx,
                                     *, loss, axis: str = "model",
                                     interpret: bool = False,
-                                    active=None):
+                                    active=None, y=None):
     """One indexed block of B sequential DCD updates on a 2D
     (data × model) feature shard — the fused equivalent of
     ``repro.core.sharded._local_block_update_feature``; the eager
@@ -235,6 +243,6 @@ def dcd_feature_block_update_pallas(cols, vals, sq_norms, alpha, w_loc, idx,
     )
     a_new, w_new = dcd_feature_update_pallas(
         cols, vals, sq_norms, alpha, w_loc, idx, base, gram, loss=loss,
-        interpret=interpret, active=active,
+        interpret=interpret, active=active, y=y,
     )
     return a_new, w_new - w_loc

@@ -5,8 +5,9 @@ from repro.models.transformer import (
     forward_train,
     init_cache,
     init_params,
+    lm_features,
     prefill,
 )
 
 __all__ = ["init_params", "forward_train", "init_cache", "prefill",
-           "decode_step"]
+           "decode_step", "lm_features"]

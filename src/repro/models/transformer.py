@@ -321,12 +321,16 @@ def _positions(batch, B, S):
 # ====================================================== forward_train ====
 
 
-def forward_train(cfg: ModelConfig, params, batch, rules=NO_RULES,
-                  remat: bool = True, moe_no_drop: bool = False):
-    """Teacher-forced logits.  Returns (logits (B,S,Vp), aux_loss).
-    ``moe_no_drop`` disables MoE token dropping (parity tests)."""
+def _backbone(cfg: ModelConfig, params, batch, rules=NO_RULES,
+              remat: bool = True, moe_no_drop: bool = False):
+    """Run the decoder stack up to (not including) the final norm.
+    Returns (hidden (B,S,D), aux_loss) — the shared trunk of
+    ``forward_train`` (which adds the LM head) and ``lm_features``
+    (which pools).  Raises for encdec: its decoder needs encoder
+    context, so there is no single frozen-backbone feature map."""
     if cfg.family == "encdec":
-        return _encdec_forward(cfg, params, batch, rules, remat)
+        raise ValueError(
+            "encdec has no decoder-only backbone; use forward_train")
     x = _embed_in(cfg, params, batch, rules)
     B, S = x.shape[:2]
     positions = _positions(batch, B, S)
@@ -383,7 +387,30 @@ def forward_train(cfg: ModelConfig, params, batch, rules=NO_RULES,
         aux = jnp.sum(auxs)
     else:
         raise ValueError(cfg.family)
+    return x, aux
+
+
+def forward_train(cfg: ModelConfig, params, batch, rules=NO_RULES,
+                  remat: bool = True, moe_no_drop: bool = False):
+    """Teacher-forced logits.  Returns (logits (B,S,Vp), aux_loss).
+    ``moe_no_drop`` disables MoE token dropping (parity tests)."""
+    if cfg.family == "encdec":
+        return _encdec_forward(cfg, params, batch, rules, remat)
+    x, aux = _backbone(cfg, params, batch, rules, remat=remat,
+                       moe_no_drop=moe_no_drop)
     return _logits_out(cfg, params, x, rules), aux
+
+
+def lm_features(cfg: ModelConfig, params, tokens, rules=NO_RULES):
+    """Frozen-backbone sequence features: mean-pooled final-norm hidden
+    states, (B, D) for (B, S) tokens — the public feature map the
+    linear-probe pipeline (DESIGN.md §4) trains PASSCoDe heads on.
+    Runs every decoder-only family; raises for encdec (no tokens-only
+    backbone)."""
+    tokens = jnp.asarray(tokens)
+    x, _ = _backbone(cfg, params, {"tokens": tokens}, rules, remat=False)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return jnp.mean(x, axis=1)
 
 
 def _encoder(cfg, params, enc_embeds, rules, remat):

@@ -41,6 +41,7 @@ import numpy as np
 from repro.core.sharded import (
     ShardedResult,
     SolverSetup,
+    _validate_multitask_labels,
     _validate_solver_inputs,
     build_pipeline,
     device_put_state,
@@ -116,15 +117,22 @@ def _restore(setup: SolverSetup, ckpt_dir: str, step: int, total: int,
     state_raw = {k: v for k, v in raw.items()
                  if not k.startswith("meta_") and not k.endswith("_canon")}
     meta_ok = all(
-        int(raw.get(f"meta_{name}", -1)) == val
-        for name, val in (("pods", setup.pods), ("pdata", setup.p),
-                          ("mmodel", setup.m),
-                          ("block_size", setup.block_size),
-                          ("total_epochs", total),
-                          ("seed", setup.seed)))
+        int(raw.get(f"meta_{name}", dflt)) == val
+        for name, val, dflt in (
+            ("pods", setup.pods, -1), ("pdata", setup.p, -1),
+            ("mmodel", setup.m, -1),
+            ("block_size", setup.block_size, -1),
+            ("total_epochs", total, -1), ("seed", setup.seed, -1),
+            # pre-task-axis checkpoints carry no n_tasks meta: default 0
+            # keeps their binary bit-resume intact
+            ("n_tasks", setup.n_tasks, 0)))
+    a_shape = ((setup.n_tasks, setup.n_pad) if setup.n_tasks
+               else (setup.n_pad,))
+    w_shape = ((setup.n_tasks, setup.w_len) if setup.n_tasks
+               else (setup.w_len,))
     if (meta_ok and set(state_raw) == expected
-            and state_raw["alpha"].shape == (setup.n_pad,)
-            and state_raw["w"].shape == (setup.w_len,)):
+            and state_raw["alpha"].shape == a_shape
+            and state_raw["w"].shape == w_shape):
         st = device_put_state(
             setup, {k: jnp.asarray(v) for k, v in state_raw.items()})
         return st, step, rung
@@ -191,9 +199,17 @@ def solve_segmented(
     the deterministic chaos harness (``repro.resilience.faults``)."""
     if not record:
         watchdog = False  # the watchdog keys on the record schedule
-    X_host = _validate_solver_inputs(X_host, y, loss)
+    y_host = None if y is None else np.asarray(jax.device_get(y))
+    if y_host is not None and y_host.ndim == 2:
+        # multi-task (K, n) one-vs-rest labels: validated, not folded —
+        # the segmented pipeline threads them to the engines per segment
+        Y_host = _validate_multitask_labels(X_host, y_host)
+        X_host = _validate_solver_inputs(X_host, None, loss)
+    else:
+        Y_host = None
+        X_host = _validate_solver_inputs(X_host, y, loss)
     setup = prepare_solver(
-        X_host, loss, mesh=mesh, mesh_axes=mesh_axes,
+        X_host, loss, mesh=mesh, mesh_axes=mesh_axes, y=Y_host,
         block_size=block_size, delay_rounds=delay_rounds,
         pod_delay_rounds=pod_delay_rounds, seed=seed, record=record,
         use_kernel=use_kernel, gap_every=gap_every, pipeline=True,
@@ -275,8 +291,10 @@ def solve_segmented(
                 pipes[cache_key] = fn
             st_in = (drain_state(st, _target_keys(setup, knobs, watchdog))
                      if eff_rung > 0 else st)
-            st_out = fn(X_use, setup.sq_norms, st_in)
-            health = (int(jax.device_get(st_out["health"]))
+            st_out = fn(X_use, setup.sq_norms, st_in, setup.Y)
+            # multi-task: any tripped class trips the segment (health is
+            # a (K,) vector there, a scalar on the binary path)
+            health = (int(np.max(jax.device_get(st_out["health"])))
                       if watchdog else 0)
             if health == 0:
                 st = st_out
@@ -317,13 +335,15 @@ def solve_segmented(
             flat["meta_block_size"] = np.int64(setup.block_size)
             flat["meta_total_epochs"] = np.int64(total)
             flat["meta_seed"] = np.int64(setup.seed)
+            flat["meta_n_tasks"] = np.int64(setup.n_tasks)
             flat["meta_epoch"] = np.int64(e)
             flat["meta_rung"] = np.int64(rung)
             save_checkpoint(ckpt_dir, e, flat)
             gc_checkpoints(ckpt_dir, keep=keep)
 
     final = finalize_state(setup, st, epochs=total)
-    health_final = int(jax.device_get(st["health"])) if watchdog else 0
+    health_final = (int(np.max(jax.device_get(st["health"])))
+                    if watchdog else 0)
     return ResilientResult(result=final, health=health_final,
                            attempts=tuple(attempts_log),
                            rollbacks=rollbacks, rung=rung,

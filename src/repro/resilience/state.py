@@ -100,7 +100,9 @@ def drain_state(state: dict, target_keys) -> dict:
     st = dict(state)
     w = st["w"] + st["dw"]
     if "pbuf" in st:
-        w = w + st["pbuf"].sum(0)
+        # the FIFO axis sits next to the primal ((K, fifo, d) on the
+        # multi-task layout, (fifo, d) binary), so sum over axis -2
+        w = w + st["pbuf"].sum(-2)
     st["w"] = w
     st["dw"] = jnp.zeros_like(st["dw"])
     if "dwo" in st:

@@ -59,12 +59,17 @@ from repro.serve.snapshot import ModelSnapshot, SnapshotStore
 
 
 def _score_fn(k_max: int):
-    """Jitted batched sparse dot: (d+1,) padded w against fixed-shape
-    (B, k_max) ELL rows.  One compile per engine (shapes never vary)."""
+    """Jitted batched sparse dot against fixed-shape (B, k_max) ELL
+    rows.  The padded primal is (d+1,) binary or (K, d+1) one-vs-rest;
+    both run as ONE dispatch returning a (K, B) margin matrix (K=1 for
+    binary).  One compile per (engine, K) pair — shapes never vary
+    within a published model family."""
 
     @jax.jit
     def score(w_pad, cols, vals):
-        return jnp.sum(w_pad[cols] * vals, axis=1)
+        w2 = w_pad if w_pad.ndim == 2 else w_pad[None]
+        # (K, B, k_max) gather contracted over the nonzero axis
+        return jnp.sum(w2[:, cols] * vals[None], axis=-1)
 
     return score
 
@@ -201,15 +206,24 @@ class ServeEngine:
                 k = req.cols.shape[0]
                 cols[i, :k] = req.cols
                 vals[i, :k] = req.vals
-            scores = np.asarray(
+            margins = np.asarray(
                 self._score(jnp.asarray(snap.w_pad), jnp.asarray(cols),
-                            jnp.asarray(vals)))
+                            jnp.asarray(vals)))  # (K, B); K=1 binary
+            multiclass = snap.w_pad.ndim == 2
+            labels = margins.argmax(axis=0)
             done = time.monotonic()
             lats = []
             for i, req in enumerate(live):
                 lat = done - req.enqueued
-                req.ticket.resolve(ScoreOutcome(
-                    req.rid, float(scores[i]), snap.version, lat))
+                if multiclass:
+                    out = ScoreOutcome(
+                        req.rid, float(margins[labels[i], i]),
+                        snap.version, lat, int(labels[i]),
+                        tuple(float(m) for m in margins[:, i]))
+                else:
+                    out = ScoreOutcome(
+                        req.rid, float(margins[0, i]), snap.version, lat)
+                req.ticket.resolve(out)
                 lats.append(lat)
             self.metrics.record_batch(lats, self._rung)
         finally:

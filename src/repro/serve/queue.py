@@ -24,12 +24,20 @@ import numpy as np
 
 
 class ScoreOutcome(NamedTuple):
-    """Successful terminal outcome of one request."""
+    """Successful terminal outcome of one request.
+
+    Binary models fill ``score`` only.  K-class snapshots additionally
+    set ``label`` (argmax head) and ``margins`` (all K per-head scores);
+    ``score`` is then the winning head's margin.  ``label`` is -1 for
+    binary outcomes.
+    """
 
     rid: int
     score: float
     version: int          # snapshot version that produced the score
     latency_s: float
+    label: int = -1
+    margins: tuple = ()
 
 
 class RequestShed(NamedTuple):

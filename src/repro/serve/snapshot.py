@@ -22,19 +22,36 @@ import numpy as np
 
 class ModelSnapshot(NamedTuple):
     """One published model version (host arrays — the engine moves
-    ``w_pad`` on device once per jitted call)."""
+    ``w_pad`` on device once per jitted call).
 
-    w_pad: np.ndarray          # (d + 1,) float32, dummy slot at d
+    A binary model carries a (d + 1,) padded primal; a K-class
+    one-vs-rest model carries the (K, d + 1) head stack with the same
+    dummy slot at column d.  ``n_classes`` is 0 for binary.
+    """
+
+    w_pad: np.ndarray          # (d + 1,) or (K, d + 1) float32
     version: int
     d: int
     alpha: Optional[np.ndarray] = None   # carried duals (warm start)
     meta: Optional[dict] = None
 
+    @property
+    def n_classes(self) -> int:
+        return int(self.w_pad.shape[0]) if self.w_pad.ndim == 2 else 0
+
 
 def make_snapshot(w, version: int, *, alpha=None,
                   meta: Optional[dict] = None) -> ModelSnapshot:
-    """Build a snapshot from an unpadded (d,) primal."""
-    w = np.asarray(w, np.float32).reshape(-1)
+    """Build a snapshot from an unpadded primal — (d,) binary, or a
+    (K, d) one-vs-rest head stack."""
+    w = np.asarray(w, np.float32)
+    if w.ndim == 2:
+        k, d = int(w.shape[0]), int(w.shape[1])
+        w_pad = np.zeros((k, d + 1), np.float32)
+        w_pad[:, :d] = w
+        a = None if alpha is None else np.asarray(alpha, np.float32)
+        return ModelSnapshot(w_pad, int(version), d, a, meta)
+    w = w.reshape(-1)
     d = int(w.shape[0])
     w_pad = np.zeros((d + 1,), np.float32)
     w_pad[:d] = w

@@ -45,6 +45,13 @@ def _booleans():
     return _Strategy(lambda rng: rng.random() < 0.5)
 
 
+def _lists(elements, *, min_size=0, max_size=10):
+    return _Strategy(lambda rng: [
+        elements.example(rng)
+        for _ in range(rng.randint(min_size, max_size))
+    ])
+
+
 def _composite(fn):
     def build(*args, **kwargs):
         def draw_fn(rng):
@@ -61,6 +68,7 @@ strategies.integers = _integers
 strategies.sampled_from = _sampled_from
 strategies.booleans = _booleans
 strategies.composite = _composite
+strategies.lists = _lists
 
 
 def settings(**kwargs):
